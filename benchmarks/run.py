@@ -1,0 +1,200 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  `us_per_call` is the wall
+time of running the suite through the calibrated engine model (the
+measurement machinery itself); `derived` carries the headline quantity the
+paper reports for that artifact.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    dt = (time.perf_counter() - t0) * 1e6
+    return out, dt
+
+
+def bench_fig4_refresh():
+    """Fig. 4: refresh spikes + estimated refresh interval."""
+    from repro.core import DDR4, HBM, ShuhaiCampaign
+    rows = []
+    for spec in (HBM, DDR4):
+        camp = ShuhaiCampaign(spec)
+        res, dt = _timed(camp.suite_refresh)
+        rows.append((f"fig4_refresh_{spec.name}", dt,
+                     f"tREFI_est_ns={res['estimated_refresh_interval_ns']:.0f}"))
+    return rows
+
+
+def bench_table4_idle_latency():
+    """Table IV: page hit/closed/miss idle latency."""
+    from repro.core import DDR4, HBM, ShuhaiCampaign
+    rows = []
+    for spec in (HBM, DDR4):
+        camp = ShuhaiCampaign(spec)
+        res, dt = _timed(camp.suite_idle_latency)
+        derived = ";".join(f"{k}={v['ns']:.1f}ns" for k, v in res.items())
+        rows.append((f"table4_idle_latency_{spec.name}", dt, derived))
+    return rows
+
+
+def bench_fig6_address_mapping(quick=False):
+    """Fig. 6: throughput vs (policy, S, B)."""
+    from repro.core import DDR4, HBM, ShuhaiCampaign
+    rows = []
+    strides = (64, 1024, 8192) if quick else (64, 128, 256, 512, 1024,
+                                              2048, 4096, 8192, 16384, 32768)
+    for spec in (HBM, DDR4):
+        camp = ShuhaiCampaign(spec)
+        res, dt = _timed(lambda: camp.suite_address_mapping(
+            strides=strides, n=1024 if quick else 4096))
+        default = "RGBCG" if spec.name == "hbm" else "RCB"
+        per_s = res[default][spec.min_burst]
+        best_seq = per_s[min(per_s)]
+        rows.append((f"fig6_address_mapping_{spec.name}", dt,
+                     f"default_seq_gbps={best_seq:.2f};policies={len(res)}"))
+    return rows
+
+
+def bench_fig7_locality(quick=False):
+    """Fig. 7: W=8K vs W=256M locality effect."""
+    from repro.core import HBM, ShuhaiCampaign
+    camp = ShuhaiCampaign(HBM)
+    res, dt = _timed(lambda: camp.suite_locality(n=1024 if quick else 4096))
+    local = res[8 * 1024][32].get(4096)
+    base = res[256 * 1024 * 1024][32].get(4096)
+    return [("fig7_locality_hbm", dt,
+             f"w8k_s4k_gbps={local:.2f};w256m_s4k_gbps={base:.2f}")]
+
+
+def bench_table5_total_throughput():
+    """Table V: aggregate throughput, HBM vs DDR4."""
+    from repro.core import DDR4, HBM, ShuhaiCampaign
+    rows = []
+    for spec in (HBM, DDR4):
+        camp = ShuhaiCampaign(spec)
+        res, dt = _timed(camp.suite_total_throughput)
+        rows.append((f"table5_total_{spec.name}", dt,
+                     f"total_gbps={res['total_gbps']:.1f};"
+                     f"per_channel={res['per_channel_gbps']:.2f}"))
+    return rows
+
+
+def bench_table6_switch_latency():
+    """Table VI: AXI channel -> HBM channel 0 latency, switch on."""
+    from repro.core import HBM, ShuhaiCampaign
+    camp = ShuhaiCampaign(HBM)
+    res, dt = _timed(camp.suite_switch_latency)
+    spread = res[31]["hit"] - res[0]["hit"]
+    return [("table6_switch_latency", dt,
+             f"hit_ch0={res[0]['hit']}cyc;hit_ch31={res[31]['hit']}cyc;"
+             f"spread={spread}cyc")]
+
+
+def bench_fig8_switch_throughput():
+    """Fig. 8: throughput from one AXI channel per mini-switch."""
+    from repro.core import HBM, ShuhaiCampaign
+    camp = ShuhaiCampaign(HBM)
+    res, dt = _timed(lambda: camp.suite_switch_throughput(strides=(64, 1024)))
+    vals = [res[ch][64] for ch in res]
+    return [("fig8_switch_throughput", dt,
+             f"min_gbps={min(vals):.2f};max_gbps={max(vals):.2f}")]
+
+
+def bench_table3_resources():
+    """Table III analogue: engine 'resource' footprint on TPU = VMEM bytes
+    per RST engine tile + params-register bytes (vs FPGA LUTs/BRAM)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    def run():
+        tile = ops.tile_bytes(jnp.float32)                 # VMEM per burst
+        regs = 2 * 32                                       # 2x256-bit regs
+        return {"vmem_tile_bytes": tile, "register_bytes": regs}
+
+    res, dt = _timed(run)
+    return [("table3_resources_tpu_analogue", dt,
+             f"vmem_tile_bytes={res['vmem_tile_bytes']};"
+             f"register_bytes={res['register_bytes']}")]
+
+
+def bench_tpu_rst_kernel(quick=False):
+    """TPU-native RST engines (interpret mode): checksum-validated
+    bandwidth samples for sequential vs strided traversals."""
+    import jax.numpy as jnp
+
+    from repro.core.params import RSTParams
+    from repro.kernels import ops
+    n = 32 if quick else 128
+    rows = []
+    for name, (s_mult, w_tiles) in {
+        "seq": (1, 64), "strided4": (4, 64), "hammer": (64, 64),
+    }.items():
+        tile = ops.tile_bytes(jnp.float32)
+        p = RSTParams(n=n, b=tile, s=tile * s_mult, w=tile * w_tiles)
+        sample, dt = _timed(
+            lambda p=p: ops.measure_read_bandwidth(p, dtype=jnp.float32))
+        rows.append((f"tpu_rst_read_{name}", dt,
+                     f"bytes={sample.bytes_moved};interp_gbps="
+                     f"{sample.gbps:.4f}"))
+    return rows
+
+
+def bench_oracle_autotune():
+    """Framework integration: oracle efficiency + KV layout choice."""
+    from repro.core import AccessPattern, MemoryOracle, choose_layout
+    oracle = MemoryOracle()
+
+    def run():
+        eff = oracle.efficiency(AccessPattern(4096, 4096, 1 << 28))
+        lay = choose_layout(oracle, {"seq": 32768, "kv_heads": 8,
+                                     "head_dim": 128}, 2,
+                            iterate_dim="seq",
+                            fetch_dims=("kv_heads", "head_dim"))
+        return eff, lay
+    (eff, lay), dt = _timed(run)
+    return [("oracle_autotune", dt,
+             f"seq_eff={eff:.3f};kv_layout={'/'.join(lay.dims)}")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args, _ = ap.parse_known_args()
+    q = args.quick
+
+    print("name,us_per_call,derived")
+    suites = [
+        bench_fig4_refresh,
+        bench_table4_idle_latency,
+        lambda: bench_fig6_address_mapping(q),
+        lambda: bench_fig7_locality(q),
+        bench_table5_total_throughput,
+        bench_table6_switch_latency,
+        bench_fig8_switch_throughput,
+        bench_table3_resources,
+        lambda: bench_tpu_rst_kernel(q),
+        bench_oracle_autotune,
+    ]
+    failures = 0
+    for suite in suites:
+        try:
+            for name, us, derived in suite():
+                print(f"{name},{us:.0f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"ERROR,{suite},{type(e).__name__}: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

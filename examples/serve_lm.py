@@ -1,0 +1,58 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine (iteration-level batching, fixed shapes, slot reuse).
+
+Run: PYTHONPATH=src python examples/serve_lm.py --arch starcoder2-7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.common import init_params
+from repro.models.registry import build
+from repro.serving import ContinuousBatchingEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build(cfg)
+    if cfg.is_encdec:
+        raise SystemExit("decoder-only archs only in this example")
+    params = init_params(jax.random.key(0), model.param_specs(),
+                         dtype=jnp.float32)
+    eng = ContinuousBatchingEngine(model, params, slots=args.slots,
+                                   max_seq=128, eos_id=-1)
+    print(f"engine: {args.slots} slots, kv layout "
+          f"{'/'.join(eng.kv_layout.dims)} (oracle-chosen)")
+
+    reqs = []
+    for i in range(args.requests):
+        prompt = [(7 * i + j) % (cfg.vocab_size - 1) + 1
+                  for j in range(3 + i % 5)]
+        r = Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
+        reqs.append(r)
+        eng.submit(r)
+
+    t0 = time.perf_counter()
+    stats = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    print(f"completed {stats.completed}/{args.requests} requests in "
+          f"{stats.engine_steps} engine steps ({dt:.1f}s)")
+    print(f"tokens: prefill={stats.prefill_tokens} "
+          f"decode={stats.decode_tokens} "
+          f"({stats.decode_tokens / dt:.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

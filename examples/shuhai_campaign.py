@@ -1,0 +1,74 @@
+"""The paper-native end-to-end driver: run the FULL Shuhai benchmarking
+campaign (every suite from Sec. V and VI, both memory systems), exactly as
+the released tool does against a U280 — here against the calibrated
+simulator, with the same single-image/runtime-parameter workflow.
+
+Run: PYTHONPATH=src python examples/shuhai_campaign.py [--csv out.csv]
+"""
+import argparse
+import sys
+
+from repro.core import DDR4, HBM, ShuhaiCampaign
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    rows = [("system", "experiment", "key", "value")]
+
+    for spec in (HBM, DDR4):
+        camp = ShuhaiCampaign(spec)
+        name = spec.name
+
+        r = camp.suite_refresh()
+        rows.append((name, "fig4_refresh", "tREFI_ns",
+                     f"{r['estimated_refresh_interval_ns']:.0f}"))
+        rows.append((name, "fig4_refresh", "spikes",
+                     str(int(r["refresh_hits"].sum()))))
+
+        lat = camp.suite_idle_latency()
+        for k, v in lat.items():
+            rows.append((name, "table4_idle_latency", k,
+                         f"{v['cycles']}cyc/{v['ns']:.1f}ns"))
+
+        amap = camp.suite_address_mapping(strides=(64, 256, 1024, 4096,
+                                                   16384), n=2048)
+        for pol, per_b in amap.items():
+            for b, per_s in per_b.items():
+                for s, gbps in per_s.items():
+                    rows.append((name, "fig6_mapping",
+                                 f"{pol}_B{b}_S{s}", f"{gbps:.2f}"))
+
+        loc = camp.suite_locality(strides=(1024, 4096), n=2048)
+        for w, per_b in loc.items():
+            for b, per_s in per_b.items():
+                for s, gbps in per_s.items():
+                    rows.append((name, "fig7_locality",
+                                 f"W{w}_B{b}_S{s}", f"{gbps:.2f}"))
+
+        tot = camp.suite_total_throughput()
+        rows.append((name, "table5_total", "total_gbps",
+                     f"{tot['total_gbps']:.1f}"))
+
+        if name == "hbm":
+            sw = camp.suite_switch_latency()
+            for ch in (0, 4, 8, 12, 16, 20, 24, 28):
+                rows.append((name, "table6_switch",
+                             f"ch{ch}_hit", f"{sw[ch]['hit']}cyc"))
+            swt = camp.suite_switch_throughput(strides=(64,))
+            for ch, per_s in swt.items():
+                rows.append((name, "fig8_switch_tp",
+                             f"ch{ch}_S64", f"{per_s[64]:.2f}"))
+
+    out = "\n".join(",".join(r) for r in rows)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(out + "\n")
+        print(f"wrote {len(rows) - 1} measurements to {args.csv}")
+    else:
+        print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Shuhai core: the paper's contribution as a composable library.
+
+Public surface:
+  RSTParams, EngineRegisters        — runtime parameters (Table I) + packing
+  addresses_np / addresses_jnp      — Eq. 1 address streams
+  AddressMapping, get_mapping       — Table II policies
+  serial_read_latencies, throughput — the calibrated timing model
+  Engine                            — one benchmarking engine per channel
+  ShuhaiCampaign                    — host-side suites (one per table/figure)
+  SwitchModel, HBMTopology          — Sec. II / VI switch + topology
+  MemoryOracle, AccessPattern       — TPU-facing constants + derating
+  choose_layout, advise_microbatch  — the technique as a framework feature
+"""
+from repro.core.address_mapping import AddressMapping, get_mapping, policies_for
+from repro.core.autotune import (LayoutCandidate, advise_microbatch,
+                                 advise_remat, choose_layout, score_layouts)
+from repro.core.bench_host import ShuhaiCampaign, default_campaigns
+from repro.core.channels import DDR4Topology, HBMTopology
+from repro.core.engine import Engine
+from repro.core.hwspec import DDR4, HBM, TPU_V5E, ChipSpec, MemorySpec
+from repro.core.latency import LatencyModule
+from repro.core.oracle import AccessPattern, MemoryOracle
+from repro.core.params import EngineRegisters, RSTParams
+from repro.core.rst import addresses_jnp, addresses_np, block_params
+from repro.core.switch import SwitchModel
+from repro.core.timing_model import (LatencyTrace, ThroughputResult,
+                                     refresh_interval_estimate,
+                                     serial_read_latencies, throughput)
+
+__all__ = [
+    "AddressMapping", "get_mapping", "policies_for",
+    "LayoutCandidate", "advise_microbatch", "advise_remat", "choose_layout",
+    "score_layouts", "ShuhaiCampaign", "default_campaigns",
+    "DDR4Topology", "HBMTopology", "Engine",
+    "DDR4", "HBM", "TPU_V5E", "ChipSpec", "MemorySpec",
+    "LatencyModule", "AccessPattern", "MemoryOracle",
+    "EngineRegisters", "RSTParams",
+    "addresses_jnp", "addresses_np", "block_params",
+    "SwitchModel", "LatencyTrace", "ThroughputResult",
+    "refresh_interval_estimate", "serial_read_latencies", "throughput",
+]

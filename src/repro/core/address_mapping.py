@@ -1,0 +1,141 @@
+"""Address-mapping policies of the Xilinx memory controllers (paper Table II).
+
+A policy is an ordered list of (field, nbits) pairs, MSB-first, that slices
+the application address `app_addr[hi:lo]` into row / bank-group / bank /
+column fields.  Notation follows the paper: ``14R-1BG-2B-5C-1BG`` means the
+most-significant 14 mapped bits select the row, then 1 bank-group bit, 2
+bank bits, 5 column bits, and the least-significant mapped bit is the second
+bank-group bit (policy RGBCG, the HBM default).
+
+The same machinery doubles as the TPU "layout policy" abstraction: the
+autotuner (core/autotune.py) expresses candidate array layouts as policies
+over (dim0, dim1, ...) fields and scores the induced bank/row locality with
+the timing model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hwspec import DDR4, HBM, MemorySpec
+
+Field = Tuple[str, int]   # ("R" | "BG" | "B" | "C", nbits)
+
+
+def parse_policy(desc: str) -> List[Field]:
+    """Parse "14R-1BG-2B-5C-1BG" into [("R",14),("BG",1),("B",2),...]."""
+    fields: List[Field] = []
+    for tok in desc.split("-"):
+        tok = tok.strip()
+        i = 0
+        while i < len(tok) and tok[i].isdigit():
+            i += 1
+        if i == 0 or i == len(tok):
+            raise ValueError(f"bad policy token {tok!r} in {desc!r}")
+        fields.append((tok[i:], int(tok[:i])))
+    return fields
+
+
+@dataclasses.dataclass(frozen=True)
+class AddressMapping:
+    """Bit-slicing decoder/encoder for one policy on one memory spec."""
+
+    name: str
+    fields: Tuple[Field, ...]
+    spec: MemorySpec
+
+    def __post_init__(self):
+        totals: Dict[str, int] = {}
+        for f, n in self.fields:
+            if f not in ("R", "BG", "B", "C"):
+                raise ValueError(f"unknown field {f!r} in policy {self.name}")
+            totals[f] = totals.get(f, 0) + n
+        expect = {"R": self.spec.row_bits, "BG": self.spec.bankgroup_bits,
+                  "B": self.spec.bank_bits, "C": self.spec.column_bits}
+        if totals != expect:
+            raise ValueError(
+                f"policy {self.name} field widths {totals} do not match "
+                f"spec {self.spec.name} geometry {expect}")
+
+    @property
+    def mapped_bits(self) -> int:
+        return sum(n for _, n in self.fields)
+
+    def decode(self, app_addr):
+        """Vectorized app_addr -> dict(R=..., BG=..., B=..., C=...).
+
+        `app_addr` is in bytes; bits below spec.addr_lsb are intra-burst and
+        ignored, as in the controller (app_addr[27:5] for HBM).
+        """
+        a = np.asarray(app_addr, dtype=np.int64) >> self.spec.addr_lsb
+        out = {"R": np.zeros_like(a), "BG": np.zeros_like(a),
+               "B": np.zeros_like(a), "C": np.zeros_like(a)}
+        pos = self.mapped_bits
+        for f, n in self.fields:           # MSB-first
+            pos -= n
+            piece = (a >> pos) & ((1 << n) - 1)
+            out[f] = (out[f] << n) | piece
+        return out
+
+    def encode(self, r, bg, b, c):
+        """Inverse of decode: fields -> byte address (LSBs zero)."""
+        r = np.asarray(r, dtype=np.int64)
+        bg = np.asarray(bg, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        c = np.asarray(c, dtype=np.int64)
+        remaining = {"R": r, "BG": bg, "B": b, "C": c}
+        widths = {"R": self.spec.row_bits, "BG": self.spec.bankgroup_bits,
+                  "B": self.spec.bank_bits, "C": self.spec.column_bits}
+        consumed = {k: 0 for k in widths}
+        addr = np.zeros(np.broadcast(r, bg, b, c).shape, dtype=np.int64)
+        pos = self.mapped_bits
+        for f, n in self.fields:           # MSB-first, consume MSBs first
+            pos -= n
+            consumed[f] += n
+            shift = widths[f] - consumed[f]
+            piece = (remaining[f] >> shift) & ((1 << n) - 1)
+            addr = addr | (piece << pos)
+        return addr << self.spec.addr_lsb
+
+    def bank_id(self, app_addr):
+        """Flat bank index combining bank-group and bank fields."""
+        d = self.decode(app_addr)
+        return d["BG"] * (1 << self.spec.bank_bits) + d["B"]
+
+
+# --- paper Table II --------------------------------------------------------
+
+_HBM_POLICIES = {
+    "RBC":   "14R-2BG-2B-5C",
+    "RCB":   "14R-5C-2BG-2B",
+    "BRC":   "2BG-2B-14R-5C",
+    "RGBCG": "14R-1BG-2B-5C-1BG",   # default (blue in the paper)
+    "BRGCG": "2B-14R-1BG-5C-1BG",
+}
+
+_DDR4_POLICIES = {
+    "RBC":  "17R-2BG-2B-7C",
+    "RCB":  "17R-7C-2B-2BG",        # default
+    "BRC":  "2BG-2B-17R-7C",
+    "RCBI": "17R-6C-2B-1C-2BG",
+}
+
+DEFAULT_POLICY = {"hbm": "RGBCG", "ddr4": "RCB"}
+
+
+def policies_for(spec: MemorySpec) -> Dict[str, AddressMapping]:
+    table = _HBM_POLICIES if spec.name == "hbm" else _DDR4_POLICIES
+    return {name: AddressMapping(name, tuple(parse_policy(desc)), spec)
+            for name, desc in table.items()}
+
+
+def get_mapping(spec: MemorySpec, policy: str | None = None) -> AddressMapping:
+    policy = policy or DEFAULT_POLICY[spec.name]
+    pols = policies_for(spec)
+    if policy not in pols:
+        raise ValueError(
+            f"policy {policy!r} not available for {spec.name}; "
+            f"have {sorted(pols)}")
+    return pols[policy]

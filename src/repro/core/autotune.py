@@ -1,0 +1,136 @@
+"""Layout / schedule autotuning driven by the memory oracle.
+
+This is the paper's technique acting as a first-class framework feature:
+exactly as an FPGA programmer reads Shuhai's output to pick an address
+mapping policy, the framework maps candidate array layouts and schedules to
+RST access patterns and lets the calibrated model rank them.
+
+Consumers:
+  * serving/kv_cache.py asks :func:`choose_layout` for the KV-cache
+    dimension order used at decode time;
+  * launch/train.py asks :func:`advise_microbatch` for the largest
+    microbatch whose working set fits HBM with the requested slack;
+  * the §Perf hillclimb uses :func:`score_layouts` reports to pick
+    candidates before re-lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.oracle import AccessPattern, MemoryOracle
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutCandidate:
+    """An array layout: named dims in storage order (major -> minor)."""
+
+    dims: Tuple[str, ...]
+    sizes: Dict[str, int]
+    itemsize: int
+
+    def stride_of(self, dim: str) -> int:
+        """Bytes between consecutive indices of `dim`."""
+        stride = self.itemsize
+        for d in reversed(self.dims):
+            if d == dim:
+                return stride
+            stride *= self.sizes[d]
+        raise KeyError(dim)
+
+    @property
+    def total_bytes(self) -> int:
+        n = self.itemsize
+        for d in self.dims:
+            n *= self.sizes[d]
+        return n
+
+    def access_pattern(self, iterate_dim: str,
+                       fetch_dims: Sequence[str]) -> AccessPattern:
+        """Pattern of sweeping `iterate_dim` while fetching `fetch_dims`
+        at each step.
+
+        The contiguous run (burst) is the product of trailing dims that are
+        all fetched.  Fetched dims *outside* that run turn one logical fetch
+        into a strided gather: the effective stride is the smallest stride
+        among those dims (each burst jumps by it), which is what penalizes
+        layouts that interleave a non-fetched dim (e.g. `seq`) between
+        fetched ones — exactly a bad address-mapping policy in paper terms.
+        """
+        run = self.itemsize
+        contig: List[str] = []
+        for d in reversed(self.dims):
+            if d in fetch_dims:
+                run *= self.sizes[d]
+                contig.append(d)
+            else:
+                break
+        non_contig = [d for d in fetch_dims if d not in contig]
+        if non_contig:
+            stride = min(self.stride_of(d) for d in non_contig)
+        else:
+            stride = self.stride_of(iterate_dim)
+        return AccessPattern(
+            burst_bytes=run,
+            stride_bytes=max(stride, run),
+            working_set_bytes=self.total_bytes,
+        )
+
+
+def score_layouts(oracle: MemoryOracle, sizes: Dict[str, int], itemsize: int,
+                  iterate_dim: str, fetch_dims: Sequence[str],
+                  fixed_minor: Sequence[str] = ()) -> List[Tuple[float, LayoutCandidate]]:
+    """Score every permutation of dims (minus `fixed_minor`, kept minormost)
+    by modeled effective bandwidth for the given access."""
+    free = [d for d in sizes if d not in fixed_minor]
+    out = []
+    for perm in itertools.permutations(free):
+        cand = LayoutCandidate(dims=tuple(perm) + tuple(fixed_minor),
+                               sizes=dict(sizes), itemsize=itemsize)
+        bw = oracle.effective_bandwidth(
+            cand.access_pattern(iterate_dim, fetch_dims))
+        out.append((bw, cand))
+    out.sort(key=lambda t: -t[0])
+    return out
+
+
+def choose_layout(oracle: MemoryOracle, sizes: Dict[str, int], itemsize: int,
+                  iterate_dim: str, fetch_dims: Sequence[str],
+                  fixed_minor: Sequence[str] = ()) -> LayoutCandidate:
+    return score_layouts(oracle, sizes, itemsize, iterate_dim, fetch_dims,
+                         fixed_minor)[0][1]
+
+
+def advise_microbatch(
+    oracle: MemoryOracle,
+    *,
+    param_bytes_per_device: float,
+    opt_state_bytes_per_device: float,
+    act_bytes_per_sample: float,
+    max_microbatch: int,
+    slack: float = 0.9,
+) -> int:
+    """Largest power-of-two microbatch (per device) whose live working set
+    fits in HBM with `slack` headroom.  Returns at least 1."""
+    budget = oracle.chip.hbm_bytes * slack
+    fixed = param_bytes_per_device + opt_state_bytes_per_device
+    mb = 1
+    while (mb * 2 <= max_microbatch
+           and fixed + act_bytes_per_sample * mb * 2 <= budget):
+        mb *= 2
+    return mb
+
+
+def advise_remat(oracle: MemoryOracle, *, layer_act_bytes: float,
+                 num_layers: int, budget_fraction: float = 0.35) -> str:
+    """Pick an activation-checkpoint policy: 'none' | 'save_boundaries' |
+    'full' based on whether saved activations fit the HBM budget share."""
+    budget = oracle.chip.hbm_bytes * budget_fraction
+    if layer_act_bytes * num_layers * 4 <= budget:   # keep everything (~4x)
+        return "none"
+    if layer_act_bytes * num_layers <= budget:       # boundaries only
+        return "save_boundaries"
+    return "full"

@@ -1,0 +1,201 @@
+"""Software component: the host-side campaign driver (paper Sec. III-B).
+
+`ShuhaiCampaign` plays the role of the CPU software talking to the parameter
+module over PCIe: it packs runtime registers, fans them out to M engines
+(M = 32 for HBM, M = 2 for DDR4, Fig. 3), triggers runs, and collects
+status/latency lists.  Every paper table/figure has a `suite_*` method here;
+benchmarks/ are thin CSV printers over these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.address_mapping import DEFAULT_POLICY, policies_for
+from repro.core.channels import AXI_PER_MINI_SWITCH, NUM_AXI_CHANNELS, HBMTopology
+from repro.core.engine import Engine
+from repro.core.hwspec import DDR4, HBM, MemorySpec
+from repro.core.latency import LatencyModule
+from repro.core.params import RSTParams
+from repro.core.switch import SwitchModel
+from repro.core.timing_model import refresh_interval_estimate
+
+MB = 1024**2
+
+
+@dataclasses.dataclass
+class ShuhaiCampaign:
+    spec: MemorySpec = HBM
+    backend: str = "sim"
+
+    def __post_init__(self):
+        m = self.spec.num_channels  # M engines, Fig. 3
+        self.engines: List[Engine] = [
+            Engine(channel=c, spec=self.spec, backend=self.backend)
+            for c in range(m)
+        ]
+
+    # ------------------------------------------------------------------ utils
+    def _engine(self, ch: int) -> Engine:
+        return self.engines[ch]
+
+    # --------------------------------------------------------------- Fig. 4
+    def suite_refresh(self, n: int = 1024) -> Dict[str, object]:
+        """Serial-read latency timeline showing periodic refresh spikes.
+        Paper setting: B=32, S=64, W=0x1000000, N=1024 (HBM)."""
+        p = RSTParams(n=n, b=self.spec.min_burst, s=64, w=0x1000000)
+        eng = self._engine(0)
+        eng.configure_read(p)
+        trace = eng.read_latency()
+        return {
+            "latency_cycles": trace.cycles,
+            "refresh_hits": trace.refresh_hits,
+            "estimated_refresh_interval_ns":
+                refresh_interval_estimate(trace, self.spec),
+            "params": p,
+        }
+
+    # ------------------------------------------------- Fig. 5 / Table IV
+    def suite_idle_latency(self) -> Dict[str, Dict[str, float]]:
+        """Page hit/closed/miss latencies via the paper's two-stride probe:
+        S=128 isolates hit+closed, S=128K forces misses. Switch disabled
+        (footnote 6/9)."""
+        eng = self._engine(0)
+        out: Dict[str, Dict[str, float]] = {}
+        module = LatencyModule()
+
+        eng.configure_read(RSTParams(n=1024, b=self.spec.min_burst,
+                                     s=128, w=0x1000000))
+        cap_small = module.capture(eng.read_latency())
+        cats_small = module.category_latencies(cap_small, self.spec)
+
+        eng.configure_read(RSTParams(n=1024, b=self.spec.min_burst,
+                                     s=128 * 1024, w=0x1000000))
+        cap_large = module.capture(eng.read_latency())
+        cats_large = module.category_latencies(cap_large, self.spec)
+
+        for name, cyc in (("page_hit", cats_small["hit"]),
+                          ("page_closed", cats_small["closed"]),
+                          ("page_miss", cats_large["miss"])):
+            out[name] = {"cycles": cyc, "ns": cyc * self.spec.cycle_ns}
+        return out
+
+    # --------------------------------------------------------------- Fig. 6
+    def suite_address_mapping(
+        self,
+        strides: Sequence[int] = (64, 128, 256, 512, 1024, 2048, 4096, 8192,
+                                  16384, 32768),
+        bursts: Optional[Sequence[int]] = None,
+        w: int = 0x10000000,
+        n: int = 4096,
+    ) -> Dict[str, Dict[int, Dict[int, float]]]:
+        """Throughput for every address-mapping policy x stride x burst."""
+        bursts = bursts or (self.spec.min_burst, 2 * self.spec.min_burst)
+        eng = self._engine(0)
+        results: Dict[str, Dict[int, Dict[int, float]]] = {}
+        for policy in policies_for(self.spec):
+            per_b: Dict[int, Dict[int, float]] = {}
+            for b in bursts:
+                per_s: Dict[int, float] = {}
+                for s in strides:
+                    if s < b:
+                        continue
+                    eng.configure_read(RSTParams(n=n, b=b, s=s, w=w))
+                    per_s[s] = eng.read_throughput(policy=policy).gbps
+                per_b[b] = per_s
+            results[policy] = per_b
+        return results
+
+    # --------------------------------------------------------------- Fig. 7
+    def suite_locality(
+        self,
+        strides: Sequence[int] = (64, 256, 1024, 4096, 16384),
+        bursts: Optional[Sequence[int]] = None,
+        n: int = 4096,
+    ) -> Dict[int, Dict[int, Dict[int, float]]]:
+        """W=8K (locality) vs W=256M (baseline) throughput (Sec. V-E)."""
+        bursts = bursts or (self.spec.min_burst, 2 * self.spec.min_burst)
+        eng = self._engine(0)
+        results: Dict[int, Dict[int, Dict[int, float]]] = {}
+        for w in (8 * 1024, 256 * MB):
+            per_b: Dict[int, Dict[int, float]] = {}
+            for b in bursts:
+                per_s: Dict[int, float] = {}
+                for s in strides:
+                    if s < b or s > w:
+                        continue
+                    eng.configure_read(RSTParams(n=n, b=b, s=s, w=w))
+                    per_s[s] = eng.read_throughput().gbps
+                per_b[b] = per_s
+            results[w] = per_b
+        return results
+
+    # --------------------------------------------------------------- Table V
+    def suite_total_throughput(self) -> Dict[str, float]:
+        """All M engines hit their local channels simultaneously; per the
+        paper (footnote 11) channels are independent, so the aggregate is
+        per-channel throughput x M."""
+        p = RSTParams(n=8192, b=self.spec.min_burst, s=self.spec.min_burst,
+                      w=0x10000000)
+        per_channel = []
+        for eng in self.engines:
+            eng.configure_read(p)
+            per_channel.append(eng.read_throughput().gbps)
+        return {
+            "per_channel_gbps": float(np.mean(per_channel)),
+            "num_channels": len(self.engines),
+            "total_gbps": float(np.sum(per_channel)),
+            "theoretical_gbps": self.spec.peak_total_gbps,
+        }
+
+    # -------------------------------------------------------------- Table VI
+    def suite_switch_latency(self, dst_channel: int = 0
+                             ) -> Dict[int, Dict[str, float]]:
+        """Idle latency from every AXI channel to one HBM channel, switch ON."""
+        if self.spec.name != "hbm":
+            raise ValueError("the DDR4 controller has no switch (Sec. IV-D)")
+        module = LatencyModule()
+        out: Dict[int, Dict[str, float]] = {}
+        for ch in range(NUM_AXI_CHANNELS):
+            eng = self._engine(ch)
+            eng.configure_read(RSTParams(n=1024, b=32, s=128, w=0x1000000))
+            cap_small = module.capture(eng.read_latency(
+                dst_channel=dst_channel, switch_enabled=True))
+            extra = eng.switch.distance_extra_cycles(ch, dst_channel) + \
+                self.spec.switch_penalty
+            cats = module.category_latencies(cap_small, self.spec, extra)
+            eng.configure_read(RSTParams(n=1024, b=32, s=128 * 1024,
+                                         w=0x1000000))
+            cap_large = module.capture(eng.read_latency(
+                dst_channel=dst_channel, switch_enabled=True))
+            cats_miss = module.category_latencies(cap_large, self.spec, extra)
+            out[ch] = {"hit": cats["hit"], "closed": cats["closed"],
+                       "miss": cats_miss["miss"]}
+        return out
+
+    # --------------------------------------------------------------- Fig. 8
+    def suite_switch_throughput(
+        self, dst_channel: int = 0,
+        strides: Sequence[int] = (64, 256, 1024, 4096),
+    ) -> Dict[int, Dict[int, float]]:
+        """Throughput from one AXI channel per mini-switch to HBM channel 0.
+        Paper setting: B=64, W=0x1000000, N=200000."""
+        if self.spec.name != "hbm":
+            raise ValueError("the DDR4 controller has no switch")
+        out: Dict[int, Dict[int, float]] = {}
+        for sw in range(NUM_AXI_CHANNELS // AXI_PER_MINI_SWITCH):
+            ch = sw * AXI_PER_MINI_SWITCH
+            eng = self._engine(ch)
+            per_s = {}
+            for s in strides:
+                eng.configure_read(RSTParams(n=200000, b=64, s=s, w=0x1000000))
+                per_s[s] = eng.read_throughput(dst_channel=dst_channel).gbps
+            out[ch] = per_s
+        return out
+
+
+def default_campaigns(backend: str = "sim") -> Dict[str, ShuhaiCampaign]:
+    return {"hbm": ShuhaiCampaign(HBM, backend),
+            "ddr4": ShuhaiCampaign(DDR4, backend)}

@@ -1,0 +1,69 @@
+"""Topology of the Xilinx HBM subsystem (paper Sec. II, Fig. 1).
+
+Two HBM2 stacks -> 16 memory channels -> 32 pseudo channels, each pseudo
+channel owning a private address region.  32 AXI channels face the user
+logic; eight fully-implemented mini-switches serve 4 AXI channels each, and
+adjacent mini-switches are bridged for global addressing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core.hwspec import HBM, MemorySpec
+
+NUM_STACKS = 2
+MEM_CHANNELS_PER_STACK = 8
+PSEUDO_PER_MEM_CHANNEL = 2
+NUM_AXI_CHANNELS = 32
+AXI_PER_MINI_SWITCH = 4
+NUM_MINI_SWITCHES = NUM_AXI_CHANNELS // AXI_PER_MINI_SWITCH  # 8
+
+
+@dataclasses.dataclass(frozen=True)
+class HBMTopology:
+    spec: MemorySpec = HBM
+
+    @property
+    def num_pseudo_channels(self) -> int:
+        return NUM_STACKS * MEM_CHANNELS_PER_STACK * PSEUDO_PER_MEM_CHANNEL
+
+    def mini_switch_of(self, axi_channel: int) -> int:
+        self._check(axi_channel)
+        return axi_channel // AXI_PER_MINI_SWITCH
+
+    def stack_of(self, axi_channel: int) -> int:
+        self._check(axi_channel)
+        return self.mini_switch_of(axi_channel) // (NUM_MINI_SWITCHES // NUM_STACKS)
+
+    def local_pseudo_channel(self, axi_channel: int) -> int:
+        """The pseudo channel an AXI channel reaches with the switch OFF."""
+        self._check(axi_channel)
+        return axi_channel
+
+    def channel_address_base(self, pseudo_channel: int) -> int:
+        """Byte base of a pseudo channel's private region (8 GB / 32)."""
+        self._check(pseudo_channel)
+        region = (8 * 1024**3) // self.num_pseudo_channels
+        return pseudo_channel * region
+
+    def channels_in_switch(self, switch: int) -> List[int]:
+        if not 0 <= switch < NUM_MINI_SWITCHES:
+            raise ValueError(f"mini-switch {switch} out of range")
+        lo = switch * AXI_PER_MINI_SWITCH
+        return list(range(lo, lo + AXI_PER_MINI_SWITCH))
+
+    @staticmethod
+    def _check(ch: int) -> None:
+        if not 0 <= ch < NUM_AXI_CHANNELS:
+            raise ValueError(f"channel {ch} out of range [0, {NUM_AXI_CHANNELS})")
+
+
+@dataclasses.dataclass(frozen=True)
+class DDR4Topology:
+    num_channels: int = 2
+
+    def local_channel(self, engine: int) -> int:
+        if not 0 <= engine < self.num_channels:
+            raise ValueError(f"engine {engine} out of range")
+        return engine

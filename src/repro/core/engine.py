@@ -1,0 +1,124 @@
+"""Engine modules: the benchmarking workers, one per channel.
+
+Faithful to Sec. III-C-1: an engine owns one channel, has independent read
+and write modules, is configured purely through runtime registers, and is
+never the bottleneck.  Two backends implement the same interface:
+
+* ``sim``    — the calibrated DRAM timing model (reproduces the paper's
+               U280 numbers on this CPU-only container);
+* ``pallas`` — the real TPU kernels (kernels/rst_read.py, rst_write.py),
+               run in interpret mode for validation here, compiled on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import timing_model
+from repro.core.address_mapping import AddressMapping, get_mapping
+from repro.core.channels import HBMTopology
+from repro.core.hwspec import HBM, MemorySpec
+from repro.core.latency import LatencyModule
+from repro.core.params import EngineRegisters, RSTParams
+from repro.core.switch import SwitchModel
+
+BACKENDS = ("sim", "pallas")
+
+
+@dataclasses.dataclass
+class Engine:
+    """One engine module attached to one AXI channel."""
+
+    channel: int
+    spec: MemorySpec = HBM
+    backend: str = "sim"
+    switch: Optional[SwitchModel] = None
+    registers: EngineRegisters = dataclasses.field(default_factory=EngineRegisters)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if self.switch is None and self.spec.name == "hbm":
+            self.switch = SwitchModel(HBMTopology(), enabled=True)
+
+    # -- register plumbing (parameter module side) ---------------------------
+    def configure_read(self, p: RSTParams) -> None:
+        p.validate(self.spec)
+        self.registers = self.registers.with_read(p)
+
+    def configure_write(self, p: RSTParams) -> None:
+        p.validate(self.spec)
+        self.registers = self.registers.with_write(p)
+
+    def _mapping(self, policy: Optional[str]) -> AddressMapping:
+        return get_mapping(self.spec, policy)
+
+    def _switch_extra(self, dst_channel: Optional[int]) -> int:
+        if self.spec.name != "hbm" or self.switch is None:
+            return 0
+        dst = self.channel if dst_channel is None else dst_channel
+        return self.switch.total_extra_cycles(self.channel, dst)
+
+    # -- read module ---------------------------------------------------------
+    def read_throughput(self, policy: Optional[str] = None,
+                        dst_channel: Optional[int] = None
+                        ) -> timing_model.ThroughputResult:
+        p = self.registers.read_params.validate(self.spec)
+        if self.backend == "sim":
+            res = timing_model.throughput(p, self._mapping(policy), self.spec)
+            if self.spec.name == "hbm" and self.switch is not None:
+                dst = self.channel if dst_channel is None else dst_channel
+                scale = self.switch.throughput_scale(self.channel, dst)
+                res = dataclasses.replace(res, gbps=res.gbps * scale)
+            self.registers = dataclasses.replace(
+                self.registers, status=p.n)
+            return res
+        from repro.kernels import ops  # deferred: keeps sim path jax-free
+        sample = ops.measure_read_bandwidth(p)
+        return timing_model.ThroughputResult(
+            gbps=sample.gbps, bound="measured",
+            detail={"seconds": sample.seconds,
+                    "bytes": float(sample.bytes_moved)})
+
+    def read_latency(self, policy: Optional[str] = None,
+                     dst_channel: Optional[int] = None,
+                     switch_enabled: Optional[bool] = None
+                     ) -> timing_model.LatencyTrace:
+        """Serial read latencies.  By default the switch is DISABLED for
+        latency runs, matching paper footnote 6; pass switch_enabled=True
+        for the Table VI experiments."""
+        p = self.registers.read_params.validate(self.spec)
+        if self.backend != "sim":
+            raise NotImplementedError(
+                "per-transaction latency needs on-chip timers; on TPU use "
+                "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
+                "the sim backend (DESIGN.md §2)")
+        enabled = (False if switch_enabled is None else switch_enabled)
+        extra = 0
+        if enabled and self.spec.name == "hbm" and self.switch is not None:
+            sw = dataclasses.replace(self.switch, enabled=True)
+            dst = self.channel if dst_channel is None else dst_channel
+            extra = sw.distance_extra_cycles(self.channel, dst)
+        return timing_model.serial_read_latencies(
+            p, self._mapping(policy), self.spec,
+            switch_enabled=enabled, switch_extra_cycles=extra)
+
+    # -- write module ----------------------------------------------------------
+    def write_throughput(self, policy: Optional[str] = None
+                         ) -> timing_model.ThroughputResult:
+        p = self.registers.write_params.validate(self.spec)
+        if self.backend == "sim":
+            return timing_model.throughput(p, self._mapping(policy), self.spec,
+                                           op="write")
+        from repro.kernels import ops
+        sample = ops.measure_write_bandwidth(p)
+        return timing_model.ThroughputResult(
+            gbps=sample.gbps, bound="measured",
+            detail={"seconds": sample.seconds,
+                    "bytes": float(sample.bytes_moved)})
+
+    # -- latency module --------------------------------------------------------
+    def capture_latency_list(self, **kwargs) -> np.ndarray:
+        return LatencyModule().capture(self.read_latency(**kwargs))

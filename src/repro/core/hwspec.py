@@ -1,0 +1,200 @@
+"""Hardware specifications for the benchmarked / targeted memory systems.
+
+Two families live here:
+
+* The paper's platforms — the Xilinx Alveo U280 HBM2 subsystem and its DDR4
+  channels (Section II / IV-A of the paper).  These drive the timing
+  simulator that reproduces the paper's tables and figures.
+* The TPU v5e target — the chip this framework is deployed on.  These
+  constants feed the roofline analysis (launch/roofline.py) and the
+  MemoryOracle (core/oracle.py).
+
+All times are kept in *nanoseconds* and converted to controller clock cycles
+on demand, mirroring how the paper reports "cycles" at the AXI clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# ---------------------------------------------------------------------------
+# DRAM-side specs (paper platforms)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MemorySpec:
+    """One memory system as seen from a single engine/AXI channel."""
+
+    name: str
+    # Controller ("AXI") clock in MHz — the engine module is clocked at this.
+    axi_mhz: float
+    # Bytes transferred per AXI clock per channel (data-bus width).
+    bus_bytes_per_cycle: int
+    # Number of independent channels an engine can attach to.
+    num_channels: int
+    # Minimum legal burst size B in bytes (paper Sec. III-B).
+    min_burst: int
+    # Address-mapping geometry (bits of the application address).
+    row_bits: int
+    bankgroup_bits: int
+    bank_bits: int
+    column_bits: int
+    # Transaction granularity: app_addr low bits not part of the mapping.
+    addr_lsb: int
+    # --- idle latency anchor points, in AXI cycles (paper Table IV) -------
+    lat_page_hit: int
+    lat_page_closed: int
+    lat_page_miss: int
+    # Extra cycles when the inter-channel switch sits on the path (HBM only).
+    switch_penalty: int
+    # --- dynamic timing, in nanoseconds -----------------------------------
+    t_refi_ns: float      # refresh interval
+    t_rfc_ns: float       # refresh cycle duration (bank unavailable)
+    t_rc_ns: float        # row cycle: min time between ACTs to same bank
+    t_ccd_l_ns: float     # column-to-column, same bank group
+    t_ccd_s_ns: float     # column-to-column, different bank group
+    t_faw_ns: float       # four-activate window
+    # Scheduling inefficiency of the real controller beyond refresh
+    # (calibrated so sequential-read efficiency matches the paper).
+    sched_overhead: float
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def cycle_ns(self) -> float:
+        return 1e3 / self.axi_mhz
+
+    def ns_to_cycles(self, ns: float) -> float:
+        return ns / self.cycle_ns
+
+    def cycles_to_ns(self, cycles: float) -> float:
+        return cycles * self.cycle_ns
+
+    @property
+    def peak_channel_gbps(self) -> float:
+        """Theoretical bandwidth of one channel in GB/s."""
+        return self.bus_bytes_per_cycle * self.axi_mhz * 1e6 / 1e9
+
+    @property
+    def peak_total_gbps(self) -> float:
+        return self.peak_channel_gbps * self.num_channels
+
+    @property
+    def mapped_bits(self) -> int:
+        return (self.row_bits + self.bankgroup_bits + self.bank_bits
+                + self.column_bits)
+
+    @property
+    def page_bytes(self) -> int:
+        """Row-buffer (page) coverage of the application address space."""
+        return (1 << self.column_bits) << self.addr_lsb
+
+    @property
+    def num_banks(self) -> int:
+        return 1 << (self.bankgroup_bits + self.bank_bits)
+
+
+# Xilinx Alveo U280, HBM2 pseudo-channel as seen from one AXI3 channel.
+# 450 MHz AXI clock, 256-bit data => 32 B/cycle => 14.4 GB/s theoretical;
+# paper measures 13.27 GB/s. app_addr[27:5] => 23 mapped bits:
+# 14R + 2BG + 2B + 5C (RBC ordering), 32 B transaction granularity.
+HBM = MemorySpec(
+    name="hbm",
+    axi_mhz=450.0,
+    bus_bytes_per_cycle=32,
+    num_channels=32,
+    min_burst=32,
+    row_bits=14,
+    bankgroup_bits=2,
+    bank_bits=2,
+    column_bits=5,
+    addr_lsb=5,
+    lat_page_hit=48,       # 106.7 ns  (Table IV)
+    lat_page_closed=55,    # 122.2 ns
+    lat_page_miss=62,      # 137.8 ns
+    switch_penalty=7,      # footnote 9
+    t_refi_ns=3900.0,
+    t_rfc_ns=260.0,
+    t_rc_ns=47.0,
+    t_ccd_l_ns=2 / 0.45,   # 4 memory-clock (900 MHz) = 2 AXI cycles, same BG
+    t_ccd_s_ns=1 / 0.45,   # 1 AXI cycle, different bank group
+    t_faw_ns=8.0,          # HBM2 four-activate window (per pseudo channel)
+    sched_overhead=0.012,
+)
+
+# Alveo U280 DDR4 channel: 300 MHz AXI, 512-bit => 64 B/cycle => 19.2 GB/s
+# theoretical; paper measures 18 GB/s/channel. app_addr[33:6] => 28 mapped
+# bits: 17R + 2BG + 2B + 7C, 64 B granularity.
+DDR4 = MemorySpec(
+    name="ddr4",
+    axi_mhz=300.0,
+    bus_bytes_per_cycle=64,
+    num_channels=2,
+    min_burst=64,
+    row_bits=17,
+    bankgroup_bits=2,
+    bank_bits=2,
+    column_bits=7,
+    addr_lsb=6,
+    lat_page_hit=22,       # 73.3 ns  (Table IV)
+    lat_page_closed=27,    # 89.9 ns
+    lat_page_miss=32,      # 106.6 ns
+    switch_penalty=0,      # no switch in the DDR4 controller
+    t_refi_ns=7800.0,
+    t_rfc_ns=350.0,
+    t_rc_ns=47.0,
+    t_ccd_l_ns=4 / 0.3,
+    t_ccd_s_ns=1 / 0.3,
+    t_faw_ns=30.0,
+    sched_overhead=0.015,
+)
+
+
+def spec_by_name(name: str) -> MemorySpec:
+    specs = {"hbm": HBM, "ddr4": DDR4}
+    if name not in specs:
+        raise ValueError(f"unknown memory spec {name!r}; have {list(specs)}")
+    return specs[name]
+
+
+# ---------------------------------------------------------------------------
+# TPU target specs (roofline + MemoryOracle)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip accelerator constants used for roofline terms."""
+
+    name: str
+    peak_bf16_flops: float        # FLOP/s
+    hbm_bandwidth: float          # B/s
+    hbm_bytes: int                # capacity per chip
+    vmem_bytes: int               # on-chip vector memory
+    ici_link_bandwidth: float     # B/s per link, per direction
+    ici_links: int                # links per chip (2D torus on v5e)
+
+    @property
+    def ridge_intensity(self) -> float:
+        """FLOP/byte at which compute and HBM terms are equal."""
+        return self.peak_bf16_flops / self.hbm_bandwidth
+
+
+# Constants supplied with the assignment: 197 TFLOP/s bf16; 819 GB/s HBM;
+# ~50 GB/s/link ICI.
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+)
+
+
+def chip_by_name(name: str) -> ChipSpec:
+    chips = {"tpu_v5e": TPU_V5E}
+    if name not in chips:
+        raise ValueError(f"unknown chip {name!r}; have {list(chips)}")
+    return chips[name]

@@ -1,0 +1,250 @@
+"""Event-level DRAM timing model for the `sim` backend.
+
+Two entry points, mirroring the two measurement modes of the paper's engine
+module (Sec. III-C-1):
+
+* :func:`serial_read_latencies` — the read module's latency mode: exactly one
+  outstanding transaction; the (i+1)-th read is issued only after the i-th
+  returns.  Reproduces Fig. 4 (refresh spikes), Fig. 5 / Table IV (page
+  hit / closed / miss), Table VI (switch distance).
+
+* :func:`throughput` — the saturating mode: the engine always asserts the
+  address-valid signals, the controller reorders inside a window.  Modeled as
+  a steady-state resource-bound analysis at DRAM *column-command*
+  granularity:
+
+    - data bus:       1 command (= bus_bytes) per AXI cycle,
+    - bank group:     1 command per tCCD_L per bank group (tCCD_S across
+                      groups) — this is what makes bank-group interleaving
+                      (paper Sec. V-D) and the LSB "BG" bit of the default
+                      RGBCG policy matter,
+    - bank:           row activations serialize at tRC per bank,
+    - tFAW:           at most 4 activations per tFAW window,
+    - refresh:        (1 - tRFC/tREFI) de-rating,
+    - scheduler:      calibrated constant inefficiency.
+
+  Calibration anchors (see tests/core/test_timing_model.py):
+    HBM  sequential read  B=32  -> 13.27 GB/s  (Table V)
+    DDR4 sequential read  B=64  -> 18.0  GB/s  (Table V)
+    HBM  B=32 W=8K  S=4K        -> ~6.7 GB/s   (Sec. V-E)
+    HBM  B=32 W=256M S=4K       -> ~2.4 GB/s   (Sec. V-E)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.address_mapping import AddressMapping
+from repro.core.hwspec import MemorySpec
+from repro.core.params import RSTParams
+
+# Page states, following Sec. V-B.
+PAGE_HIT, PAGE_CLOSED, PAGE_MISS = "hit", "closed", "miss"
+
+# Cap on how many transactions we expand when the stream is periodic.
+_MAX_EXPAND = 1 << 16
+# Reorder-window size (transactions) of the modeled controller.
+_REORDER_WINDOW = 64
+
+
+@dataclasses.dataclass
+class LatencyTrace:
+    """Result of a serial-latency run."""
+
+    cycles: np.ndarray          # per-transaction latency, AXI cycles (float)
+    states: list                # per-transaction page state
+    refresh_hits: np.ndarray    # bool: transaction stalled behind a refresh
+
+    def ns(self, spec: MemorySpec) -> np.ndarray:
+        return self.cycles * spec.cycle_ns
+
+
+def _expand_addresses(p: RSTParams) -> np.ndarray:
+    n = min(p.n, _MAX_EXPAND)
+    i = np.arange(n, dtype=np.int64)
+    return p.a + (i * p.s) % p.w
+
+
+def serial_read_latencies(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    switch_enabled: bool = False,
+    switch_extra_cycles: int = 0,
+) -> LatencyTrace:
+    """Simulate N serial reads and return per-transaction latency cycles.
+
+    `switch_extra_cycles` is the distance-dependent addition from
+    core/switch.py (Table VI); `switch_enabled` alone adds the flat
+    7-cycle penalty (paper footnote 9).
+    """
+    p.validate(spec)
+    addrs = _expand_addresses(p)
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id(addrs))
+    row = dec["R"]
+
+    base_extra = (spec.switch_penalty if switch_enabled else 0) + (
+        switch_extra_cycles if switch_enabled else 0)
+
+    open_row: Dict[int, int] = {}
+    now_ns = 0.0
+    next_refresh = spec.t_refi_ns
+    lat = np.zeros(len(addrs), dtype=np.float64)
+    states = []
+    refresh_hits = np.zeros(len(addrs), dtype=bool)
+
+    for i in range(len(addrs)):
+        stall_ns = 0.0
+        # Refresh closes all banks; a transaction arriving during the
+        # refresh cycle stalls until it completes (Sec. V-A).
+        while now_ns >= next_refresh:
+            open_row.clear()
+            refresh_end = next_refresh + spec.t_rfc_ns
+            if now_ns < refresh_end:
+                stall_ns = refresh_end - now_ns
+                refresh_hits[i] = True
+            next_refresh += spec.t_refi_ns
+
+        b, r = int(bank[i]), int(row[i])
+        if b in open_row and open_row[b] == r:
+            state, cyc = PAGE_HIT, spec.lat_page_hit
+        elif b not in open_row:
+            state, cyc = PAGE_CLOSED, spec.lat_page_closed
+        else:
+            state, cyc = PAGE_MISS, spec.lat_page_miss
+        open_row[b] = r
+
+        total_cycles = cyc + base_extra + spec.ns_to_cycles(stall_ns)
+        lat[i] = total_cycles
+        states.append(state)
+        now_ns += spec.cycles_to_ns(total_cycles)
+
+    return LatencyTrace(cycles=lat, states=states, refresh_hits=refresh_hits)
+
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputResult:
+    gbps: float
+    bound: str                    # "bus/ccd" | "bank" | "faw"
+    detail: Dict[str, float]
+
+    def __repr__(self):
+        return f"ThroughputResult({self.gbps:.2f} GB/s, bound={self.bound})"
+
+
+def throughput(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    op: str = "read",
+) -> ThroughputResult:
+    """Steady-state achievable throughput of one engine on one channel.
+
+    Reads and writes share the model: the paper's write module saturates
+    WA/WD the same way the read module saturates RA (Sec. III-C-1), and the
+    measured asymmetry is small compared to policy/stride effects.
+    """
+    del op  # symmetric in this model
+    p.validate(spec)
+    txn_addrs = _expand_addresses(p)
+    cmds_per_txn = max(1, p.b // spec.bus_bytes_per_cycle)
+    # Bound total modeled commands: the stream is periodic, so a prefix is
+    # representative; without this, multi-MB bursts explode the expansion.
+    max_txns = max(16, _MAX_EXPAND // cmds_per_txn)
+    if len(txn_addrs) > max_txns:
+        txn_addrs = txn_addrs[:max_txns]
+    # Expand bursts into column commands: a B-byte burst is B/bus_bytes
+    # commands at consecutive bus-width offsets.  This matters: under the
+    # default RGBCG policy the LSB mapped bit is a bank-group bit, so the
+    # commands *within* one 64-byte burst already alternate bank groups —
+    # the very reason the default policy sustains wire rate (Sec. V-D).
+    offs = np.arange(cmds_per_txn, dtype=np.int64) * spec.bus_bytes_per_cycle
+    addrs = (txn_addrs[:, None] + offs[None, :]).reshape(-1)
+    n = len(addrs)
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id(addrs))
+    row = np.asarray(dec["R"])
+    bg = np.asarray(dec["BG"])
+
+    ccd_l_cyc = spec.ns_to_cycles(spec.t_ccd_l_ns)
+
+    # --- command-issue bound (data bus + bank-group tCCD_L) ----------------
+    # Scan the stream in reorder-window chunks; within a chunk the scheduler
+    # interleaves commands from G distinct bank groups, so the aggregate
+    # command rate is min(1 cmd/cycle, G / tCCD_L).  Interleaving across
+    # bank-group *runs* is only possible while two runs coexist in the
+    # reorder window, so G is capped by window / (2 * mean run length):
+    # long single-BG runs (paper Fig. 6b, RBC with small S) serialize at
+    # tCCD_L even though the full stream eventually touches every group.
+    transitions = int(np.count_nonzero(bg[1:] != bg[:-1]))
+    run_len = n / (transitions + 1)
+    g_cap = max(1.0, _REORDER_WINDOW / (2.0 * run_len))
+    issue_cycles = 0.0
+    for lo in range(0, n, _REORDER_WINDOW):
+        chunk_bg = bg[lo:lo + _REORDER_WINDOW]
+        g = min(float(len(np.unique(chunk_bg))), g_cap)
+        rate = min(1.0, g / ccd_l_cyc)           # commands per cycle
+        issue_cycles += len(chunk_bg) / rate
+
+    # --- bank bound (row activations serialize at tRC per bank) ------------
+    # An activation happens whenever a bank is accessed with a different row
+    # than its currently open one.  Activations to *different* banks overlap
+    # only while both live in the reorder window, so the bound is computed
+    # per window: sum over windows of (max activations to any one bank in
+    # that window) * tRC.  A stream that rotates banks slowly (runs longer
+    # than the window) therefore serializes fully, as the real controller
+    # does.
+    open_row: Dict[int, int] = {}
+    total_acts = 0
+    t_rc_cyc = spec.ns_to_cycles(spec.t_rc_ns)
+    bank_cycles = 0.0
+    for lo in range(0, n, _REORDER_WINDOW):
+        acts_in_window: Dict[int, int] = {}
+        for i in range(lo, min(lo + _REORDER_WINDOW, n)):
+            b_, r_ = int(bank[i]), int(row[i])
+            if open_row.get(b_) != r_:
+                acts_in_window[b_] = acts_in_window.get(b_, 0) + 1
+                open_row[b_] = r_
+                total_acts += 1
+        if acts_in_window:
+            bank_cycles += max(acts_in_window.values()) * t_rc_cyc
+
+    # --- four-activate-window bound ----------------------------------------
+    faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0
+
+    bounds = {"bus/ccd": issue_cycles, "bank": bank_cycles, "faw": faw_cycles}
+    bound_name = max(bounds, key=bounds.get)
+    steady_cycles = bounds[bound_name]
+
+    eff = (1.0 - spec.t_rfc_ns / spec.t_refi_ns) * (1.0 - spec.sched_overhead)
+    total_bytes = len(txn_addrs) * p.b
+    seconds = spec.cycles_to_ns(steady_cycles) * 1e-9
+    gbps = total_bytes / seconds / 1e9 * eff if seconds > 0 else 0.0
+    # A channel can never beat its wire rate.
+    gbps = min(gbps, spec.peak_channel_gbps)
+
+    return ThroughputResult(
+        gbps=gbps,
+        bound=bound_name,
+        detail={**bounds, "txns": float(n), "cmds_per_txn": float(cmds_per_txn),
+                "total_acts": float(total_acts), "efficiency": eff},
+    )
+
+
+def refresh_interval_estimate(trace: LatencyTrace, spec: MemorySpec) -> float:
+    """Estimate tREFI (ns) from latency spikes, as the paper does in V-A."""
+    lat = trace.cycles
+    thresh = np.median(lat) + 10.0
+    spike_idx = np.nonzero(lat > thresh)[0]
+    if len(spike_idx) < 2:
+        return math.nan
+    # Time of each spike = cumulative latency up to it.
+    t = np.cumsum(spec.cycles_to_ns(lat))
+    spike_times = t[spike_idx]
+    return float(np.mean(np.diff(spike_times)))

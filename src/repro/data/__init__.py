@@ -1,0 +1,5 @@
+from repro.data.pipeline import (EOS, DataConfig, DataLoader, global_batch_at,
+                                 shard_batch)
+
+__all__ = ["EOS", "DataConfig", "DataLoader", "global_batch_at",
+           "shard_batch"]

@@ -1,0 +1,102 @@
+"""Jitted high-level wrappers around the RST Pallas engines.
+
+This is the device-side counterpart of the paper's parameter module: it
+packs :class:`repro.core.params.RSTParams` (byte-level, as the host thinks
+of them) into the scalar-prefetch operand (tile-level, as the engine
+consumes them) and runs the kernels.  ``measure_read_bandwidth`` is what the
+`pallas` backend of core/engine.py calls; on a real TPU the wall-clock
+number is the achieved HBM bandwidth of one core's engine, on CPU
+(interpret=True) it validates correctness only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import RSTParams
+from repro.core.rst import block_params
+from repro.kernels.rst_read import LANE, SUBLANE, rst_read
+from repro.kernels.rst_write import rst_write
+
+
+def tile_bytes(dtype, burst_rows: int = SUBLANE) -> int:
+    return burst_rows * LANE * jnp.dtype(dtype).itemsize
+
+
+def params_operand(p: RSTParams, dtype, burst_rows: int = SUBLANE,
+                   grid_txns: int | None = None) -> jax.Array:
+    """Pack byte-level RST params into the int32[4] scalar operand."""
+    tb = tile_bytes(dtype, burst_rows)
+    if p.b != tb:
+        raise ValueError(
+            f"burst B={p.b} does not match tile bytes {tb} "
+            f"(burst_rows={burst_rows}, dtype={jnp.dtype(dtype).name}); on "
+            f"TPU the burst is the BlockSpec tile (DESIGN.md §2)")
+    stride_b, wset_b, base_b = block_params(p, tb)
+    n = p.n if grid_txns is None else min(p.n, grid_txns)
+    return jnp.array([stride_b, wset_b, base_b, n], dtype=jnp.int32)
+
+
+def make_working_buffer(p: RSTParams, dtype, key=None) -> jax.Array:
+    """Allocate the working set: W bytes of the given dtype as (rows, LANE)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    rows = p.w // (LANE * itemsize)
+    if rows * LANE * itemsize != p.w:
+        raise ValueError(f"W={p.w} not a whole number of ({LANE},) rows")
+    if key is None:
+        # Deterministic, cheap, nonconstant content.
+        base = jnp.arange(rows * LANE, dtype=jnp.float32) % 251.0
+        return base.reshape(rows, LANE).astype(dtype)
+    return jax.random.normal(key, (rows, LANE), dtype=jnp.float32).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthSample:
+    bytes_moved: int
+    seconds: float
+    checksum: np.ndarray
+
+    @property
+    def gbps(self) -> float:
+        return self.bytes_moved / self.seconds / 1e9 if self.seconds > 0 else 0.0
+
+
+def measure_read_bandwidth(p: RSTParams, *, dtype=jnp.float32,
+                           burst_rows: int = SUBLANE,
+                           grid_txns: int | None = None,
+                           interpret: bool = True) -> BandwidthSample:
+    grid = grid_txns or p.n
+    operand = params_operand(p, dtype, burst_rows, grid)
+    buf = make_working_buffer(p, dtype)
+    # Warm-up compiles and (in interpret mode) validates tracing.
+    out = rst_read(operand, buf, grid_txns=grid, burst_rows=burst_rows,
+                   interpret=interpret)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    out = rst_read(operand, buf, grid_txns=grid, burst_rows=burst_rows,
+                   interpret=interpret)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return BandwidthSample(bytes_moved=min(p.n, grid) * p.b, seconds=dt,
+                           checksum=np.asarray(out))
+
+
+def measure_write_bandwidth(p: RSTParams, *, dtype=jnp.float32,
+                            burst_rows: int = SUBLANE,
+                            grid_txns: int | None = None,
+                            interpret: bool = True) -> BandwidthSample:
+    grid = grid_txns or p.n
+    operand = params_operand(p, dtype, burst_rows, grid)
+    buf = make_working_buffer(p, dtype)
+    t0 = time.perf_counter()
+    out = rst_write(operand, buf, grid_txns=grid, burst_rows=burst_rows,
+                    interpret=interpret)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return BandwidthSample(bytes_moved=min(p.n, grid) * p.b, seconds=dt,
+                           checksum=np.asarray(out[:8]))

@@ -1,0 +1,234 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init); this module is the ONLY place the 512-device flag is
+set — tests and benches see one device.
+
+For each cell we lower the real step function (train_step / prefill_step /
+serve_step) with full-size ShapeDtypeStructs and production shardings,
+compile it, and record:
+  * memory_analysis()  — per-device bytes: proves the cell fits HBM,
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed,
+  * collective bytes   — parsed from the partitioned HLO text
+  (all three feed EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out-dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import os
+# The VERY FIRST action before any jax-importing module: the dry-run (and
+# ONLY the dry-run) needs 512 placeholder devices for the production mesh.
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import gc
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import serve as serve_lib
+from repro.launch import train as train_lib
+from repro.launch.hlo_analysis import collective_bytes, remat_duplication
+from repro.launch.mesh import dp_degree, make_production_mesh
+from repro.launch.shapes import (SHAPES, ShapeSpec, batch_shardings,
+                                 cell_is_runnable, input_specs)
+from repro.models.common import param_sharding, param_shapes
+from repro.models.registry import build
+
+
+def _shape_rules(rules: Dict[str, Any], shape: ShapeSpec, mesh, cfg
+                 ) -> Dict[str, Any]:
+    """Per-shape rule adjustments on top of per-arch rules."""
+    rules = dict(rules)
+    if shape.kind == "train" and rules.get("seq") is None:
+        # Sequence-parallel residual stream for every training cell: the
+        # remat-saved layer boundaries shard over the model axis (Megatron
+        # SP); _layer_forward's enter_tp/exit_tp gathers activations, not
+        # weights, at region boundaries.
+        rules["seq"] = "model"
+    if shape.name == "long_500k":
+        # batch=1 is unshardable; shard the KV-cache sequence instead.
+        rules["batch"] = None
+    if shape.kind in ("decode", "prefill"):
+        # Shard the KV cache over the model axis: heads when they divide it,
+        # otherwise the sequence dimension (flash-decode style; GSPMD
+        # inserts the partial-softmax combine).  MLA's latent cache has no
+        # heads dimension, so it always seq-shards.
+        if (cfg.mixer == "mla" or rules.get("cache_heads") != "model") \
+                and rules.get("cache_seq") is None:
+            rules["cache_seq"] = "model"
+    return rules
+
+
+def _n_micro(cfg, shape: ShapeSpec, mesh) -> int:
+    per_shard = shape.global_batch // dp_degree(mesh)
+    mb = cfg.microbatch or max(1, 8192 // shape.seq_len)
+    mb = min(mb, per_shard)
+    return max(1, per_shard // mb)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               compile_: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    runnable, reason = cell_is_runnable(cfg, shape)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if not runnable:
+        result["status"] = "SKIP"
+        result["reason"] = reason
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build(cfg)
+    rules = _shape_rules(train_lib.make_rules(cfg, mesh), shape, mesh, cfg)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        specs = model.param_specs()
+        p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               param_sharding(specs, rules))
+        b_specs = input_specs(cfg, shape)
+        b_shard = batch_shardings(cfg, shape, mesh, rules)
+
+        if shape.kind == "train":
+            n_micro = _n_micro(cfg, shape, mesh)
+            result["n_micro"] = n_micro
+            step = train_lib.make_train_step(
+                model, cfg, rules, optim.AdamWConfig(), n_micro=n_micro)
+            state = train_lib.abstract_state(model)
+            s_shard = train_lib.state_shardings(specs, rules, mesh)
+            jitted = jax.jit(step, in_shardings=(s_shard, b_shard),
+                             out_shardings=(s_shard, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, b_specs)
+        elif shape.kind == "prefill":
+            params = param_shapes(specs, dtype=jnp.bfloat16)
+            cache = serve_lib.abstract_cache(model, shape.global_batch,
+                                             shape.seq_len)
+            c_shard = serve_lib.cache_shardings(cache, mesh, rules)
+            step = serve_lib.make_prefill_step(model, rules)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard, c_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params, b_specs, cache)
+        else:  # decode
+            params = param_shapes(specs, dtype=jnp.bfloat16)
+            cache = serve_lib.abstract_cache(model, shape.global_batch,
+                                             shape.seq_len)
+            c_shard = serve_lib.cache_shardings(cache, mesh, rules)
+            step = serve_lib.make_decode_step(model, rules)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, c_shard,
+                                           b_shard["tokens"]),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, cache, b_specs["tokens"])
+
+        result["lower_s"] = round(time.time() - t0, 1)
+        if not compile_:
+            result["status"] = "LOWERED"
+            return result
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        result["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                / 2**30, 3),
+        }
+        ca = compiled.cost_analysis() or {}
+        result["cost"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        hlo = compiled.as_text()
+        result["collectives"] = collective_bytes(hlo)
+        result["remat_dup"] = round(remat_duplication(hlo), 3)
+        result["hlo_lines"] = hlo.count("\n")
+        result["status"] = "OK"
+    return result
+
+
+def run_cells(archs, shapes, meshes, out_dir: Optional[str],
+              compile_: bool = True) -> list:
+    results = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = (f"{arch}|{shape_name}|"
+                       f"{'2x16x16' if multi_pod else '16x16'}")
+                try:
+                    r = lower_cell(arch, shape_name, multi_pod, compile_)
+                except Exception as e:  # a failing cell is a bug: surface it
+                    r = {"arch": arch, "shape": shape_name,
+                         "mesh": "2x16x16" if multi_pod else "16x16",
+                         "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                print(f"[{r['status']:7s}] {tag} "
+                      + (f"compile={r.get('compile_s')}s "
+                         f"peak={r.get('memory', {}).get('peak_per_device_gib')}GiB"
+                         if r["status"] == "OK" else r.get("reason",
+                                                           r.get("error", ""))[:120]),
+                      flush=True)
+                results.append(r)
+                if out_dir:
+                    os.makedirs(out_dir, exist_ok=True)
+                    fname = tag.replace("|", "_").replace("/", "-") + ".json"
+                    with open(os.path.join(out_dir, fname), "w") as f:
+                        json.dump({k: v for k, v in r.items()
+                                   if k != "trace"}, f, indent=1)
+                gc.collect()
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = run_cells(archs, shapes, meshes, args.out_dir,
+                        compile_=not args.no_compile)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n== dry-run: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL "
+          f"of {len(results)} cells ==")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

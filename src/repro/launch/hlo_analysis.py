@@ -1,0 +1,78 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+cost_analysis() gives FLOPs and HBM bytes but NOT collective traffic, so we
+parse the (optimized, partitioned) HLO and sum the result-shape bytes of
+every collective op.  Result-shape bytes are the per-device payload the
+interconnect must deliver for that op — the standard first-order proxy
+(ring all-reduce moves 2x(N-1)/N ~ 2x of the shard payload; we report raw
+payload and note the convention in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[2048,1408]{1,0} all-reduce(...)
+#       ROOT %tuple ... (bf16[4,8]{...}, f32[2]{...}) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>" + "|".join(COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dtype")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device result bytes of each collective op kind.
+
+    `-start/-done` async pairs are counted once (on -start; -done has the
+    same tuple shape and is skipped).
+    """
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out[op] += _shape_bytes(m.group("shapes"))
+        counts[op] += 1
+    out_total = dict(out)
+    out_total["total"] = float(sum(out.values()))
+    out_total.update({f"{k}_count": float(v) for k, v in counts.items()})
+    return out_total
+
+
+def remat_duplication(hlo_text: str) -> float:
+    """Crude remat-waste signal: ratio of fusion ops to unique fusion names.
+    ~1.0 means no visible duplicate recompute clusters."""
+    names = re.findall(r"%(fusion[\w.]*)", hlo_text)
+    if not names:
+        return 1.0
+    return len(names) / max(1, len(set(names)))

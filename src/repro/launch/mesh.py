@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (tests see one CPU device; only the dry-run process
+sets the 512-device XLA flag before its first jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for elastic rungs / tests."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that carry data parallelism (pod + data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def dp_degree(mesh) -> int:
+    out = 1
+    for a in data_axes(mesh):
+        out *= mesh.shape[a]
+    return out

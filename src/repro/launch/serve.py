@@ -1,0 +1,101 @@
+"""Serving step construction: decode / prefill functions + cache shardings."""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Pytree = Any
+
+
+def make_decode_step(model, rules=None):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, rules)
+    return decode_step
+
+
+def make_prefill_step(model, rules=None):
+    def prefill_step(params, batch, cache):
+        if model.cfg.is_encdec:
+            # enc-dec prefill: encode + teacher-forced decoder pass.
+            cache = model.start_cache(params, batch["frames"], cache)
+            logits, _ = model.forward(params, batch, rules)
+            return logits[:, -1], cache
+        return model.prefill(params, batch, cache, rules)
+    return prefill_step
+
+
+def abstract_cache(model, batch_size: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> Pytree:
+    """ShapeDtypeStruct cache for the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(batch_size=batch_size, max_seq=max_seq,
+                                 dtype=dtype))
+
+
+def _cache_spec(key: str, ndim: int, rules: Mapping[str, Any]) -> P:
+    """PartitionSpec for one cache leaf, by key name + rank.
+
+    Layout conventions (models/transformer.py, models/encdec.py):
+      k, v            (B, S, KH, D)    [+leading L when stacked]
+      kv_pos          (B, S)           [+L]
+      c_kv, k_rope    (B, S, R)        [+L]
+      wkv             (B, H, K, V)     [+L]
+      shift           (B, D)           [+L]
+      conv            (B, K-1, E)      [+L]
+      ssm             (B, E, N)        [+L]
+      self_k/v, cross_k/v (L, B, S, H, D)   (whisper; always stacked)
+      index           scalar [+L]
+      slot_pos        (B,)
+    """
+    b = rules.get("batch")
+    seq = rules.get("cache_seq")
+    heads = rules.get("cache_heads")
+    mlp = rules.get("act_mlp")
+    base = {
+        "k": (4, P(b, seq, heads, None)),
+        "v": (4, P(b, seq, heads, None)),
+        "kv_pos": (2, P(b, seq)),
+        "c_kv": (3, P(b, seq, None)),
+        "k_rope": (3, P(b, seq, None)),
+        "wkv": (4, P(b, heads, None, None)),
+        "shift": (2, P(b, None)),
+        "conv": (3, P(b, None, mlp)),
+        "ssm": (3, P(b, mlp, None)),
+        "self_k": (4, P(b, seq, heads, None)),
+        "self_v": (4, P(b, seq, heads, None)),
+        # cross-attention K/V cover enc_seq (1500 frames) — not a power of
+        # two, so never sharded on seq.
+        "cross_k": (4, P(b, None, heads, None)),
+        "cross_v": (4, P(b, None, heads, None)),
+        "slot_pos": (1, P(b)),
+        "index": (0, P()),
+    }
+    if key not in base:
+        return P()
+    rank, spec = base[key]
+    if ndim == rank:
+        return spec
+    if ndim == rank + 1:                      # stacked over layers
+        return P(*((None,) + tuple(spec)))
+    return P()
+
+
+def cache_shardings(cache_shapes: Pytree, mesh, rules) -> Pytree:
+    """NamedShardings for every cache leaf (same tree structure)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in flat:
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = str(p.key)
+                break
+        spec = _cache_spec(key or "", getattr(leaf, "ndim", 0), rules)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

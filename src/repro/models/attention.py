@@ -1,0 +1,296 @@
+"""Attention mixers: GQA (full / sliding-window / partial-RoPE / M-RoPE /
+qk-norm / logit-softcap), blockwise (memory-bounded) attention, and MLA
+(DeepSeek-V2 multi-head latent attention with compressed KV cache).
+
+All functions are pure; parameters are dict pytrees built from ParamSpecs in
+transformer.py.  Softmax statistics are computed in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: jax.Array, rot_dim: int, theta: float
+               ) -> Tuple[jax.Array, jax.Array]:
+    """sin/cos tables: positions (...,) -> (..., rot_dim/2)."""
+    freqs = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    inv = 1.0 / (theta ** freqs)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 1e4,
+               rot_frac: float = 1.0) -> jax.Array:
+    """Rotate the first rot_frac of head_dim. x: (B, S, H, D); pos: (B, S)."""
+    d = x.shape[-1]
+    rot = int(d * rot_frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    sin, cos = rope_table(positions, rot, theta)        # (B, S, rot/2)
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: Tuple[int, ...],
+                *, theta: float = 1e6) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions: (3, B, S) = (temporal, height, width) ids.
+    `sections` gives the per-component split of D/2 frequency slots, e.g.
+    (16, 24, 24) for D=128.
+    """
+    d = x.shape[-1]
+    if sum(sections) * 2 != d:
+        raise ValueError(f"mrope sections {sections} do not tile head_dim {d}")
+    sin_full, cos_full = [], []
+    for comp, sec in enumerate(sections):
+        # Frequency slots owned by this component use its position stream.
+        s, c = rope_table(positions[comp], d, theta)     # (B, S, d/2)
+        sin_full.append(s)
+        cos_full.append(c)
+    # Select per-slot component: slots are laid out section-by-section.
+    import numpy as _np
+    comp_of_slot = _np.repeat(_np.arange(len(sections)),
+                              _np.asarray(sections))      # (d/2,) static
+    slot = _np.arange(d // 2)
+    sin = jnp.stack(sin_full, 0)[comp_of_slot, :, :, slot]
+    cos = jnp.stack(cos_full, 0)[comp_of_slot, :, :, slot]
+    # -> (d/2, B, S) ; bring to (B, S, 1, d/2)
+    sin = jnp.moveaxis(sin, 0, -1)[:, :, None, :]
+    cos = jnp.moveaxis(cos, 0, -1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mask construction
+# ---------------------------------------------------------------------------
+
+
+def make_mask(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool = True,
+              window: Optional[int] = None,
+              kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Boolean (..., Sq, Skv) mask; True = attend.
+
+    q_pos: (B, Sq) token positions of queries; kv_pos: (B, Skv).
+    window: sliding-window size (attend iff q_pos - kv_pos < window).
+    kv_len: (B,) valid cache length for decode.
+    """
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= (q - k) < window
+    if kv_len is not None:
+        m &= k < kv_len[:, None, None]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Core attention (GQA, optionally blockwise over KV)
+# ---------------------------------------------------------------------------
+
+
+def _scores(q, k, scale, softcap):
+    # q: (B, Sq, G, KH, D) k: (B, Skv, KH, D)
+    s = jnp.einsum("bqghd,bkhd->bghqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array, *, scale: Optional[float] = None,
+                  softcap: Optional[float] = None,
+                  kv_chunk: Optional[int] = None,
+                  q_chunk: int = 4096) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, KH, Dv); mask: (B, Sq, Skv) bool.
+    Returns (B, Sq, H, Dv).  When kv_chunk is set and divides Skv, the KV
+    axis is processed in chunks with online-softmax running statistics, and
+    long query axes are additionally processed q_chunk rows at a time, so
+    peak memory is O(q_chunk * kv_chunk) rather than O(Sq * Skv).
+    """
+    b, sq, h, d = q.shape
+    if kv_chunk and sq > q_chunk and sq % q_chunk == 0:
+        nq = sq // q_chunk
+        qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, d), 1, 0)
+        ms = jnp.moveaxis(mask.reshape(b, nq, q_chunk, -1), 1, 0)
+        outs = jax.lax.map(
+            lambda args: gqa_attention(args[0], k, v, args[1], scale=scale,
+                                       softcap=softcap, kv_chunk=kv_chunk,
+                                       q_chunk=q_chunk),
+            (qs, ms))
+        return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, v.shape[3])
+    kh = k.shape[2]
+    dv = v.shape[3]
+    if h % kh:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kh}")
+    g = h // kh
+    qg = q.reshape(b, sq, g, kh, d)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    if not kv_chunk or k.shape[1] % kv_chunk or k.shape[1] <= kv_chunk:
+        s = _scores(qg, k, scale, softcap)              # (B,G,KH,Sq,Skv)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bghqk,bkhd->bqghd", p, v.astype(jnp.float32))
+        return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+    # Blockwise over KV with running max/denominator (online softmax).
+    nchunks = k.shape[1] // kv_chunk
+    kc = k.reshape(b, nchunks, kv_chunk, kh, d)
+    vc = v.reshape(b, nchunks, kv_chunk, kh, dv)
+    mc = mask.reshape(b, sq, nchunks, kv_chunk)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        k_i, v_i, mask_i = xs                            # (B,C,KH,D) ...
+        s = _scores(qg, k_i, scale, softcap)             # (B,G,KH,Sq,C)
+        s = jnp.where(mask_i[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        # Masked slots contribute exactly zero even in fully-masked chunks
+        # (where s == m_new == NEG_INF and the naive exp would give 1).
+        p = jnp.where(mask_i[:, None, None],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bghqk,bkhd->bghqd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, g, kh, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, g, kh, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, kh, sq, dv), jnp.float32)
+    xs = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+          jnp.moveaxis(mc, 2, 0))
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+    o = acc / jnp.maximum(l_f[..., None], 1e-37)
+    o = jnp.moveaxis(o, 3, 1).reshape(b, sq, h, dv)      # (B,Sq,G,KH,Dv)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Projection helpers (GQA)
+# ---------------------------------------------------------------------------
+
+
+def qkv_project(x: jax.Array, p: Dict) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    return q, k, v
+
+
+def out_project(o: jax.Array, p: Dict) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def maybe_qk_norm(q, k, p, eps=1e-6):
+    """Per-head RMS norm of q and k (gemma3)."""
+    if "q_norm" not in p:
+        return q, k
+
+    def _n(t, s):
+        tf = t.astype(jnp.float32)
+        var = jnp.mean(jnp.square(tf), -1, keepdims=True)
+        return (tf * jax.lax.rsqrt(var + eps) * s.astype(jnp.float32)
+                ).astype(t.dtype)
+    return _n(q, p["q_norm"]), _n(k, p["k_norm"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed-KV attention
+# ---------------------------------------------------------------------------
+
+
+def mla_forward(x: jax.Array, p: Dict, positions: jax.Array, *,
+                num_heads: int, qk_nope: int, qk_rope: int, v_dim: int,
+                rope_theta: float, mask: jax.Array,
+                kv_chunk: Optional[int] = None,
+                cache: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    """Multi-head latent attention.
+
+    Cache (decode) stores only (c_kv, k_rope): kv_lora + qk_rope floats per
+    token per layer — the paper-adjacent "layout" trick that makes MLA's KV
+    cache ~an order of magnitude smaller than GQA's.
+
+    Returns (attn_out (B,S,D_model), new_cache_entries).
+    """
+    b, s, _ = x.shape
+    # Queries.
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])          # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, theta=rope_theta)
+
+    # Compressed KV + shared rope key.
+    c_kv = jnp.einsum("bsd,dc->bsc", x, p["w_dkv"])      # (B,S,kv_lora)
+    c_kv = _rms(c_kv, p["kv_norm"])
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"])     # (B,S,rope)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        theta=rope_theta)[:, :, 0]
+
+    if cache is not None:
+        idx = cache["index"]
+        if s == 1:
+            # Per-slot positional write (continuous batching).
+            rows = jnp.arange(b)
+            at = positions[:, 0].astype(jnp.int32)
+            c_full = cache["c_kv"].at[rows, at].set(
+                c_kv[:, 0].astype(cache["c_kv"].dtype))
+            kr_full = cache["k_rope"].at[rows, at].set(
+                k_rope[:, 0].astype(cache["k_rope"].dtype))
+        else:
+            c_full = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
+            kr_full = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, idx, 0))
+        new_cache = {"c_kv": c_full, "k_rope": kr_full, "index": idx + s}
+        c_use, kr_use = c_full, kr_full
+    else:
+        new_cache = {}
+        c_use, kr_use = c_kv, k_rope
+
+    # Expand keys/values from the latent (absorbable at decode; baseline
+    # expands explicitly — see launch/perf notes).
+    k_nope = jnp.einsum("bsc,chk->bshk", c_use, p["w_uk"])
+    v = jnp.einsum("bsc,chk->bshk", c_use, p["w_uv"])
+    kh = k_nope.shape[2]
+    kr_b = jnp.broadcast_to(kr_use[:, :, None, :],
+                            kr_use.shape[:2] + (kh, qk_rope))
+    k = jnp.concatenate([k_nope, kr_b], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+    o = gqa_attention(q_full, k, v, mask, scale=scale, kv_chunk=kv_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,212 @@
+"""Shared model substrate: parameter specs, logical-axis sharding, norms.
+
+Sharding follows the MaxText convention: every parameter and activation is
+annotated with *logical* axis names; a per-run `ShardingRules` table maps
+logical names to mesh axes ("pod", "data", "model" — see launch/mesh.py).
+FSDP is expressed by mapping a weight's `embed` (or widest) logical axis to
+the `data` mesh axis; GSPMD then inserts the per-layer all-gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh axis rules
+# ---------------------------------------------------------------------------
+
+# Default rules for the production mesh ("pod", "data", "model").  A rule
+# value may be None (replicated), a mesh-axis name, or a tuple of names.
+DEFAULT_RULES: Dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,             # residual-stream seq sharding ("model") = SP
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_exp": "model",
+    "cache_seq": None,
+    "cache_heads": "model",
+    # parameters
+    "embed": "data",         # FSDP axis
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "kv_lora": None,
+    "conv": None,
+    "state": None,
+    "layers": None,
+    "act_vocab": "model",
+}
+
+
+def resolve(rules: Mapping[str, Any], axes: Sequence[Optional[str]]) -> P:
+    """Translate logical axes to a PartitionSpec via the rules table."""
+    spec = []
+    for ax in axes:
+        if ax is None:
+            spec.append(None)
+        else:
+            if ax not in rules:
+                raise KeyError(f"no sharding rule for logical axis {ax!r}")
+            spec.append(rules[ax])
+    # Drop trailing Nones for tidier specs.
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def logical_constraint(x: jax.Array, rules: Mapping[str, Any],
+                       *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, resolve(rules, axes))
+    except (ValueError, RuntimeError):
+        # No mesh in scope (unit tests on a single device): keep the value.
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _init_leaf(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        # 1/sqrt(d_model): unit-variance activations after the sqrt(d)
+        # embed_scale, and O(1) logits under tied embeddings.
+        std = 1.0 / math.sqrt(spec.shape[-1])
+        return (jax.random.normal(key, spec.shape, jnp.float32)
+                * std * spec.scale).astype(dtype)
+    # fan-in scaled normal
+    fan_in = spec.shape[0] if len(spec.shape) >= 1 else 1
+    if len(spec.shape) >= 2:
+        fan_in = math.prod(spec.shape[:-1]) if spec.init == "small" \
+            else spec.shape[0]
+    std = spec.scale / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(key: jax.Array, specs: Pytree, dtype=jnp.bfloat16) -> Pytree:
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_axes(specs: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_shapes(specs: Pytree, dtype=jnp.bfloat16) -> Pytree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs: Pytree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_sharding(specs: Pytree, rules: Mapping[str, Any]) -> Pytree:
+    return jax.tree.map(lambda s: resolve(rules, s.axes), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if plus_one:
+        s = s + 1.0
+    return (y * s).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array],
+               *, eps: float = 1e-5, plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if plus_one:
+        s = s + 1.0     # nemotron "layernorm1p"
+    y = y * s
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p.get("bias"))
+    if kind == "layernorm1p":
+        return layer_norm(x, p["scale"], p.get("bias"), plus_one=True)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def norm_spec(d: int, kind: str) -> Dict[str, ParamSpec]:
+    if kind == "rms":
+        return {"scale": ParamSpec((d,), ("act_embed",), "ones")}
+    if kind in ("layernorm", "layernorm1p"):
+        init = "zeros" if kind == "layernorm1p" else "ones"
+        return {"scale": ParamSpec((d,), ("act_embed",), init),
+                "bias": ParamSpec((d,), ("act_embed",), "zeros")}
+    raise ValueError(kind)
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    "relu": jax.nn.relu,
+}
+
+
+def stack_specs(spec: Pytree, n: int) -> Pytree:
+    """Prepend a `layers` axis to every ParamSpec (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale),
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))

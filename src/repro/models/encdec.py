@@ -1,0 +1,234 @@
+"""Encoder-decoder transformer (Whisper-style) — audio backbone.
+
+The conv frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, enc_seq, d_model).  Encoder: bidirectional
+self-attention with sinusoidal positions.  Decoder: causal self-attention
+(+ KV cache) and cross-attention to the encoder output (cross K/V
+precomputed once at prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (ACTIVATIONS, ParamSpec, apply_norm,
+                                 logical_constraint, norm_spec, stack_specs)
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, f: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"w_up": ParamSpec((d, f), ("embed", "mlp")),
+            "w_down": ParamSpec((f, d), ("mlp", "embed"))}
+
+
+def _enc_layer(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": norm_spec(cfg.d_model, cfg.norm),
+            "attn": _attn_specs(cfg),
+            "ln2": norm_spec(cfg.d_model, cfg.norm),
+            "mlp": _mlp_specs(cfg, cfg.enc_dec.enc_d_ff)}
+
+
+def _dec_layer(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": norm_spec(cfg.d_model, cfg.norm),
+            "self_attn": _attn_specs(cfg),
+            "ln_x": norm_spec(cfg.d_model, cfg.norm),
+            "cross_attn": _attn_specs(cfg),
+            "ln2": norm_spec(cfg.d_model, cfg.norm),
+            "mlp": _mlp_specs(cfg, cfg.d_ff)}
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    ed = cfg.enc_dec
+    return {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           "embed"),
+        "dec_pos": ParamSpec((cfg.max_seq_len, cfg.d_model),
+                             (None, "embed"), "embed", scale=0.02),
+        "enc_layers": stack_specs(_enc_layer(cfg), ed.enc_layers),
+        "enc_final_norm": norm_spec(cfg.d_model, cfg.norm),
+        "dec_layers": stack_specs(_dec_layer(cfg), cfg.num_layers),
+        "final_norm": norm_spec(cfg.d_model, cfg.norm),
+    }
+
+
+def _sinusoid(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mha(x, p, mask, kv=None, kv_chunk=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = x if kv is None else kv
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    o = attn.gqa_attention(q, k, v, mask, kv_chunk=kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _mha_cached(x, p, mask, k, v):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    o = attn.gqa_attention(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    cfg: ModelConfig
+
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    # -- encoder ---------------------------------------------------------
+    def encode(self, params, frames, rules=None):
+        cfg = self.cfg
+        b, s, _ = frames.shape
+        x = frames.astype(params["embed"].dtype)
+        x = x + _sinusoid(s, cfg.d_model).astype(x.dtype)[None]
+        full = jnp.ones((b, s, s), bool)
+        if rules is not None:
+            x = logical_constraint(x, rules, "batch", None, "act_embed")
+            full = logical_constraint(full, rules, "batch", None, None)
+
+        def body(h, lp):
+            if rules is not None:
+                h = logical_constraint(h, rules, "batch", None, "act_embed")
+            y = apply_norm(h, lp["ln1"], cfg.norm)
+            h = h + _mha(y, lp["attn"], full, kv_chunk=cfg.attn_kv_chunk)
+            y = apply_norm(h, lp["ln2"], cfg.norm)
+            up = jnp.einsum("bsd,df->bsf", y, lp["mlp"]["w_up"])
+            h = h + jnp.einsum("bsf,fd->bsd", ACTIVATIONS["gelu"](up),
+                               lp["mlp"]["w_down"])
+            return h, None
+
+        body_fn = jax.checkpoint(body, prevent_cse=False) \
+            if cfg.remat != "none" else body
+        x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+        return apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+    # -- decoder (teacher-forced training / prefill) ----------------------
+    def forward(self, params, batch, rules=None):
+        """batch: {tokens (B,S), frames (B,enc_seq,D)} -> (logits, aux)."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], rules)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        x = x + params["dec_pos"][:s][None].astype(x.dtype)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        causal = attn.make_mask(pos, pos)
+        xs_full = jnp.ones((b, s, enc.shape[1]), bool)
+        if rules is not None:
+            x = logical_constraint(x, rules, "batch", None, "act_embed")
+            causal = logical_constraint(causal, rules, "batch", None, None)
+            xs_full = logical_constraint(xs_full, rules, "batch", None, None)
+
+        def body(h, lp):
+            if rules is not None:
+                h = logical_constraint(h, rules, "batch", None, "act_embed")
+            y = apply_norm(h, lp["ln1"], cfg.norm)
+            h = h + _mha(y, lp["self_attn"], causal,
+                         kv_chunk=cfg.attn_kv_chunk)
+            y = apply_norm(h, lp["ln_x"], cfg.norm)
+            h = h + _mha(y, lp["cross_attn"], xs_full, kv=enc)
+            y = apply_norm(h, lp["ln2"], cfg.norm)
+            up = jnp.einsum("bsd,df->bsf", y, lp["mlp"]["w_up"])
+            h = h + jnp.einsum("bsf,fd->bsd", ACTIVATIONS["gelu"](up),
+                               lp["mlp"]["w_down"])
+            return h, None
+
+        body_fn = jax.checkpoint(body, prevent_cse=False) \
+            if cfg.remat != "none" else body
+        x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]).astype(jnp.float32)
+        if rules is not None:
+            logits = logical_constraint(logits, rules, "batch", None,
+                                        "act_vocab")
+        return logits, 0.0
+
+    # -- decode ------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        ed = cfg.enc_dec
+        L, h, hd = cfg.num_layers, cfg.num_heads, cfg.head_dim
+        return {
+            "self_k": jnp.zeros((L, batch_size, max_seq, h, hd), dtype),
+            "self_v": jnp.zeros((L, batch_size, max_seq, h, hd), dtype),
+            "cross_k": jnp.zeros((L, batch_size, ed.enc_seq, h, hd), dtype),
+            "cross_v": jnp.zeros((L, batch_size, ed.enc_seq, h, hd), dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def start_cache(self, params, frames, cache, rules=None):
+        """Encode once and precompute cross-attention K/V."""
+        enc = self.encode(params, frames, rules)
+
+        def per_layer(lp):
+            k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"])
+            return k, v
+
+        ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+        return {**cache, "cross_k": ks.astype(cache["cross_k"].dtype),
+                "cross_v": vs.astype(cache["cross_v"].dtype)}
+
+    def decode_step(self, params, cache, tokens, rules=None):
+        cfg = self.cfg
+        idx = cache["index"]
+        b = tokens.shape[0]
+        x = params["embed"][tokens]
+        x = x + jax.lax.dynamic_slice(
+            params["dec_pos"], (idx, 0), (1, cfg.d_model))[None].astype(x.dtype)
+        pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+        slots = cache["self_k"].shape[2]
+        kv_pos = jnp.broadcast_to(jnp.arange(slots, dtype=jnp.int32)[None],
+                                  (b, slots))
+        self_mask = attn.make_mask(pos, kv_pos)
+        cross_mask = jnp.ones((b, 1, cache["cross_k"].shape[2]), bool)
+
+        def body(h, xs):
+            lp, sk, sv, ck, cv = xs
+            y = apply_norm(h, lp["ln1"], cfg.norm)
+            kq = jnp.einsum("bsd,dhk->bshk", y, lp["self_attn"]["wk"])
+            vq = jnp.einsum("bsd,dhk->bshk", y, lp["self_attn"]["wv"])
+            sk = jax.lax.dynamic_update_slice(
+                sk, kq.astype(sk.dtype), (0, idx, 0, 0))
+            sv = jax.lax.dynamic_update_slice(
+                sv, vq.astype(sv.dtype), (0, idx, 0, 0))
+            h = h + _mha_cached(y, lp["self_attn"], self_mask, sk, sv)
+            y = apply_norm(h, lp["ln_x"], cfg.norm)
+            h = h + _mha_cached(y, lp["cross_attn"], cross_mask, ck, cv)
+            y = apply_norm(h, lp["ln2"], cfg.norm)
+            up = jnp.einsum("bsd,df->bsf", y, lp["mlp"]["w_up"])
+            h = h + jnp.einsum("bsf,fd->bsd", ACTIVATIONS["gelu"](up),
+                               lp["mlp"]["w_down"])
+            return h, (sk, sv)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]).astype(jnp.float32)
+        new_cache = {**cache, "self_k": new_k, "self_v": new_v,
+                     "index": idx + 1}
+        return logits[:, -1], new_cache

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based einsum dispatch.
+
+GSPMD-style dense dispatch (one-hot combine tensors, no gather/scatter):
+tokens are routed to `capacity` slots per expert; the expert axis is sharded
+over the `model` mesh axis when the expert count divides it (expert
+parallelism, deepseek 64/16=4), otherwise the expert FFN width is sharded
+(expert tensor parallelism, qwen2-moe 60 experts -> d_ff/16).  Shared
+experts (qwen2-moe: 4, deepseek: 2) run densely for every token and are
+fused into one wide FFN.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    num_shared: int = 0
+    shared_d_ff: int = 0            # total width of the fused shared FFN
+    capacity_factor: float = 1.25
+    normalize_weights: bool = True  # renormalize top-k gates to sum to 1
+    routed_scale: float = 1.0
+    expert_sharding: str = "ep"     # "ep" | "tp" (see module docstring)
+    aux_loss_coef: float = 0.001
+
+    @property
+    def padded_experts(self) -> int:
+        return self.num_experts
+
+
+def capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = int(cfg.capacity_factor * tokens * cfg.top_k / cfg.num_experts)
+    return max(cap, cfg.top_k, 1)
+
+
+def route(logits: jax.Array, cfg: MoEConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing with capacity.
+
+    logits: (T, E).  Returns (dispatch (T, E, C) bool-ish float,
+    combine (T, E, C) float, aux_loss scalar).
+    """
+    t = logits.shape[0]
+    e = cfg.num_experts
+    c = capacity(t, cfg)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)      # (T, K)
+    if cfg.normalize_weights:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+    gate_vals = gate_vals * cfg.routed_scale
+
+    # Position of each (token, k) assignment in its expert's buffer.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)     # (T, K, E)
+    # Priority: k-th choice of earlier tokens first (standard GSPMD order).
+    flat = onehot.transpose(1, 0, 2).reshape(cfg.top_k * t, e)  # (K*T, E)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat                  # slots used
+    pos = pos_flat.reshape(cfg.top_k, t, e).transpose(1, 0, 2)  # (T, K, E)
+    within_cap = (pos < c) & (onehot > 0)
+
+    slot_onehot = jax.nn.one_hot(
+        jnp.sum(pos * onehot, -1).astype(jnp.int32), c,
+        dtype=jnp.float32)                                      # (T, K, C)
+    keep = within_cap.any(-1, keepdims=False)                   # (T, K)
+    dispatch = jnp.einsum("tke,tkc->tec",
+                          onehot * keep[..., None], slot_onehot)
+    combine = jnp.einsum("tke,tkc->tec",
+                         onehot * (gate_vals * keep)[..., None], slot_onehot)
+
+    # Load-balancing auxiliary loss (Switch/GShard form).
+    me = probs.mean(0)                                          # (E,)
+    ce = onehot.sum(1).mean(0)                                  # frac routed
+    aux = cfg.aux_loss_coef * e * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
+def _expert_ffn(xe: jax.Array, p: Dict, act) -> jax.Array:
+    """xe: (E, C', d_model) -> (E, C', d_model); gated (SwiGLU-style)."""
+    h_g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    h_u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = act(h_g) * h_u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+GROUP_SIZE = 2048
+
+
+def moe_ffn(x: jax.Array, p: Dict, cfg: MoEConfig, act,
+            group_size: int = GROUP_SIZE) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D). Returns (out, aux_loss).
+
+    Tokens are routed in groups of `group_size` (GShard-style): capacity —
+    and with it the (tokens, E, C) dispatch tensors — scales with the GROUP,
+    not the full batch.  Without grouping the dispatch tensor is quadratic
+    in tokens (1.25·k·T²) and a 32k-seq prefill would need terabytes.
+    """
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    t = xt.shape[0]
+    gs = min(group_size, t)
+    if t % gs:
+        gs = t          # fall back to one group for odd tiny batches
+    g = t // gs
+    xg = xt.reshape(g, gs, d)
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"])
+    dispatch, combine, aux = jax.vmap(lambda lg: route(lg, cfg))(logits)
+    aux = aux.mean()
+    # (g, gs, E, C) one-hots in compute dtype: values are {0,1} / gate
+    # weights, bf16 is exact for the former and ample for the latter.
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    xe = jnp.einsum("gtec,gtd->egcd", dispatch, xg)
+    e, _, c, _ = xe.shape
+    ye = _expert_ffn(xe.reshape(e, g * c, d), p, act).reshape(e, g, c, d)
+    out = jnp.einsum("egcd,gtec->gtd", ye, combine).reshape(t, d)
+
+    if cfg.num_shared:
+        hg = jnp.einsum("td,df->tf", xt, p["shared_gate"])
+        hu = jnp.einsum("td,df->tf", xt, p["shared_up"])
+        out = out + jnp.einsum("tf,fd->td", act(hg) * hu, p["shared_down"])
+    return out.reshape(b, s, d), aux

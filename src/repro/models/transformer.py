@@ -1,0 +1,818 @@
+"""Unified decoder-only LM covering all assigned decoder architectures.
+
+One implementation, configured entirely by `ModelConfig`:
+
+  mixer:  GQA (full / sliding-window / M-RoPE / partial-RoPE / qk-norm /
+          softcap), MLA (deepseek), RWKV6 (attn-free), Hymba (parallel
+          attention + Mamba heads)
+  ffn:    gated (swiglu/geglu) or plain (gelu/relu2) dense, or MoE with
+          shared experts
+  stack:  homogeneous archs scan over stacked layer params (small HLO,
+          bounded compile memory at 88 layers); heterogeneous archs
+          (gemma3 5:1 local:global, hymba 3 global layers) unroll so each
+          layer can own its window/cache size.
+
+The decode path maintains a per-layer cache: GQA -> (k, v, kv_pos), with a
+ring buffer of `window` slots for local layers; MLA -> compressed
+(c_kv, k_rope); RWKV6/Mamba -> recurrent state (+ token-shift tail).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.common import (ACTIVATIONS, ParamSpec, apply_norm,
+                                 logical_constraint, norm_spec, stack_specs)
+from repro.models.moe import moe_ffn
+
+BIG_WINDOW = 1 << 30     # "no window": causal only
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _gqa_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), "zeros")
+        p["bk"] = ParamSpec((kh, hd), ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = ParamSpec((kh, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+        p["k_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+    return p
+
+
+def _mla_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope + m.qk_rope
+    return {
+        "wq": ParamSpec((d, h, qk), ("embed", "heads", "head_dim")),
+        "w_dkv": ParamSpec((d, m.kv_lora), ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((m.kv_lora,), ("kv_lora",), "ones"),
+        "w_kr": ParamSpec((d, m.qk_rope), ("embed", "head_dim")),
+        "w_uk": ParamSpec((m.kv_lora, h, m.qk_nope),
+                          ("kv_lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((m.kv_lora, h, m.v_dim),
+                          ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, m.v_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _rwkv_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    r = cfg.rwkv
+    h = d // r.head_size
+    k = r.head_size
+    mu = lambda: ParamSpec((d,), ("act_embed",), "zeros")
+    return {
+        "mu_x": mu(), "mu_r": mu(), "mu_k": mu(), "mu_v": mu(),
+        "mu_g": mu(), "mu_w": mu(),
+        "ts_w1": ParamSpec((d, 5, r.ts_rank), ("embed", None, None), "small"),
+        "ts_w2": ParamSpec((5, r.ts_rank, d), (None, None, "act_embed"),
+                           "small"),
+        "w0": ParamSpec((d,), ("act_embed",), "zeros"),
+        "w_lora_a": ParamSpec((d, r.decay_rank), ("embed", None), "small"),
+        "w_lora_b": ParamSpec((r.decay_rank, d), (None, "act_embed"), "small"),
+        "u": ParamSpec((h, k), ("heads", "head_dim"), "zeros"),
+        "wr": ParamSpec((d, h, k), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, h, k), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, h, k), ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((d, d), ("embed", "mlp")),
+        "wo": ParamSpec((d, d), ("mlp", "embed")),
+        "gn_scale": ParamSpec((h, k), ("heads", "head_dim"), "ones"),
+        "gn_bias": ParamSpec((h, k), ("heads", "head_dim"), "zeros"),
+    }
+
+
+def _rwkv_cmix_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("act_embed",), "zeros"),
+        "mu_r": ParamSpec((d,), ("act_embed",), "zeros"),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", "mlp")),
+    }
+
+
+def _mamba_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    m = cfg.mamba
+    e = m.d_inner or d
+    rank = m.dt_rank or max(1, math.ceil(d / 16))
+    n = m.state_size
+    return {
+        "in_proj": ParamSpec((d, 2 * e), ("embed", "mlp")),
+        "conv_w": ParamSpec((m.conv_kernel, e), ("conv", "act_mlp"), "small"),
+        "conv_b": ParamSpec((e,), ("act_mlp",), "zeros"),
+        "x_proj": ParamSpec((e, rank + 2 * n), ("mlp", None)),
+        "dt_proj": ParamSpec((rank, e), (None, "act_mlp"), "small"),
+        "dt_bias": ParamSpec((e,), ("act_mlp",), "ones"),
+        "A_log": ParamSpec((e, n), ("mlp", "state"), "zeros"),
+        "D": ParamSpec((e,), ("mlp",), "ones"),
+        "out_proj": ParamSpec((e, d), ("mlp", "embed")),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if gated:
+        p["w_gate"] = ParamSpec((d, f), ("embed", "mlp"))
+    return p
+
+
+def _moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    m = cfg.moe
+    f = m.expert_d_ff
+    p = {
+        "router": ParamSpec((d, m.num_experts), ("embed", None), "small"),
+        "w_gate": ParamSpec((m.num_experts, d, f),
+                            ("experts", "embed", "expert_mlp")),
+        "w_up": ParamSpec((m.num_experts, d, f),
+                          ("experts", "embed", "expert_mlp")),
+        "w_down": ParamSpec((m.num_experts, f, d),
+                            ("experts", "expert_mlp", "embed")),
+    }
+    if m.num_shared:
+        fs = m.shared_d_ff
+        p["shared_gate"] = ParamSpec((d, fs), ("embed", "mlp"))
+        p["shared_up"] = ParamSpec((d, fs), ("embed", "mlp"))
+        p["shared_down"] = ParamSpec((fs, d), ("mlp", "embed"))
+    return p
+
+
+def _layer_specs(cfg: ModelConfig, layer_idx: int) -> Dict[str, Any]:
+    p: Dict[str, Any] = {"ln1": norm_spec(cfg.d_model, cfg.norm),
+                         "ln2": norm_spec(cfg.d_model, cfg.norm)}
+    if cfg.sandwich_norm:
+        p["ln1_post"] = norm_spec(cfg.d_model, cfg.norm)
+        p["ln2_post"] = norm_spec(cfg.d_model, cfg.norm)
+    if cfg.mixer == "gqa":
+        p["attn"] = _gqa_specs(cfg)
+    elif cfg.mixer == "mla":
+        p["attn"] = _mla_specs(cfg)
+    elif cfg.mixer == "rwkv6":
+        p["attn"] = _rwkv_specs(cfg)
+    elif cfg.mixer == "hymba":
+        p["attn"] = _gqa_specs(cfg)
+        del p["attn"]["wo"]   # fuse_out projects the combined heads
+        p["mamba"] = _mamba_specs(cfg)
+        e = (cfg.mamba.d_inner or cfg.d_model)
+        p["attn_out_norm"] = {"scale": ParamSpec((e,), ("act_mlp",), "ones")}
+        p["mamba_out_norm"] = {"scale": ParamSpec((e,), ("act_mlp",), "ones")}
+        p["fuse_out"] = ParamSpec((e, cfg.d_model), ("mlp", "embed"))
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.mixer == "rwkv6":
+        p["mlp"] = _rwkv_cmix_specs(cfg)
+    elif cfg.moe is not None and layer_idx not in cfg.moe_dense_layers:
+        p["mlp"] = _moe_specs(cfg)
+    elif cfg.moe is not None:
+        p["mlp"] = _mlp_specs(cfg, cfg.dense_d_ff or cfg.d_ff)
+    else:
+        p["mlp"] = _mlp_specs(cfg)
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           "embed"),
+        "final_norm": norm_spec(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"))
+    if cfg.scan_layers and not cfg.moe_dense_layers:
+        specs["layers"] = stack_specs(_layer_specs(cfg, -1), cfg.num_layers)
+    elif cfg.scan_layers:
+        # deepseek: dense prefix layers unscanned + homogeneous scanned rest.
+        n_prefix = len(cfg.moe_dense_layers)
+        specs["prefix_layers"] = [
+            _layer_specs(cfg, i) for i in cfg.moe_dense_layers]
+        specs["layers"] = stack_specs(
+            _layer_specs(cfg, n_prefix), cfg.num_layers - n_prefix)
+    else:
+        specs["layer_list"] = [
+            _layer_specs(cfg, i) for i in range(cfg.num_layers)]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _dense_mlp(x, p, cfg: ModelConfig):
+    act = ACTIVATIONS["silu" if cfg.mlp == "swiglu" else
+                      "gelu" if cfg.mlp in ("geglu", "gelu") else "relu2"]
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def _gqa_forward(x, p, cfg: ModelConfig, positions, *, window, theta,
+                 cache=None, rules=None):
+    b, s, _ = x.shape
+    q, k, v = attn.qkv_project(x, p)
+    if cfg.use_qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    q, k = attn.maybe_qk_norm(q, k, p)
+    if cfg.mrope_sections:
+        q = attn.apply_mrope(q, positions["mrope"], cfg.mrope_sections,
+                             theta=theta)
+        k = attn.apply_mrope(k, positions["mrope"], cfg.mrope_sections,
+                             theta=theta)
+        pos = positions["pos"]
+    else:
+        pos = positions["pos"]
+        q = attn.apply_rope(q, pos, theta=theta, rot_frac=cfg.rope_frac)
+        k = attn.apply_rope(k, pos, theta=theta, rot_frac=cfg.rope_frac)
+    if rules is not None:
+        q = logical_constraint(q, rules, "batch", None, "act_heads", None)
+        k = logical_constraint(k, rules, "batch", None, "cache_heads", None)
+        v = logical_constraint(v, rules, "batch", None, "cache_heads", None)
+
+    if cache is None:
+        mask = attn.make_mask(pos, pos, window=window)
+        o = attn.gqa_attention(q, k, v, mask,
+                               softcap=cfg.logit_softcap,
+                               kv_chunk=cfg.attn_kv_chunk)
+        new_cache = None
+    else:
+        slots = cache["k"].shape[1]
+        if s == 1:
+            # Per-slot ring write: slot b's token lands at pos[b] % slots,
+            # so mixed-progress sequences (continuous batching) coexist.
+            write_at = (pos[:, 0].astype(jnp.int32)) % slots      # (B,)
+            rows = jnp.arange(b)
+            k_full = cache["k"].at[rows, write_at].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_full = cache["v"].at[rows, write_at].set(
+                v[:, 0].astype(cache["v"].dtype))
+            kv_pos = cache["kv_pos"].at[rows, write_at].set(
+                pos[:, 0].astype(jnp.int32))
+        else:
+            # Prefill: keep the last `slots` tokens, each at slot
+            # (token_position % slots) so subsequent decode ring-writes
+            # (index % slots) evict exactly the oldest token.
+            take = min(s, slots)
+            import numpy as _np
+            slot_idx = _np.arange(s - take, s) % slots
+            k_full = jnp.zeros_like(cache["k"]).at[:, slot_idx].set(
+                k[:, -take:].astype(cache["k"].dtype))
+            v_full = jnp.zeros_like(cache["v"]).at[:, slot_idx].set(
+                v[:, -take:].astype(cache["v"].dtype))
+            kv_pos = jnp.full_like(cache["kv_pos"], -1).at[:, slot_idx].set(
+                jnp.broadcast_to(pos[:, -take:], (b, take)).astype(jnp.int32))
+        new_cache = {"k": k_full, "v": v_full, "kv_pos": kv_pos,
+                     "index": cache["index"] + s}
+        if s == 1:
+            mask = attn.make_mask(pos, kv_pos, window=window)
+            mask &= (kv_pos >= 0)[:, None, :]
+            o = attn.gqa_attention(q, k_full, v_full, mask,
+                                   softcap=cfg.logit_softcap,
+                                   kv_chunk=cfg.attn_kv_chunk)
+        else:
+            mask = attn.make_mask(pos, pos, window=window)
+            o = attn.gqa_attention(q, k, v, mask,
+                                   softcap=cfg.logit_softcap,
+                                   kv_chunk=cfg.attn_kv_chunk)
+    return attn.out_project(o, p), new_cache
+
+
+def _mixer_forward(x, p, cfg: ModelConfig, positions, layer_idx_global,
+                   *, window, theta, cache=None, rules=None):
+    if cfg.mixer == "gqa":
+        return _gqa_forward(x, p["attn"], cfg, positions, window=window,
+                            theta=theta, cache=cache, rules=rules)
+    if cfg.mixer == "mla":
+        m = cfg.mla
+        pos = positions["pos"]
+        if cache is None:
+            mask = attn.make_mask(pos, pos, window=window)
+            out, _ = attn.mla_forward(
+                x, p["attn"], pos, num_heads=cfg.num_heads, qk_nope=m.qk_nope,
+                qk_rope=m.qk_rope, v_dim=m.v_dim, rope_theta=cfg.rope_theta,
+                mask=mask, kv_chunk=cfg.attn_kv_chunk)
+            return out, None
+        slots = cache["c_kv"].shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(slots, dtype=jnp.int32)[None],
+                                  (x.shape[0], slots))
+        # MLA cache is positional (no ring): slot i holds token i; causal
+        # masking against the current positions is the only validity needed.
+        mask = attn.make_mask(pos, kv_pos, window=window)
+        out, new = attn.mla_forward(
+            x, p["attn"], pos, num_heads=cfg.num_heads, qk_nope=m.qk_nope,
+            qk_rope=m.qk_rope, v_dim=m.v_dim, rope_theta=cfg.rope_theta,
+            mask=mask, kv_chunk=cfg.attn_kv_chunk, cache=cache)
+        return out, new
+    if cfg.mixer == "rwkv6":
+        h = cfg.d_model // cfg.rwkv.head_size
+        return ssm.rwkv6_time_mix(x, p["attn"], num_heads=h, state=cache)
+    if cfg.mixer == "hymba":
+        return _hymba_fused(x, p, cfg, positions, window=window, theta=theta,
+                            cache=cache, rules=rules)
+    raise ValueError(cfg.mixer)
+
+
+def _hymba_fused(x, p, cfg: ModelConfig, positions, *, window, theta,
+                 cache=None, rules=None):
+    """Hymba: attention heads and Mamba heads in parallel, per-path RMS
+    norm, averaged, then one output projection."""
+    b, s, _ = x.shape
+    pa = dict(p["attn"])
+    # attention to flat head outputs (no wo: fuse_out plays that role).
+    q, k, v = attn.qkv_project(x, pa)
+    q = attn.apply_rope(q, positions["pos"], theta=theta,
+                        rot_frac=cfg.rope_frac)
+    k = attn.apply_rope(k, positions["pos"], theta=theta,
+                        rot_frac=cfg.rope_frac)
+    a_cache = cache["attn"] if cache is not None else None
+    if a_cache is None:
+        mask = attn.make_mask(positions["pos"], positions["pos"],
+                              window=window)
+        o = attn.gqa_attention(q, k, v, mask, kv_chunk=cfg.attn_kv_chunk)
+        a_new = None
+    else:
+        slots = a_cache["k"].shape[1]
+        if s == 1:
+            write_at = (positions["pos"][:, 0].astype(jnp.int32)) % slots
+            rows = jnp.arange(b)
+            k_full = a_cache["k"].at[rows, write_at].set(
+                k[:, 0].astype(a_cache["k"].dtype))
+            v_full = a_cache["v"].at[rows, write_at].set(
+                v[:, 0].astype(a_cache["v"].dtype))
+            kv_pos = a_cache["kv_pos"].at[rows, write_at].set(
+                positions["pos"][:, 0].astype(jnp.int32))
+            mask = attn.make_mask(positions["pos"], kv_pos, window=window)
+            mask &= (kv_pos >= 0)[:, None, :]
+            o = attn.gqa_attention(q, k_full, v_full, mask)
+        else:
+            take = min(s, slots)
+            k_full = jnp.zeros_like(a_cache["k"]).at[:, :take].set(
+                k[:, -take:].astype(a_cache["k"].dtype))
+            v_full = jnp.zeros_like(a_cache["v"]).at[:, :take].set(
+                v[:, -take:].astype(a_cache["v"].dtype))
+            kv_pos = jnp.full_like(a_cache["kv_pos"], -1).at[:, :take].set(
+                jnp.broadcast_to(positions["pos"][:, -take:],
+                                 (b, take)).astype(jnp.int32))
+            mask = attn.make_mask(positions["pos"], positions["pos"],
+                                  window=window)
+            o = attn.gqa_attention(q, k, v, mask, kv_chunk=cfg.attn_kv_chunk)
+        a_new = {"k": k_full, "v": v_full, "kv_pos": kv_pos,
+                 "index": a_cache["index"] + s}
+    a_flat = o.reshape(b, s, -1)
+
+    m_state = cache["mamba"] if cache is not None else None
+    m_out, m_new = ssm.mamba_mixer(x, p["mamba"], state=m_state)
+
+    def _rms(t, scale):
+        f = t.astype(jnp.float32)
+        var = jnp.mean(jnp.square(f), -1, keepdims=True)
+        return (f * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)
+                ).astype(t.dtype)
+
+    fused = 0.5 * (_rms(a_flat, p["attn_out_norm"]["scale"])
+                   + _rms(m_out, p["mamba_out_norm"]["scale"]))
+    out = jnp.einsum("bse,ed->bsd", fused, p["fuse_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": a_new, "mamba": m_new}
+    return out, new_cache
+
+
+def _ffn_forward(x, p, cfg: ModelConfig, layer_idx, cache=None):
+    """Returns (out, aux_loss, new_cache)."""
+    if cfg.mixer == "rwkv6":
+        state = cache if cache is not None else None
+        out, new = ssm.rwkv6_channel_mix(x, p["mlp"], state)
+        return out, 0.0, new
+    if cfg.moe is not None and layer_idx not in cfg.moe_dense_layers:
+        act = ACTIVATIONS["silu" if cfg.mlp == "swiglu" else "gelu"]
+        out, aux = moe_ffn(x, p["mlp"], cfg.moe, act)
+        return out, aux, None
+    return _dense_mlp(x, p["mlp"], cfg), 0.0, None
+
+
+def _layer_forward(x, p, cfg: ModelConfig, positions, layer_idx,
+                   cache=None, rules=None):
+    window = cfg.attn_window if (cfg.attn_window is not None
+                                 and not cfg.layer_is_global(layer_idx)) \
+        else None
+    theta = cfg.rope_theta_for(layer_idx)
+    seq_parallel = rules is not None and rules.get("seq") is not None
+    if rules is not None:
+        x = logical_constraint(x, rules, "batch", "seq", "act_embed")
+
+    def enter_tp(h):
+        # Megatron-SP region boundary: all-gather the (small) activations
+        # over the seq shards so the (large) weights stay model-sharded
+        # inside the mixer/FFN; the residual add below re-scatters.
+        if seq_parallel:
+            return logical_constraint(h, rules, "batch", None, "act_embed")
+        return h
+
+    def exit_tp(h):
+        if seq_parallel:
+            return logical_constraint(h, rules, "batch", "seq", "act_embed")
+        return h
+
+    h = enter_tp(apply_norm(x, p["ln1"], cfg.norm))
+    mix_cache = cache["mixer"] if cache is not None else None
+    mix, mix_new = _mixer_forward(h, p, cfg, positions, layer_idx,
+                                  window=window, theta=theta,
+                                  cache=mix_cache, rules=rules)
+    if cfg.sandwich_norm:
+        mix = apply_norm(mix, p["ln1_post"], cfg.norm)
+    x = x + exit_tp(mix)
+
+    h = enter_tp(apply_norm(x, p["ln2"], cfg.norm))
+    ffn_cache = cache.get("ffn") if cache is not None else None
+    f, aux, ffn_new = _ffn_forward(h, p, cfg, layer_idx, ffn_cache)
+    if cfg.sandwich_norm:
+        f = apply_norm(f, p["ln2_post"], cfg.norm)
+    x = x + exit_tp(f)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"mixer": mix_new}
+        if ffn_new is not None:
+            new_cache["ffn"] = ffn_new
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def _remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "save_boundaries":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    cfg: ModelConfig
+
+    # -- specs ---------------------------------------------------------------
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    # -- embedding -----------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if "embeds" in batch and batch["embeds"] is not None:
+            x = batch["embeds"].astype(params["embed"].dtype)
+        else:
+            x = params["embed"][batch["tokens"]]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        return x
+
+    def _positions(self, batch, start=0):
+        tokens = batch.get("tokens")
+        b, s = (tokens.shape if tokens is not None
+                else batch["embeds"].shape[:2])
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(start, start + s)[None], (b, s))
+        out = {"pos": pos}
+        if self.cfg.mrope_sections:
+            mr = batch.get("mrope_positions")
+            if mr is None:
+                mr = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+            out["mrope"] = mr
+        return out
+
+    def _logits(self, params, x, rules=None):
+        cfg = self.cfg
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        if rules is not None:
+            x = logical_constraint(x, rules, "batch", None, "act_embed")
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+        if rules is not None:
+            logits = logical_constraint(logits, rules, "batch", None,
+                                        "act_vocab")
+        return logits
+
+    # -- forward (training / prefill without cache) ---------------------------
+    def forward(self, params, batch, rules=None):
+        """Returns (logits (B,S,V) fp32, aux_loss scalar)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = self._positions(batch)
+        aux_total = 0.0
+
+        if cfg.scan_layers:
+            x, aux_total = self._run_scanned(params, x, positions, rules)
+        else:
+            # Unscanned (heterogeneous) stacks still need per-layer remat:
+            # without it every layer's internals stay live for backward.
+            def one_layer(h, lp, i):
+                out, aux, _ = _layer_forward(h, lp, cfg, positions, i,
+                                             rules=rules)
+                return out, aux
+
+            if cfg.remat != "none":
+                one_layer = jax.checkpoint(
+                    one_layer, policy=_remat_policy(cfg.remat),
+                    prevent_cse=False, static_argnums=(2,))
+            for i, lp in enumerate(params["layer_list"]):
+                x, aux = one_layer(x, lp, i)
+                aux_total = aux_total + aux
+        return self._logits(params, x, rules), aux_total
+
+    def _run_scanned(self, params, x, positions, rules):
+        cfg = self.cfg
+        aux_total = 0.0
+        n_prefix = len(cfg.moe_dense_layers)
+        for i, lp in enumerate(params.get("prefix_layers", [])):
+            x, aux, _ = _layer_forward(x, lp, cfg, positions,
+                                       cfg.moe_dense_layers[i], rules=rules)
+            aux_total = aux_total + aux
+
+        # Pin each scanned layer slice to its (FSDP-)sharded spec so GSPMD
+        # keeps the stacked weights sharded across the scan and inserts the
+        # all-gather per iteration, not once for the whole stack.
+        layer_pspecs = None
+        if rules is not None:
+            from repro.models.common import param_sharding
+            layer_pspecs = param_sharding(_layer_specs(cfg, n_prefix), rules)
+
+        def body(carry, lp):
+            h, aux = carry
+            if layer_pspecs is not None:
+                try:
+                    lp = jax.tree.map(jax.lax.with_sharding_constraint, lp,
+                                      layer_pspecs)
+                except (ValueError, RuntimeError):
+                    pass
+            h, a, _ = _layer_forward(h, lp, cfg, positions, n_prefix,
+                                     rules=rules)
+            return (h, aux + a), None
+
+        body_fn = body
+        if cfg.remat != "none":
+            body_fn = jax.checkpoint(
+                body, policy=_remat_policy(cfg.remat),
+                prevent_cse=False)
+        (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total),
+                                         params["layers"])
+        return x, aux_total
+
+    # -- KV cache ------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+        cfg = self.cfg
+        entries = []
+        for i in range(cfg.num_layers):
+            entries.append(self._layer_cache(cfg, i, batch_size, max_seq,
+                                             dtype))
+        if cfg.scan_layers and not self._heterogeneous():
+            n_prefix = len(cfg.moe_dense_layers)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *entries[n_prefix:])
+            return {"prefix": entries[:n_prefix], "stack": stacked,
+                    "index": jnp.zeros((), jnp.int32)}
+        return {"list": entries, "index": jnp.zeros((), jnp.int32)}
+
+    def _heterogeneous(self) -> bool:
+        cfg = self.cfg
+        return (cfg.attn_window is not None
+                and any(cfg.layer_is_global(i) != cfg.layer_is_global(0)
+                        for i in range(cfg.num_layers)))
+
+    def _layer_cache(self, cfg, i, b, max_seq, dtype):
+        if cfg.mixer in ("gqa", "hymba"):
+            window = (cfg.attn_window
+                      if cfg.attn_window is not None
+                      and not cfg.layer_is_global(i) else None)
+            slots = min(window, max_seq) if window else max_seq
+            kv = {
+                "k": jnp.zeros((b, slots, cfg.num_kv_heads, cfg.head_dim),
+                               dtype),
+                "v": jnp.zeros((b, slots, cfg.num_kv_heads, cfg.head_dim),
+                               dtype),
+                "kv_pos": jnp.full((b, slots), -1, jnp.int32),
+                "index": jnp.zeros((), jnp.int32),
+            }
+            if cfg.mixer == "gqa":
+                return {"mixer": kv}
+            m = cfg.mamba
+            e = m.d_inner or cfg.d_model
+            return {"mixer": {
+                "attn": kv,
+                "mamba": {
+                    "conv": jnp.zeros((b, m.conv_kernel - 1, e), dtype),
+                    "ssm": jnp.zeros((b, e, m.state_size), jnp.float32),
+                }}}
+        if cfg.mixer == "mla":
+            m = cfg.mla
+            return {"mixer": {
+                "c_kv": jnp.zeros((b, max_seq, m.kv_lora), dtype),
+                "k_rope": jnp.zeros((b, max_seq, m.qk_rope), dtype),
+                "index": jnp.zeros((), jnp.int32),
+            }}
+        if cfg.mixer == "rwkv6":
+            h = cfg.d_model // cfg.rwkv.head_size
+            k = cfg.rwkv.head_size
+            return {
+                "mixer": {"shift": jnp.zeros((b, cfg.d_model), dtype),
+                          "wkv": jnp.zeros((b, h, k, k), jnp.float32)},
+                "ffn": {"shift": jnp.zeros((b, cfg.d_model), dtype)},
+            }
+        raise ValueError(cfg.mixer)
+
+    # -- decode --------------------------------------------------------------
+    def decode_step(self, params, cache, tokens, rules=None):
+        """One token per sequence. tokens: (B, 1). Returns (logits, cache).
+
+        If the cache carries `slot_pos` (B,), each sequence decodes at its
+        own position (continuous batching); otherwise all sequences share
+        the global `index` cursor.
+        """
+        cfg = self.cfg
+        idx = cache["index"]
+        b = tokens.shape[0]
+        if "slot_pos" in cache:
+            pos = cache["slot_pos"][:, None].astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+        batch = {"tokens": tokens, "positions": pos}
+        x = self._embed(params, batch)
+        positions = self._positions(batch)
+        positions["pos"] = pos
+
+        if "list" in cache:
+            if "layer_list" not in params:
+                raise ValueError("list cache requires unscanned layers")
+            new_entries = []
+            for i, lp in enumerate(params["layer_list"]):
+                e = dict(cache["list"][i])
+                self._sync_entry_index(e, idx)
+                x, _, new_e = _layer_forward(x, lp, cfg, positions, i,
+                                             cache=e, rules=rules)
+                new_entries.append(new_e)
+            new_cache = {"list": new_entries, "index": idx + 1}
+            if "slot_pos" in cache:
+                new_cache["slot_pos"] = cache["slot_pos"] + 1
+        else:
+            n_prefix = len(cfg.moe_dense_layers)
+            new_prefix = []
+            for i, lp in enumerate(params.get("prefix_layers", [])):
+                e = dict(cache["prefix"][i])
+                self._sync_entry_index(e, idx)
+                x, _, new_e = _layer_forward(x, lp, cfg, positions,
+                                             cfg.moe_dense_layers[i],
+                                             cache=e, rules=rules)
+                new_prefix.append(new_e)
+
+            def body(h, xs):
+                lp, entry = xs
+                self._sync_entry_index(entry, idx)
+                h, _, new_e = _layer_forward(h, lp, cfg, positions, n_prefix,
+                                             cache=entry, rules=rules)
+                return h, new_e
+
+            x, new_stack = jax.lax.scan(body, x,
+                                        (params["layers"], cache["stack"]))
+            new_cache = {"prefix": new_prefix, "stack": new_stack,
+                         "index": idx + 1}
+            if "slot_pos" in cache:
+                new_cache["slot_pos"] = cache["slot_pos"] + 1
+        return self._logits(params, x, rules)[:, -1], new_cache
+
+    # -- slot management (continuous batching; serving/engine.py) ----------
+    def enable_slots(self, cache, batch_size: int):
+        """Add per-sequence decode cursors to a freshly-initialized cache."""
+        out = dict(cache)
+        out["slot_pos"] = jnp.zeros((batch_size,), jnp.int32)
+        return out
+
+    def reset_slot(self, cache, slot: int):
+        """Invalidate one sequence's state so a new request can use it."""
+        def walk(node, stacked):
+            if isinstance(node, dict):
+                out = {}
+                for k, v in node.items():
+                    if k == "index":
+                        out[k] = v
+                    elif k == "kv_pos":
+                        out[k] = (v.at[:, slot].set(-1) if stacked
+                                  else v.at[slot].set(-1))
+                    else:
+                        out[k] = walk(v, stacked)
+                return out
+            if isinstance(node, (list, tuple)):
+                return type(node)(walk(v, stacked) for v in node)
+            if getattr(node, "ndim", 0) == 0:
+                return node
+            return (node.at[:, slot].set(0) if stacked
+                    else node.at[slot].set(0))
+
+        new = {}
+        for k, v in cache.items():
+            if k == "index":
+                new[k] = v
+            elif k == "slot_pos":
+                new[k] = v.at[slot].set(0)
+            elif k == "stack":
+                new[k] = walk(v, True)
+            else:
+                new[k] = walk(v, False)
+        return new
+
+    @staticmethod
+    def _sync_entry_index(entry, idx):
+        """Keep per-entry `index` scalars in sync with the global one."""
+        def fix(d):
+            if isinstance(d, dict):
+                if "index" in d:
+                    d["index"] = idx
+                for v in d.values():
+                    fix(v)
+        fix(entry)
+
+    # -- prefill -------------------------------------------------------------
+    def prefill(self, params, batch, cache, rules=None):
+        """Run the full prompt, writing caches; returns (last_logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = self._positions(batch)
+        s = x.shape[1]
+        idx = cache["index"]
+
+        if "list" in cache:
+            new_entries = []
+            for i, lp in enumerate(params["layer_list"]):
+                e = dict(cache["list"][i])
+                self._sync_entry_index(e, idx)
+                x, _, new_e = _layer_forward(x, lp, cfg, positions, i,
+                                             cache=e, rules=rules)
+                new_entries.append(new_e)
+            new_cache = {"list": new_entries, "index": idx + s}
+        else:
+            n_prefix = len(cfg.moe_dense_layers)
+            new_prefix = []
+            for i, lp in enumerate(params.get("prefix_layers", [])):
+                e = dict(cache["prefix"][i])
+                self._sync_entry_index(e, idx)
+                x, _, new_e = _layer_forward(x, lp, cfg, positions,
+                                             cfg.moe_dense_layers[i],
+                                             cache=e, rules=rules)
+                new_prefix.append(new_e)
+
+            def body(h, xs):
+                lp, entry = xs
+                self._sync_entry_index(entry, idx)
+                h, _, new_e = _layer_forward(h, lp, cfg, positions, n_prefix,
+                                             cache=entry, rules=rules)
+                return h, new_e
+
+            x, new_stack = jax.lax.scan(body, x,
+                                        (params["layers"], cache["stack"]))
+            new_cache = {"prefix": new_prefix, "stack": new_stack,
+                         "index": idx + s}
+        return self._logits(params, x, rules)[:, -1], new_cache

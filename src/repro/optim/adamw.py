@@ -1,0 +1,86 @@
+"""AdamW with fp32 master weights, built for FSDP-sharded use.
+
+Optimizer states inherit the parameter's sharding (states are created with
+`jax.tree.map` over params, so GSPMD propagates the param sharding — under
+FSDP the fp32 master copy, m and v are all fully sharded over the data
+axis).  Mixed precision: compute/grad dtype bf16, update math fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Pytree          # fp32 master weights
+    m: Pytree
+    v: Pytree
+
+
+def init(params: Pytree) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply(grads: Pytree, state: AdamWState, cfg: AdamWConfig,
+          lr_scale: jax.Array | float = 1.0,
+          ) -> Tuple[Pytree, AdamWState, dict]:
+    """Returns (new bf16 params, new state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * delta
+        return master, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = treedef.flatten_up_to(state.master)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, ma, m, v) for g, ma, m, v
+           in zip(flat_g, flat_ma, flat_m, flat_v)]
+    master = treedef.unflatten([o[0] for o in out])
+    m = treedef.unflatten([o[1] for o in out])
+    v = treedef.unflatten([o[2] for o in out])
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params, AdamWState(step=step, master=master, m=m, v=v), metrics

@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (FaultTolerantLoop, HealthSource,
+                                           MeshLadder, SimulatedHealth,
+                                           StragglerDetector)
+
+__all__ = ["FaultTolerantLoop", "HealthSource", "MeshLadder",
+           "SimulatedHealth", "StragglerDetector"]

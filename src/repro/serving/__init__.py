@@ -1,0 +1,4 @@
+from repro.serving.engine import (ContinuousBatchingEngine, Request,
+                                  ServingStats)
+
+__all__ = ["ContinuousBatchingEngine", "Request", "ServingStats"]

@@ -1,0 +1,98 @@
+"""Address-mapping policies (paper Table II): geometry + bijectivity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DDR4, HBM, get_mapping, policies_for
+
+
+def test_policy_sets_match_table2():
+    assert sorted(policies_for(HBM)) == ["BRC", "BRGCG", "RBC", "RCB", "RGBCG"]
+    assert sorted(policies_for(DDR4)) == ["BRC", "RBC", "RCB", "RCBI"]
+
+
+def test_default_policies():
+    assert get_mapping(HBM).name == "RGBCG"
+    assert get_mapping(DDR4).name == "RCB"
+
+
+def test_geometry():
+    # HBM: app_addr[27:5] -> 23 mapped bits; DDR4: app_addr[33:6] -> 28.
+    for m in policies_for(HBM).values():
+        assert m.mapped_bits == 23
+    for m in policies_for(DDR4).values():
+        assert m.mapped_bits == 28
+    assert HBM.page_bytes == 32 * 32          # 5C * 32 B granularity
+    assert DDR4.page_bytes == 128 * 64        # 7C * 64 B granularity
+    assert HBM.num_banks == 16
+    assert DDR4.num_banks == 16
+
+
+def test_rbc_hbm_slicing():
+    m = policies_for(HBM)["RBC"]              # 14R-2BG-2B-5C
+    d = m.decode(np.array([0x20, 1 << 10, 1 << 12, 1 << 14]))
+    assert d["C"][0] == 1 and d["R"][0] == 0
+    assert d["B"][1] == 1
+    assert d["BG"][2] == 1
+    assert d["R"][3] == 1
+
+
+def test_rgbcg_lsb_is_bankgroup():
+    # The default HBM policy interleaves the LSB across bank groups, which
+    # is what makes sequential traversal saturate the channel (Sec. V-D).
+    m = policies_for(HBM)["RGBCG"]            # 14R-1BG-2B-5C-1BG
+    bg = m.decode(np.array([0, 32, 64, 96]))["BG"]
+    assert bg[0] != bg[1]                     # consecutive bursts alternate
+    assert bg[0] == bg[2]
+
+
+@pytest.mark.parametrize("spec", [HBM, DDR4], ids=["hbm", "ddr4"])
+def test_encode_decode_roundtrip_exhaustive_low(spec):
+    for name, m in policies_for(spec).items():
+        addrs = (np.arange(4096, dtype=np.int64) << spec.addr_lsb)
+        d = m.decode(addrs)
+        back = m.encode(d["R"], d["BG"], d["B"], d["C"])
+        np.testing.assert_array_equal(back, addrs, err_msg=name)
+
+
+@given(addr=st.integers(0, (1 << 23) - 1),
+       policy=st.sampled_from(sorted(policies_for(HBM))))
+@settings(max_examples=300)
+def test_bijectivity_hbm(addr, policy):
+    m = policies_for(HBM)[policy]
+    a = np.int64(addr) << HBM.addr_lsb
+    d = m.decode(a)
+    assert m.encode(d["R"], d["BG"], d["B"], d["C"]) == a
+    # Field ranges respect the geometry.
+    assert 0 <= d["R"] < (1 << HBM.row_bits)
+    assert 0 <= d["BG"] < (1 << HBM.bankgroup_bits)
+    assert 0 <= d["B"] < (1 << HBM.bank_bits)
+    assert 0 <= d["C"] < (1 << HBM.column_bits)
+
+
+@given(addr=st.integers(0, (1 << 28) - 1),
+       policy=st.sampled_from(sorted(policies_for(DDR4))))
+@settings(max_examples=300)
+def test_bijectivity_ddr4(addr, policy):
+    m = policies_for(DDR4)[policy]
+    a = np.int64(addr) << DDR4.addr_lsb
+    d = m.decode(a)
+    assert m.encode(d["R"], d["BG"], d["B"], d["C"]) == a
+
+
+def test_distinct_policies_map_differently():
+    # Sanity: two different policies disagree somewhere (they are not
+    # accidentally identical bit shuffles).
+    addrs = np.arange(1 << 14, dtype=np.int64) << HBM.addr_lsb
+    pols = policies_for(HBM)
+    banks = {n: pols[n].bank_id(addrs) for n in pols}
+    names = sorted(banks)
+    for i, n1 in enumerate(names):
+        for n2 in names[i + 1:]:
+            assert not np.array_equal(banks[n1], banks[n2]), (n1, n2)
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="not available"):
+        get_mapping(HBM, "RCBI")   # RCBI is DDR4-only in Table II

@@ -1,0 +1,63 @@
+"""Campaign driver end-to-end: every paper suite runs and is self-consistent."""
+import numpy as np
+import pytest
+
+from repro.core import DDR4, HBM, ShuhaiCampaign
+
+
+@pytest.fixture(scope="module")
+def hbm():
+    return ShuhaiCampaign(HBM)
+
+
+@pytest.fixture(scope="module")
+def ddr4():
+    return ShuhaiCampaign(DDR4)
+
+
+def test_engine_counts(hbm, ddr4):
+    assert len(hbm.engines) == 32    # M = 32 for HBM (Fig. 3)
+    assert len(ddr4.engines) == 2    # M = 2 for DDR4
+
+
+def test_suite_refresh(hbm):
+    res = hbm.suite_refresh()
+    assert res["estimated_refresh_interval_ns"] == pytest.approx(
+        HBM.t_refi_ns, rel=0.05)
+
+
+def test_suite_idle_latency_matches_table4(hbm, ddr4):
+    h = hbm.suite_idle_latency()
+    assert h["page_hit"]["ns"] == pytest.approx(106.7, abs=0.5)
+    assert h["page_closed"]["ns"] == pytest.approx(122.2, abs=0.5)
+    assert h["page_miss"]["ns"] == pytest.approx(137.8, abs=0.5)
+    d = ddr4.suite_idle_latency()
+    assert d["page_hit"]["ns"] == pytest.approx(73.3, abs=1.0)
+    assert d["page_closed"]["ns"] == pytest.approx(89.9, abs=1.0)
+    assert d["page_miss"]["ns"] == pytest.approx(106.6, abs=1.0)
+
+
+def test_suite_address_mapping_shape(hbm):
+    res = hbm.suite_address_mapping(strides=(64, 1024), bursts=(32,), n=1024)
+    assert set(res) == {"RBC", "RCB", "BRC", "RGBCG", "BRGCG"}
+    for pol in res:
+        assert set(res[pol][32]) == {64, 1024}
+
+
+def test_suite_locality(hbm):
+    res = hbm.suite_locality(strides=(4096,), bursts=(32,), n=1024)
+    assert res[8 * 1024][32][4096] > res[256 * 1024**2][32][4096]
+
+
+def test_suite_total_throughput(hbm, ddr4):
+    h = hbm.suite_total_throughput()
+    assert h["total_gbps"] == pytest.approx(425.0, rel=0.02)   # Table V
+    d = ddr4.suite_total_throughput()
+    assert d["total_gbps"] == pytest.approx(36.0, rel=0.02)    # Table V
+
+
+def test_ddr4_has_no_switch_suites(ddr4):
+    with pytest.raises(ValueError):
+        ddr4.suite_switch_latency()
+    with pytest.raises(ValueError):
+        ddr4.suite_switch_throughput()

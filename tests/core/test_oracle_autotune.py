@@ -1,0 +1,77 @@
+"""MemoryOracle + layout autotuner: the technique as a framework feature."""
+import pytest
+
+from repro.core import (TPU_V5E, AccessPattern, MemoryOracle, advise_microbatch,
+                        advise_remat, choose_layout, score_layouts)
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    return MemoryOracle()
+
+
+class TestOracle:
+    def test_contiguous_efficiency_matches_paper(self, oracle):
+        # Sequential large-burst traversal ~ 13.27/14.4 = 92% of wire rate.
+        eff = oracle.efficiency(AccessPattern(
+            burst_bytes=4096, stride_bytes=4096, working_set_bytes=1 << 28))
+        assert eff == pytest.approx(0.922, rel=0.02)
+
+    def test_strided_worse_than_contiguous(self, oracle):
+        cont = oracle.effective_bandwidth(AccessPattern(4096, 4096, 1 << 28))
+        strided = oracle.effective_bandwidth(AccessPattern(64, 65536, 1 << 28))
+        assert cont > 2 * strided
+
+    def test_roofline_terms(self, oracle):
+        t = oracle.roofline_terms(flops=1e15, hbm_bytes=1e12,
+                                  collective_bytes=0, chips=256)
+        assert t["compute_s"] == pytest.approx(1e15 / (256 * 197e12))
+        assert t["memory_s"] == pytest.approx(1e12 / (256 * 819e9))
+        assert t["dominant"] == "compute_s"
+
+    def test_ridge_point(self, oracle):
+        # v5e: 197e12 / 819e9 ~ 240 FLOP/byte.
+        assert oracle.arithmetic_intensity_needed() == pytest.approx(240.5, rel=0.01)
+
+    def test_hbm_fits(self, oracle):
+        assert oracle.hbm_fits(10 * 1024**3)
+        assert not oracle.hbm_fits(17 * 1024**3)
+
+
+class TestAutotune:
+    def test_kv_cache_layout_prefers_contiguous_seq(self, oracle):
+        # Decode sweeps `seq` fetching (kv_heads, head_dim) per step; the
+        # best layout keeps the fetched dims minor and seq-adjacent.
+        sizes = {"seq": 32768, "kv_heads": 8, "head_dim": 128}
+        best = choose_layout(oracle, sizes, itemsize=2, iterate_dim="seq",
+                             fetch_dims=("kv_heads", "head_dim"))
+        # seq must be majormost: iterating it then touches contiguous rows.
+        assert best.dims[0] == "seq"
+
+    def test_score_layouts_ordering(self, oracle):
+        sizes = {"a": 1024, "b": 64, "c": 128}
+        scored = score_layouts(oracle, sizes, 4, iterate_dim="a",
+                               fetch_dims=("b", "c"))
+        bws = [bw for bw, _ in scored]
+        assert bws == sorted(bws, reverse=True)
+        assert bws[0] > 0
+
+    def test_advise_microbatch_fits(self, oracle):
+        mb = advise_microbatch(
+            oracle,
+            param_bytes_per_device=4 * 1024**3,
+            opt_state_bytes_per_device=6 * 1024**3,
+            act_bytes_per_sample=256 * 1024**2,
+            max_microbatch=64)
+        assert 1 <= mb <= 64
+        # Live set at chosen mb fits the 90% budget.
+        assert 10 * 1024**3 + mb * 256 * 1024**2 <= TPU_V5E.hbm_bytes * 0.9 \
+            or mb == 1
+
+    def test_advise_remat_policies(self, oracle):
+        assert advise_remat(oracle, layer_act_bytes=1 * 1024**2,
+                            num_layers=12) == "none"
+        assert advise_remat(oracle, layer_act_bytes=40 * 1024**2,
+                            num_layers=88) == "save_boundaries"
+        assert advise_remat(oracle, layer_act_bytes=400 * 1024**2,
+                            num_layers=88) == "full"

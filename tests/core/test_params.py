@@ -1,0 +1,69 @@
+"""RSTParams validation + 256-bit register packing (paper Table I, Sec. III-C-3)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DDR4, HBM, EngineRegisters, RSTParams
+
+pow2 = st.integers(min_value=0, max_value=30).map(lambda e: 1 << e)
+
+
+class TestValidation:
+    def test_good(self):
+        RSTParams(n=1024, b=32, s=64, w=1 << 20).validate(HBM)
+
+    @pytest.mark.parametrize("kw,msg", [
+        (dict(n=0, b=32, s=64, w=1024), "N"),
+        (dict(n=1, b=33, s=64, w=1024), "B"),
+        (dict(n=1, b=32, s=65, w=1024), "S"),
+        (dict(n=1, b=32, s=64, w=1000), "W"),
+        (dict(n=1, b=32, s=64, w=16), "W"),
+        (dict(n=1, b=32, s=2048, w=1024), "S"),
+        (dict(n=1, b=32, s=64, w=1024, a=-1), "A"),
+    ])
+    def test_bad(self, kw, msg):
+        with pytest.raises(ValueError, match=msg):
+            RSTParams(**kw).validate()
+
+    def test_min_burst_per_spec(self):
+        # B >= 32 for HBM, >= 64 for DDR4 (Sec. III-B).
+        RSTParams(n=1, b=32, s=64, w=1024).validate(HBM)
+        with pytest.raises(ValueError, match="minimum burst"):
+            RSTParams(n=1, b=32, s=64, w=1024).validate(DDR4)
+        RSTParams(n=1, b=64, s=64, w=1024).validate(DDR4)
+
+    def test_eq1_address(self):
+        p = RSTParams(n=100, b=32, s=64, w=256, a=10)
+        # T[i] = A + (i*S) % W
+        assert p.address(0) == 10
+        assert p.address(1) == 74
+        assert p.address(4) == 10   # wrapped: 4*64 % 256 == 0
+
+    def test_period(self):
+        assert RSTParams(n=10, b=32, s=64, w=256).period == 4
+        assert RSTParams(n=10, b=32, s=256, w=256).period == 1
+
+
+class TestPacking:
+    @given(n=st.integers(1, (1 << 64) - 1), b=pow2, s=pow2,
+           w=st.integers(5, 31).map(lambda e: 1 << e),
+           a=st.integers(0, (1 << 32) - 1))
+    @settings(max_examples=200)
+    def test_roundtrip(self, n, b, s, w, a):
+        p = RSTParams(n=n, b=b, s=s, w=w, a=a)
+        assert RSTParams.unpack(p.pack()) == p
+
+    def test_register_is_256_bit(self):
+        p = RSTParams(n=(1 << 64) - 1, b=1 << 31, s=1 << 31, w=1 << 31,
+                      a=(1 << 32) - 1)
+        assert p.pack() < (1 << 256)
+
+    def test_engine_registers(self):
+        r = RSTParams(n=5, b=32, s=64, w=1024)
+        w = RSTParams(n=9, b=64, s=128, w=2048)
+        regs = EngineRegisters().with_read(r).with_write(w)
+        assert regs.read_params == r
+        assert regs.write_params == w
+        # Independent registers: rewriting one leaves the other intact.
+        regs2 = regs.with_read(RSTParams(n=7, b=32, s=32, w=64))
+        assert regs2.write_params == w

@@ -1,0 +1,70 @@
+"""RST address stream (Eq. 1) properties + latency module behavior."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import HBM, LatencyModule, RSTParams, addresses_np, block_params
+from repro.core import get_mapping, serial_read_latencies
+
+pow2 = lambda lo, hi: st.integers(lo, hi).map(lambda e: 1 << e)
+
+
+@given(n=st.integers(1, 512), se=pow2(5, 12), we=pow2(13, 24),
+       a=st.integers(0, 1 << 20))
+@settings(max_examples=200)
+def test_addresses_in_window(n, se, we, a):
+    """Every address lies in [A, A+W) and follows Eq. 1."""
+    p = RSTParams(n=n, b=32, s=min(se, we), w=we, a=a)
+    addrs = addresses_np(p, count=min(n, 256))
+    assert (addrs >= a).all() and (addrs < a + we).all()
+    for i in range(len(addrs)):
+        assert addrs[i] == a + (i * p.s) % p.w
+
+
+@given(se=pow2(5, 10), we=pow2(11, 20))
+@settings(max_examples=100)
+def test_periodicity(se, we):
+    p = RSTParams(n=10_000, b=32, s=se, w=we)
+    addrs = addresses_np(p, count=min(2 * p.period, 4096))
+    if len(addrs) >= 2 * p.period:
+        np.testing.assert_array_equal(addrs[:p.period],
+                                      addrs[p.period:2 * p.period])
+
+
+@given(be=pow2(5, 9), se=pow2(9, 14), we=pow2(15, 22))
+@settings(max_examples=100)
+def test_block_params_consistent(be, se, we):
+    """Block-granular indices match byte addresses / block_bytes."""
+    p = RSTParams(n=64, b=be, s=se, w=we)
+    stride_b, wset_b, base_b = block_params(p, be)
+    addrs = addresses_np(p, count=64)
+    blocks = base_b + (np.arange(64, dtype=np.int64) * stride_b) % wset_b
+    np.testing.assert_array_equal(addrs // be, blocks)
+
+
+class TestLatencyModule:
+    def _trace(self, n=2048):
+        p = RSTParams(n=n, b=32, s=128, w=0x1000000)
+        return serial_read_latencies(p, get_mapping(HBM), HBM)
+
+    def test_depth_bounded(self):
+        cap = LatencyModule(depth=1024).capture(self._trace(2048))
+        assert len(cap) == 1024   # "latency list of size 1024"
+
+    def test_8bit_saturation(self):
+        t = self._trace(64)
+        t.cycles[3] = 9999.0
+        cap = LatencyModule().capture(t)
+        assert cap.dtype == np.uint8
+        assert cap[3] == 255
+
+    def test_classify_counts(self):
+        cap = LatencyModule().capture(self._trace(1024))
+        counts = LatencyModule.classify(cap, HBM)
+        assert counts["hit"] > counts["miss"]
+        assert sum(counts.values()) == len(cap)
+
+    def test_modal_latency_is_hit(self):
+        cap = LatencyModule().capture(self._trace(1024))
+        assert LatencyModule.modal_latency(cap) == HBM.lat_page_hit

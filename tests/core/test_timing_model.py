@@ -1,0 +1,205 @@
+"""Timing-model validation against the paper's measured numbers.
+
+Every assertion cites the paper section it reproduces.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DDR4, HBM, LatencyModule, RSTParams, get_mapping,
+                        refresh_interval_estimate, serial_read_latencies,
+                        throughput)
+
+MB = 1024**2
+
+
+def _tp(spec, policy=None, **kw):
+    p = RSTParams(**kw)
+    return throughput(p, get_mapping(spec, policy), spec).gbps
+
+
+# ------------------------------------------------------------- Table V
+class TestHeadlineThroughput:
+    def test_hbm_channel_13_27(self):
+        got = _tp(HBM, n=8192, b=32, s=32, w=0x10000000)
+        assert got == pytest.approx(13.27, rel=0.02)
+
+    def test_ddr4_channel_18(self):
+        got = _tp(DDR4, n=8192, b=64, s=64, w=0x10000000)
+        assert got == pytest.approx(18.0, rel=0.02)
+
+    def test_total_hbm_425(self):
+        per = _tp(HBM, n=8192, b=32, s=32, w=0x10000000)
+        assert per * 32 == pytest.approx(425.0, rel=0.02)
+
+    def test_hbm_total_10x_ddr4(self):
+        hbm = _tp(HBM, n=8192, b=32, s=32, w=0x10000000) * 32
+        ddr = _tp(DDR4, n=8192, b=64, s=64, w=0x10000000) * 2
+        assert hbm / ddr > 10   # "10 times more memory throughput" (Sec. V-F)
+
+
+# ------------------------------------------------------------- Table IV
+class TestIdleLatency:
+    @pytest.mark.parametrize("spec,hit,closed,miss", [
+        (HBM, 48, 55, 62), (DDR4, 22, 27, 32),
+    ], ids=["hbm", "ddr4"])
+    def test_anchor_cycles(self, spec, hit, closed, miss):
+        # S=128 probe: hits dominate, refresh-closed pages appear (Sec. V-B).
+        p = RSTParams(n=1024, b=spec.min_burst, s=128, w=0x1000000)
+        trace = serial_read_latencies(p, get_mapping(spec), spec)
+        cap = LatencyModule().capture(trace)
+        cats = LatencyModule.category_latencies(cap, spec)
+        assert cats["hit"] == hit
+        assert cats["closed"] == closed
+        # S=128K probe: every transaction misses.
+        p = RSTParams(n=1024, b=spec.min_burst, s=128 * 1024, w=0x1000000)
+        trace = serial_read_latencies(p, get_mapping(spec), spec)
+        cap = LatencyModule().capture(trace)
+        cats = LatencyModule.category_latencies(cap, spec)
+        assert cats["miss"] == miss
+
+    def test_hbm_latency_exceeds_ddr4_by_about_30ns(self):
+        # "higher than that on DDR4 by about 30 nanoseconds" (Sec. V-B).
+        d = HBM.lat_page_hit * HBM.cycle_ns - DDR4.lat_page_hit * DDR4.cycle_ns
+        assert 25 < d < 40
+
+    def test_s128k_all_miss(self):
+        p = RSTParams(n=512, b=32, s=128 * 1024, w=0x1000000)
+        trace = serial_read_latencies(p, get_mapping(HBM), HBM)
+        # After warm-up, transactions are page misses except the first
+        # access to each bank after a refresh closed it (Sec. V-A/V-B).
+        tail = trace.states[16:]
+        assert tail.count("miss") / len(tail) > 0.9
+        assert "hit" not in tail
+
+    def test_s128_mostly_hits(self):
+        p = RSTParams(n=1024, b=32, s=128, w=0x1000000)
+        trace = serial_read_latencies(p, get_mapping(HBM), HBM)
+        frac_hit = np.mean([s == "hit" for s in trace.states])
+        assert frac_hit > 0.8
+
+
+# ------------------------------------------------------------- Fig. 4
+class TestRefresh:
+    @pytest.mark.parametrize("spec", [HBM, DDR4], ids=["hbm", "ddr4"])
+    def test_periodic_spikes(self, spec):
+        p = RSTParams(n=1024, b=spec.min_burst, s=64, w=0x1000000)
+        trace = serial_read_latencies(p, get_mapping(spec), spec)
+        assert trace.refresh_hits.sum() >= 2
+        est = refresh_interval_estimate(trace, spec)
+        assert est == pytest.approx(spec.t_refi_ns, rel=0.05)
+
+    def test_refresh_latency_significantly_longer(self):
+        p = RSTParams(n=1024, b=32, s=64, w=0x1000000)
+        trace = serial_read_latencies(p, get_mapping(HBM), HBM)
+        normal = np.median(trace.cycles[~trace.refresh_hits])
+        spike = trace.cycles[trace.refresh_hits].max()
+        assert spike > normal + 20   # "significantly longer latency"
+
+    def test_spike_interval_roughly_constant(self):
+        p = RSTParams(n=1024, b=32, s=64, w=0x1000000)
+        trace = serial_read_latencies(p, get_mapping(HBM), HBM)
+        t = np.cumsum(trace.cycles * HBM.cycle_ns)
+        spikes = t[np.nonzero(trace.refresh_hits)[0]]
+        gaps = np.diff(spikes)
+        assert gaps.std() / gaps.mean() < 0.05
+
+
+# ------------------------------------------------------------- Fig. 6 / V-C
+class TestAddressMappingEffects:
+    def test_policy_order_of_magnitude(self):
+        # Observation 1: RGBCG ~10x BRC at S=1024, B=32 (Sec. V-C).
+        fast = _tp(HBM, "RGBCG", n=4096, b=32, s=1024, w=0x10000000)
+        slow = _tp(HBM, "BRC", n=4096, b=32, s=1024, w=0x10000000)
+        assert fast / slow >= 8
+
+    def test_default_policy_best(self):
+        # Observation 3 at the operating points the text calls out.
+        for b, s in [(32, 32), (32, 1024), (32, 2048), (64, 2048), (64, 64)]:
+            default = _tp(HBM, "RGBCG", n=4096, b=b, s=s, w=0x10000000)
+            for pol in ("RBC", "RCB", "BRC", "BRGCG"):
+                assert default >= _tp(HBM, pol, n=4096, b=b, s=s,
+                                      w=0x10000000) - 1e-6, (pol, b, s)
+        for b, s in [(64, 64), (128, 128)]:
+            default = _tp(DDR4, "RCB", n=4096, b=b, s=s, w=0x10000000)
+            for pol in ("RBC", "BRC", "RCBI"):
+                assert default >= _tp(DDR4, pol, n=4096, b=b, s=s,
+                                      w=0x10000000) - 1e-6, (pol, b, s)
+
+    def test_small_burst_low_throughput(self):
+        # Observation 4: small bursts underutilize the channel.
+        small = _tp(HBM, n=4096, b=32, s=2048, w=0x10000000)
+        large = _tp(HBM, n=4096, b=256, s=2048, w=0x10000000)
+        assert large > small
+
+    def test_large_stride_collapses(self):
+        # Observation 5: S > 8K -> extremely low utilization.
+        seq = _tp(HBM, n=4096, b=32, s=32, w=0x10000000)
+        far = _tp(HBM, n=4096, b=32, s=32768, w=0x10000000)
+        assert far < 0.1 * seq
+
+    def test_hbm_ddr4_trends_differ(self):
+        # Observation 2: same policy, different trend across S.
+        hbm = [_tp(HBM, "RBC", n=4096, b=64, s=s, w=0x10000000)
+               for s in (64, 2048)]
+        ddr = [_tp(DDR4, "RBC", n=4096, b=64, s=s, w=0x10000000)
+               for s in (64, 2048)]
+        ratio_h = hbm[1] / hbm[0]
+        ratio_d = ddr[1] / ddr[0]
+        assert abs(ratio_h - ratio_d) > 0.2
+
+
+# ------------------------------------------------------------- Sec. V-D
+class TestBankGroup:
+    def test_bigger_stride_more_bankgroups_rbc(self):
+        # "when S increases from 128 to 2048 ... higher memory throughput
+        # under the policy RBC" (Fig. 6b/6c).
+        s128 = _tp(HBM, "RBC", n=4096, b=64, s=128, w=0x10000000)
+        s2048 = _tp(HBM, "RBC", n=4096, b=64, s=2048, w=0x10000000)
+        assert s2048 > 1.2 * s128
+
+    def test_default_keeps_high_throughput_at_large_stride(self):
+        # RGBCG at S=2048 still a large fraction of sequential (Fig. 6a-d).
+        seq = _tp(HBM, "RGBCG", n=4096, b=64, s=64, w=0x10000000)
+        strided = _tp(HBM, "RGBCG", n=4096, b=64, s=2048, w=0x10000000)
+        assert strided > 0.5 * seq
+
+
+# ------------------------------------------------------------- Sec. V-E
+class TestLocality:
+    def test_locality_helps_large_stride(self):
+        # B=32, S=4K: W=8K -> 6.7 GB/s vs W=256M -> 2.4 GB/s.
+        local = _tp(HBM, n=4096, b=32, s=4096, w=8 * 1024)
+        base = _tp(HBM, n=4096, b=32, s=4096, w=256 * MB)
+        assert local == pytest.approx(6.7, rel=0.1)
+        assert base == pytest.approx(2.4, rel=0.1)
+        assert local > 2 * base
+
+    def test_locality_no_help_small_stride(self):
+        # "memory access locality cannot increase throughput when S is
+        # small" (no on-chip cache between engine and HBM).
+        local = _tp(HBM, n=4096, b=32, s=64, w=8 * 1024)
+        base = _tp(HBM, n=4096, b=32, s=64, w=256 * MB)
+        assert local == pytest.approx(base, rel=0.05)
+
+
+# ------------------------------------------------------------- misc
+class TestThroughputModel:
+    def test_never_exceeds_wire_rate(self):
+        for s in (32, 64, 1024, 32768):
+            for pol in ("RGBCG", "RBC", "BRC"):
+                assert _tp(HBM, pol, n=2048, b=32, s=s,
+                           w=0x10000000) <= HBM.peak_channel_gbps
+
+    def test_bound_labels(self):
+        p = RSTParams(n=2048, b=32, s=32, w=0x10000000)
+        r = throughput(p, get_mapping(HBM), HBM)
+        assert r.bound in ("bus/ccd", "bank", "faw")
+        p = RSTParams(n=2048, b=32, s=1024, w=0x10000000)
+        r = throughput(p, get_mapping(HBM, "BRC"), HBM)
+        assert r.bound == "bank"   # row-thrashing a single bank
+
+    def test_write_read_symmetric(self):
+        p = RSTParams(n=2048, b=32, s=32, w=0x10000000)
+        r = throughput(p, get_mapping(HBM), HBM, op="read")
+        w = throughput(p, get_mapping(HBM), HBM, op="write")
+        assert r.gbps == w.gbps

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, forward + one train step on
+CPU, asserting output shapes and the absence of NaNs (assignment req.)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.common import init_params, param_axes
+from repro.models.registry import build
+
+
+def _batch(cfg, b=2, s=32):
+    key = jax.random.key(7)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.enc_dec.enc_seq, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        batch["mrope_positions"] = jnp.broadcast_to(pos[None], (3, b, s))
+    return batch
+
+
+@pytest.fixture(params=ARCH_IDS)
+def arch(request):
+    return request.param
+
+
+def test_forward_shapes_no_nans(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = init_params(jax.random.key(0), model.param_specs())
+    batch = _batch(cfg)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/inf in logits"
+    assert np.isfinite(float(aux))
+
+
+def test_train_step_no_nans(arch):
+    """One SGD step through jitted loss+grad: finite loss, finite grads."""
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = init_params(jax.random.key(1), model.param_specs(),
+                         dtype=jnp.float32)
+    batch = _batch(cfg)
+    labels = jnp.roll(batch["tokens"], -1, axis=1)
+
+    @jax.jit
+    def loss_fn(p):
+        logits, aux = model.forward(p, batch)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, labels[..., None], axis=-1).mean()
+        return nll + aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: grad norm not finite"
+    assert float(gnorm) > 0, f"{arch}: zero gradient"
+    # One step reduces loss (sanity, lr small).
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+    loss2 = loss_fn(params2)
+    assert float(loss2) < float(loss) + 0.5
+
+
+def test_param_axes_cover_every_leaf(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    specs = model.param_specs()
+    axes = param_axes(specs)
+    n_specs = len(jax.tree.leaves(specs,
+                                  is_leaf=lambda x: hasattr(x, "axes")))
+    n_axes = len(jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple)))
+    assert n_specs == n_axes
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "whisper-small"])
+def test_decode_matches_forward(arch):
+    """Greedy decode through the cache == teacher-forced forward argmax.
+
+    MoE archs: capacity-based routing drops tokens *jointly* at prefill but
+    not one-at-a-time at decode, so equivalence only holds with non-binding
+    capacity — bump capacity_factor for this test (the drop behavior itself
+    is covered in tests/models/test_moe.py::test_capacity_drops).
+    """
+    import dataclasses
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    model = build(cfg)
+    params = init_params(jax.random.key(2), model.param_specs(),
+                         dtype=jnp.float32)
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.key(3), (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        batch["mrope_positions"] = jnp.broadcast_to(pos[None], (3, b, s))
+    full_logits, _ = model.forward(params, batch)
+
+    cache = model.init_cache(batch_size=b, max_seq=s + 4, dtype=jnp.float32)
+    step_logits = []
+    for t in range(s):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1])
+        step_logits.append(lg)
+    inc = jnp.stack(step_logits, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits), np.asarray(inc),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = get_config("whisper-small", smoke=True)
+    model = build(cfg)
+    params = init_params(jax.random.key(2), model.param_specs(),
+                         dtype=jnp.float32)
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.key(3), (b, s), 0, cfg.vocab_size)
+    frames = jax.random.normal(jax.random.key(4),
+                               (b, cfg.enc_dec.enc_seq, cfg.d_model))
+    full_logits, _ = model.forward(params, {"tokens": tokens,
+                                            "frames": frames})
+    cache = model.init_cache(batch_size=b, max_seq=s + 4, dtype=jnp.float32)
+    cache = model.start_cache(params, frames, cache)
+    outs = []
+    for t in range(s):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1])
+        outs.append(lg)
+    inc = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits), np.asarray(inc),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,173 @@
+"""Attention: blockwise==dense, masks, RoPE variants, MLA shape/consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(key), shape, dtype)
+
+
+class TestBlockwise:
+    @pytest.mark.parametrize("sq,skv,h,kh,chunk", [
+        (8, 32, 4, 2, 8), (16, 64, 8, 8, 16), (8, 32, 4, 1, 4),
+    ])
+    def test_matches_dense(self, sq, skv, h, kh, chunk):
+        q = _rand(0, 2, sq, h, 16)
+        k = _rand(1, 2, skv, kh, 16)
+        v = _rand(2, 2, skv, kh, 16)
+        qp = jnp.broadcast_to(jnp.arange(skv - sq, skv)[None], (2, sq))
+        kp = jnp.broadcast_to(jnp.arange(skv)[None], (2, skv))
+        mask = attn.make_mask(qp, kp)
+        dense = attn.gqa_attention(q, k, v, mask)
+        block = attn.gqa_attention(q, k, v, mask, kv_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_fully_masked_chunk_safe(self):
+        # Queries early in the sequence: later KV chunks fully masked.
+        q = _rand(0, 1, 4, 2, 8)
+        k = _rand(1, 1, 32, 2, 8)
+        v = _rand(2, 1, 32, 2, 8)
+        qp = jnp.arange(4)[None]
+        kp = jnp.arange(32)[None]
+        mask = attn.make_mask(qp, kp)
+        out = attn.gqa_attention(q, k, v, mask, kv_chunk=8)
+        assert bool(jnp.isfinite(out).all())
+        dense = attn.gqa_attention(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(out),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_softcap(self):
+        q = _rand(0, 1, 8, 2, 8)
+        k = _rand(1, 1, 8, 2, 8)
+        v = _rand(2, 1, 8, 2, 8)
+        p = jnp.arange(8)[None]
+        mask = attn.make_mask(p, p)
+        a = attn.gqa_attention(q, k, v, mask, softcap=20.0)
+        b = attn.gqa_attention(q, k, v, mask)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+class TestMasks:
+    def test_causal(self):
+        qp = jnp.arange(4)[None]
+        m = attn.make_mask(qp, qp)
+        expect = np.tril(np.ones((4, 4), bool))
+        np.testing.assert_array_equal(np.asarray(m[0]), expect)
+
+    def test_window(self):
+        qp = jnp.arange(6)[None]
+        m = attn.make_mask(qp, qp, window=2)
+        got = np.asarray(m[0])
+        assert got[5, 4] and got[5, 5]
+        assert not got[5, 3]   # outside window
+
+    def test_kv_len(self):
+        qp = jnp.array([[10]])
+        kp = jnp.arange(16)[None]
+        m = attn.make_mask(qp, kp, kv_len=jnp.array([11]))
+        got = np.asarray(m[0, 0])
+        assert got[:11].all() and not got[11:].any()
+
+
+class TestRope:
+    def test_preserves_norm(self):
+        x = _rand(0, 2, 8, 4, 16)
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        y = attn.apply_rope(x, pos)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_property(self):
+        # <rope(q,m), rope(k,n)> depends only on m-n.
+        q = _rand(0, 1, 1, 1, 16)
+        k = _rand(1, 1, 1, 1, 16)
+        def dot(m, n):
+            qm = attn.apply_rope(q, jnp.array([[m]]))
+            kn = attn.apply_rope(k, jnp.array([[n]]))
+            return float(jnp.sum(qm * kn))
+        assert dot(3, 1) == pytest.approx(dot(10, 8), rel=1e-4)
+        assert dot(3, 1) != pytest.approx(dot(3, 2), rel=1e-3)
+
+    def test_partial_rope_leaves_tail(self):
+        x = _rand(0, 1, 4, 2, 16)
+        pos = jnp.arange(4)[None]
+        y = attn.apply_rope(x, pos, rot_frac=0.5)
+        np.testing.assert_array_equal(np.asarray(x[..., 8:]),
+                                      np.asarray(y[..., 8:]))
+        assert not np.allclose(np.asarray(x[..., :8]), np.asarray(y[..., :8]))
+
+    def test_mrope_matches_rope_when_positions_equal(self):
+        # If t==h==w position streams, M-RoPE == standard RoPE.
+        x = _rand(0, 2, 6, 2, 16)
+        pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+        mpos = jnp.broadcast_to(pos[None], (3, 2, 6))
+        a = attn.apply_mrope(x, mpos, (2, 3, 3), theta=1e4)
+        b = attn.apply_rope(x, pos, theta=1e4)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_mrope_sections_validated(self):
+        x = _rand(0, 1, 2, 1, 16)
+        mpos = jnp.zeros((3, 1, 2), jnp.int32)
+        with pytest.raises(ValueError, match="sections"):
+            attn.apply_mrope(x, mpos, (4, 4, 4))
+
+
+class TestMLA:
+    def _params(self, key, d, h, lora, nope, rope, vdim):
+        ks = jax.random.split(jax.random.key(key), 7)
+        s = 0.02
+        return {
+            "wq": jax.random.normal(ks[0], (d, h, nope + rope)) * s,
+            "w_dkv": jax.random.normal(ks[1], (d, lora)) * s,
+            "kv_norm": jnp.ones((lora,)),
+            "w_kr": jax.random.normal(ks[2], (d, rope)) * s,
+            "w_uk": jax.random.normal(ks[3], (lora, h, nope)) * s,
+            "w_uv": jax.random.normal(ks[4], (lora, h, vdim)) * s,
+            "wo": jax.random.normal(ks[5], (h, vdim, d)) * s,
+        }
+
+    def test_forward_shape_and_finite(self):
+        d, h = 32, 4
+        p = self._params(0, d, h, 16, 8, 4, 8)
+        x = _rand(1, 2, 8, d)
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        mask = attn.make_mask(pos, pos)
+        out, _ = attn.mla_forward(x, p, pos, num_heads=h, qk_nope=8,
+                                  qk_rope=4, v_dim=8, rope_theta=1e4,
+                                  mask=mask)
+        assert out.shape == (2, 8, d)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_cached_decode_matches_full(self):
+        """Prefill+decode through the compressed cache == full forward."""
+        d, h, s = 32, 4, 8
+        p = self._params(0, d, h, 16, 8, 4, 8)
+        x = _rand(1, 1, s, d)
+        pos = jnp.arange(s)[None]
+        full_mask = attn.make_mask(pos, pos)
+        full, _ = attn.mla_forward(x, p, pos, num_heads=h, qk_nope=8,
+                                   qk_rope=4, v_dim=8, rope_theta=1e4,
+                                   mask=full_mask)
+        # Incremental: feed one token at a time through the cache.
+        cache = {"c_kv": jnp.zeros((1, s, 16)),
+                 "k_rope": jnp.zeros((1, s, 4)),
+                 "index": jnp.zeros((), jnp.int32)}
+        outs = []
+        kv_pos = jnp.arange(s, dtype=jnp.int32)[None]
+        for t in range(s):
+            pt = jnp.array([[t]])
+            mask = attn.make_mask(pt, kv_pos)
+            o, cache = attn.mla_forward(
+                x[:, t:t + 1], p, pt, num_heads=h, qk_nope=8, qk_rope=4,
+                v_dim=8, rope_theta=1e4, mask=mask, cache=cache)
+            outs.append(o)
+        inc = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(inc),
+                                   rtol=2e-4, atol=2e-4)

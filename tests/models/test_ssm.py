@@ -1,0 +1,141 @@
+"""SSM mixers: chunked closed forms == naive scans; state carry; shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import ssm
+
+
+def _rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.key(key), shape) * scale
+
+
+class TestWKV6:
+    def _inputs(self, b=2, s=32, h=2, k=8, v=8, seed=0, wlo=0.2, whi=0.99):
+        ks = jax.random.split(jax.random.key(seed), 5)
+        r = jax.random.normal(ks[0], (b, s, h, k))
+        kk = jax.random.normal(ks[1], (b, s, h, k))
+        vv = jax.random.normal(ks[2], (b, s, h, v))
+        w = jax.random.uniform(ks[3], (b, s, h, k), minval=wlo, maxval=whi)
+        u = jax.random.normal(ks[4], (h, k)) * 0.5
+        s0 = jnp.zeros((b, h, k, v))
+        return r, kk, vv, w, u, s0
+
+    def test_chunked_matches_scan(self):
+        r, k, v, w, u, s0 = self._inputs()
+        y1, st1 = ssm.wkv6_scan(r, k, v, w, u, s0)
+        y2, st2 = ssm.wkv6_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_chunked_matches_scan_extreme_decays(self):
+        # Near-zero decays exercise the LOG_DECAY_MIN clamp: outputs stay
+        # finite and close to the (clamped) reference.
+        r, k, v, w, u, s0 = self._inputs(wlo=1e-6, whi=0.5, seed=3)
+        w_cl = jnp.maximum(w, float(np.exp(ssm.LOG_DECAY_MIN)))
+        y1, _ = ssm.wkv6_scan(r, k, v, w_cl, u, s0)
+        y2, _ = ssm.wkv6_chunked(r, k, v, w, u, s0, chunk=16)
+        assert bool(jnp.isfinite(y2).all())
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_state_carry_across_segments(self):
+        # Running two 16-token segments with carried state == one 32-token run.
+        r, k, v, w, u, s0 = self._inputs(s=32)
+        y_full, st_full = ssm.wkv6_chunked(r, k, v, w, u, s0, chunk=16)
+        y1, st1 = ssm.wkv6_chunked(r[:, :16], k[:, :16], v[:, :16],
+                                   w[:, :16], u, s0, chunk=16)
+        y2, st2 = ssm.wkv6_chunked(r[:, 16:], k[:, 16:], v[:, 16:],
+                                   w[:, 16:], u, st1, chunk=16)
+        np.testing.assert_allclose(np.asarray(y_full),
+                                   np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_seeds(self, seed):
+        r, k, v, w, u, s0 = self._inputs(b=1, s=16, h=1, k=4, v=4, seed=seed)
+        y1, _ = ssm.wkv6_scan(r, k, v, w, u, s0)
+        y2, _ = ssm.wkv6_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMamba:
+    def _inputs(self, b=2, s=32, e=8, n=4, seed=0):
+        ks = jax.random.split(jax.random.key(seed), 6)
+        u = jax.random.normal(ks[0], (b, s, e))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, e)) - 1.0)
+        A = -jnp.exp(jax.random.normal(ks[2], (e, n)) * 0.5)
+        B = jax.random.normal(ks[3], (b, s, n))
+        C = jax.random.normal(ks[4], (b, s, n))
+        D = jax.random.normal(ks[5], (e,))
+        h0 = jnp.zeros((b, e, n))
+        return u, dt, A, B, C, D, h0
+
+    def test_chunked_matches_scan(self):
+        u, dt, A, B, C, D, h0 = self._inputs()
+        y1, h1 = ssm.mamba_scan(u, dt, A, B, C, D, h0)
+        y2, h2 = ssm.mamba_chunked(u, dt, A, B, C, D, h0, chunk=16)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_state_carry(self):
+        u, dt, A, B, C, D, h0 = self._inputs(s=32)
+        y_full, h_full = ssm.mamba_chunked(u, dt, A, B, C, D, h0, chunk=16)
+        y1, h1 = ssm.mamba_chunked(u[:, :16], dt[:, :16], A, B[:, :16],
+                                   C[:, :16], D, h0, chunk=16)
+        y2, h2 = ssm.mamba_chunked(u[:, 16:], dt[:, 16:], A, B[:, 16:],
+                                   C[:, 16:], D, h1, chunk=16)
+        np.testing.assert_allclose(np.asarray(y_full),
+                                   np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_causal_conv(self):
+        x = _rand(0, 1, 8, 4)
+        w = _rand(1, 3, 4)
+        b = jnp.zeros((4,))
+        y, state = ssm.causal_conv1d(x, w, b)
+        assert y.shape == x.shape
+        assert state.shape == (1, 2, 4)
+        # Causality: y[t] must not depend on x[t+1:].
+        x2 = x.at[:, 5].set(99.0)
+        y2, _ = ssm.causal_conv1d(x2, w, b)
+        np.testing.assert_allclose(np.asarray(y[:, :5]),
+                                   np.asarray(y2[:, :5]), rtol=1e-6)
+        assert not np.allclose(np.asarray(y[:, 5:]), np.asarray(y2[:, 5:]))
+
+    def test_conv_state_carry(self):
+        x = _rand(0, 1, 8, 4)
+        w = _rand(1, 3, 4)
+        b = _rand(2, 4) * 0.1
+        y_full, _ = ssm.causal_conv1d(x, w, b)
+        y1, st = ssm.causal_conv1d(x[:, :4], w, b)
+        y2, _ = ssm.causal_conv1d(x[:, 4:], w, b, st)
+        np.testing.assert_allclose(
+            np.asarray(y_full), np.asarray(jnp.concatenate([y1, y2], 1)),
+            rtol=1e-5, atol=1e-6)
+
+
+class TestTokenShift:
+    def test_shift_semantics(self):
+        x = jnp.arange(12, dtype=jnp.float32).reshape(1, 4, 3)
+        y = ssm.token_shift(x)
+        np.testing.assert_array_equal(np.asarray(y[0, 0]), np.zeros(3))
+        np.testing.assert_array_equal(np.asarray(y[0, 1:]),
+                                      np.asarray(x[0, :-1]))
+
+    def test_shift_with_carry(self):
+        x = jnp.ones((1, 4, 3))
+        prev = jnp.full((1, 3), 7.0)
+        y = ssm.token_shift(x, prev)
+        np.testing.assert_array_equal(np.asarray(y[0, 0]), np.full(3, 7.0))

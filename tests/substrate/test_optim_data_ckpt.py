@@ -1,0 +1,170 @@
+"""Substrate tests: optimizer, schedules, compression, data, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, DataLoader, global_batch_at, shard_batch
+
+
+class TestAdamW:
+    def _setup(self):
+        params = {"w": jnp.ones((4, 4), jnp.bfloat16),
+                  "b": jnp.zeros((4,), jnp.bfloat16)}
+        state = optim.init(params)
+        return params, state
+
+    def test_init_dtypes(self):
+        _, state = self._setup()
+        assert state.master["w"].dtype == jnp.float32
+        assert state.m["w"].dtype == jnp.float32
+
+    def test_step_moves_params(self):
+        params, state = self._setup()
+        grads = jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32), params)
+        cfg = optim.AdamWConfig(lr=1e-2)
+        new_params, new_state, metrics = optim.apply(grads, state, cfg)
+        assert int(new_state.step) == 1
+        assert not np.allclose(np.asarray(new_params["w"], np.float32), 1.0)
+        assert float(metrics["grad_norm"]) > 0
+
+    def test_grad_clip(self):
+        params, state = self._setup()
+        big = jax.tree.map(lambda p: 1e6 * jnp.ones_like(p, jnp.float32),
+                           params)
+        cfg = optim.AdamWConfig(lr=1e-2, grad_clip=1.0)
+        new_params, _, m = optim.apply(big, state, cfg)
+        assert np.isfinite(np.asarray(new_params["w"], np.float32)).all()
+
+    def test_convergence_quadratic(self):
+        # Minimize ||w - 3||^2: AdamW should get close in 200 steps.
+        params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+        state = optim.init(params)
+        cfg = optim.AdamWConfig(lr=5e-2, weight_decay=0.0)
+        for _ in range(200):
+            g = {"w": (state.master["w"] - 3.0)}
+            params, state, _ = optim.apply(g, state, cfg)
+        np.testing.assert_allclose(np.asarray(state.master["w"]), 3.0,
+                                   atol=0.15)
+
+
+class TestSchedules:
+    def test_warmup_cosine(self):
+        f = lambda s: float(optim.warmup_cosine(s, warmup_steps=10,
+                                                total_steps=100))
+        assert f(0) == 0.0
+        assert f(10) == pytest.approx(1.0, abs=0.02)
+        assert f(100) == pytest.approx(0.1, abs=0.01)
+        assert f(55) < f(20)
+
+
+class TestCompression:
+    def test_roundtrip_error_small(self):
+        g = jax.random.normal(jax.random.key(0), (1000,))
+        deq, resid = optim.compress_decompress(g)
+        rel = float(jnp.linalg.norm(resid) / jnp.linalg.norm(g))
+        assert rel < 0.01    # int8 block quantization ~0.4% error
+
+    def test_error_feedback_preserves_sum(self):
+        # value + residual == original exactly.
+        g = jax.random.normal(jax.random.key(1), (257,)) * 5
+        deq, resid = optim.compress_decompress(g)
+        np.testing.assert_allclose(np.asarray(deq + resid), np.asarray(g),
+                                   rtol=1e-6)
+
+    def test_wire_bytes(self):
+        params = {"w": jnp.zeros((1024, 1024))}
+        bf16, i8 = optim.wire_bytes_saved(params)
+        assert bf16 == 2 * 1024 * 1024
+        assert i8 < 0.55 * bf16   # ~4x less than fp32, ~2x less than bf16
+
+
+class TestData:
+    CFG = DataConfig(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+
+    def test_deterministic(self):
+        a = global_batch_at(17, self.CFG)
+        b = global_batch_at(17, self.CFG)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        a = global_batch_at(1, self.CFG)
+        b = global_batch_at(2, self.CFG)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_token_range(self):
+        a = global_batch_at(0, self.CFG)
+        assert a["tokens"].min() >= 0
+        assert a["tokens"].max() < self.CFG.vocab_size
+
+    def test_sharding_partitions(self):
+        full = global_batch_at(5, self.CFG)
+        parts = [shard_batch(full, i, 4) for i in range(4)]
+        recon = np.concatenate([p["tokens"] for p in parts], axis=0)
+        np.testing.assert_array_equal(recon, full["tokens"])
+
+    def test_elastic_resharding_same_data(self):
+        """Restarting with a different shard count yields the same global
+        batch — the fault-tolerance property."""
+        full = global_batch_at(9, self.CFG)
+        two = np.concatenate(
+            [shard_batch(full, i, 2)["tokens"] for i in range(2)], axis=0)
+        eight = np.concatenate(
+            [shard_batch(full, i, 8)["tokens"] for i in range(8)], axis=0)
+        np.testing.assert_array_equal(two, eight)
+
+    def test_loader_prefetch_consistent(self):
+        dl = DataLoader(self.CFG, shard=1, num_shards=2)
+        b0 = dl.batch_at(0)
+        b1 = dl.batch_at(1)     # served from prefetch
+        ref = shard_batch(global_batch_at(1, self.CFG), 1, 2)
+        np.testing.assert_array_equal(b1["tokens"], ref["tokens"])
+
+
+class TestCheckpointer:
+    def _tree(self, scale=1.0):
+        return {"params": {"w": jnp.full((8, 8), scale, jnp.bfloat16)},
+                "opt": {"m": jnp.full((8, 8), scale / 2, jnp.float32)},
+                "step": jnp.asarray(7, jnp.int32)}
+
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = self._tree(3.0)
+        ck.save(100, tree, blocking=True)
+        out = ck.restore(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+        np.testing.assert_array_equal(np.asarray(out["params"]["w"],
+                                                 np.float32), 3.0)
+        assert int(out["step"]) == 7
+
+    def test_latest_and_retention(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, self._tree(float(s)), blocking=True)
+        assert ck.latest_step() == 4
+        assert ck.all_steps() == [3, 4]   # retention pruned 1, 2
+
+    def test_atomic_no_partial_dirs(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(5, self._tree(), blocking=True)
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, self._tree(), blocking=True)
+        bad = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)},
+               "opt": {"m": jax.ShapeDtypeStruct((8, 8), jnp.float32)},
+               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        with pytest.raises(ValueError, match="shape"):
+            ck.restore(bad)
+
+    def test_async_overlaps(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, self._tree())       # non-blocking
+        ck.save(2, self._tree())       # waits for 1, starts 2
+        ck.wait()
+        assert set(ck.all_steps()) == {1, 2}

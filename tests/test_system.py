@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the full system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_paper_pipeline_end_to_end():
+    """The paper's workflow: configure engines via registers -> run every
+    suite -> numbers match the published ones."""
+    from repro.core import HBM, ShuhaiCampaign
+    camp = ShuhaiCampaign(HBM)
+    lat = camp.suite_idle_latency()
+    assert lat["page_hit"]["cycles"] == 48
+    tot = camp.suite_total_throughput()
+    assert tot["total_gbps"] == pytest.approx(425, rel=0.02)
+    sw = camp.suite_switch_latency()
+    assert sw[31]["hit"] - sw[0]["hit"] == 22
+
+
+def test_training_reduces_loss():
+    """Tiny LM trains end to end (data -> step -> optimizer) and the loss
+    drops substantially (learns the synthetic distribution)."""
+    from repro.launch.train import run_training
+    out = run_training("gemma3-1b", steps=25, smoke=True, global_batch=4,
+                       seq_len=64, log_every=100)
+    losses = out["losses"]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_checkpoint_restart_resumes_exactly(tmp_path):
+    """Determinism: stop after N steps, restore, continue -> same states as
+    an uninterrupted run (fault-tolerance property)."""
+    from repro import optim
+    from repro.checkpoint import Checkpointer
+    from repro.configs import get_config
+    from repro.data import DataConfig, DataLoader
+    from repro.launch.train import init_state, make_train_step
+    from repro.models.registry import build
+
+    cfg = get_config("starcoder2-7b", smoke=True)
+    model = build(cfg)
+    step_fn = jax.jit(make_train_step(model, cfg, None, optim.AdamWConfig()))
+    data = DataLoader(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                 global_batch=2))
+
+    def run(state, lo, hi):
+        for s in range(lo, hi):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+            state, _ = step_fn(state, batch)
+        return state
+
+    # Uninterrupted 6 steps.
+    ref = run(init_state(model, cfg, jax.random.key(5)), 0, 6)
+    # Interrupted at 3 with checkpoint + restore.
+    ck = Checkpointer(str(tmp_path))
+    mid = run(init_state(model, cfg, jax.random.key(5)), 0, 3)
+    ck.save(2, mid, blocking=True)
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), mid)
+    resumed = run(ck.restore(tmpl), 3, 6)
+
+    for a, b in zip(jax.tree.leaves(ref.master),
+                    jax.tree.leaves(resumed.master)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_serving_end_to_end():
+    from repro.configs import get_config
+    from repro.models.common import init_params
+    from repro.models.registry import build
+    from repro.serving import ContinuousBatchingEngine, Request
+
+    cfg = get_config("nemotron-4-15b", smoke=True)
+    model = build(cfg)
+    params = init_params(jax.random.key(1), model.param_specs(),
+                         dtype=jnp.float32)
+    eng = ContinuousBatchingEngine(model, params, slots=2, max_seq=32,
+                                   eos_id=-1)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=4)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.completed == 3
+    assert all(len(r.generated) == 4 for r in reqs)
+
+
+def test_oracle_feeds_framework_decisions():
+    """The paper's technique as a feature: oracle numbers flow into layout
+    and microbatch decisions."""
+    from repro.core import MemoryOracle, advise_microbatch, choose_layout
+    oracle = MemoryOracle()
+    lay = choose_layout(oracle, {"seq": 8192, "kv_heads": 4, "head_dim": 64},
+                        2, iterate_dim="seq",
+                        fetch_dims=("kv_heads", "head_dim"))
+    assert lay.dims[0] == "seq"      # contiguous per-step fetch wins
+    mb = advise_microbatch(oracle, param_bytes_per_device=2 * 2**30,
+                           opt_state_bytes_per_device=4 * 2**30,
+                           act_bytes_per_sample=512 * 2**20,
+                           max_microbatch=32)
+    assert 1 <= mb <= 16
