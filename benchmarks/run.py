@@ -5,11 +5,17 @@ time of running the suite through the calibrated engine model (the
 measurement machinery itself); `derived` carries the headline quantity the
 paper reports for that artifact.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+With ``--json PATH`` the same rows (plus totals) are written as a
+``BENCH_*.json`` perf-trajectory file so successive PRs can track the
+sim-backend speedup.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -68,8 +74,18 @@ def bench_fig7_locality(quick=False):
     from repro.core import HBM, ShuhaiCampaign
     camp = ShuhaiCampaign(HBM)
     res, dt = _timed(lambda: camp.suite_locality(n=1024 if quick else 4096))
-    local = res[8 * 1024][32].get(4096)
-    base = res[256 * 1024 * 1024][32].get(4096)
+    b, s = HBM.min_burst, 4096
+    try:
+        local = res[8 * 1024][b][s]
+        base = res[256 * 1024 * 1024][b][s]
+    except KeyError as e:
+        # suite_locality omits RST-invalid (S < B or S > W) combos; the
+        # headline point must exist, so a miss is a bug, not a skip.
+        raise KeyError(
+            f"suite_locality result is missing burst={b} stride={s}: {e}; "
+            f"available strides per window: "
+            f"{ {w: sorted(per_b.get(b, {})) for w, per_b in res.items()} }"
+        ) from e
     return [("fig7_locality_hbm", dt,
              f"w8k_s4k_gbps={local:.2f};w256m_s4k_gbps={base:.2f}")]
 
@@ -148,6 +164,30 @@ def bench_tpu_rst_kernel(quick=False):
     return rows
 
 
+def bench_sweep_grid(quick=False):
+    """Sweep planner: one batched (policy x stride x channel) campaign grid,
+    exercising memoization + channel broadcast (core/sweep.py)."""
+    from repro.core import HBM, RSTParams, Sweep
+
+    strides = (64, 1024) if quick else (64, 256, 1024, 4096)
+    channels = range(0, 32, 4)
+    n = 1024 if quick else 4096
+
+    def run():
+        sweep = Sweep(HBM)
+        sweep.add_grid(
+            [RSTParams(n=n, b=64, s=s, w=0x10000000) for s in strides],
+            policies=("RGBCG", "RBC", "BRC"), channels=tuple(channels))
+        results = sweep.run()
+        return sweep.stats, results
+
+    (stats, results), dt = _timed(run)
+    gbps = [r.value.gbps for r in results]
+    return [("sweep_grid_hbm", dt,
+             f"points={stats.points};evaluated={stats.evaluated};"
+             f"cache_hits={stats.cache_hits};max_gbps={max(gbps):.2f}")]
+
+
 def bench_oracle_autotune():
     """Framework integration: oracle efficiency + KV layout choice."""
     from repro.core import AccessPattern, MemoryOracle, choose_layout
@@ -168,8 +208,21 @@ def bench_oracle_autotune():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a BENCH_*.json perf-trajectory "
+                         "file at PATH")
     args, _ = ap.parse_known_args()
     q = args.quick
+    if args.json:
+        # Fail before the (minutes-long, non-quick) run, not at write time.
+        if os.path.isdir(args.json) or args.json.endswith(os.sep):
+            ap.error(f"--json: {args.json!r} is a directory, expected a file "
+                     "path")
+        json_dir = os.path.dirname(os.path.abspath(args.json)) or "."
+        if not os.path.isdir(json_dir):
+            ap.error(f"--json: directory {json_dir!r} does not exist")
+        if not os.access(json_dir, os.W_OK):
+            ap.error(f"--json: directory {json_dir!r} is not writable")
 
     print("name,us_per_call,derived")
     suites = [
@@ -180,18 +233,39 @@ def main() -> None:
         bench_table5_total_throughput,
         bench_table6_switch_latency,
         bench_fig8_switch_throughput,
+        lambda: bench_sweep_grid(q),
         bench_table3_resources,
         lambda: bench_tpu_rst_kernel(q),
         bench_oracle_autotune,
     ]
+    rows = []
     failures = 0
+    t0 = time.perf_counter()
     for suite in suites:
         try:
             for name, us, derived in suite():
                 print(f"{name},{us:.0f},{derived}")
+                rows.append({"name": name, "us_per_call": round(us, 1),
+                             "derived": derived})
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"ERROR,{suite},{type(e).__name__}: {e}", file=sys.stderr)
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    if args.json:
+        payload = {
+            "benchmark": "shuhai-campaign",
+            "quick": q,
+            "unix_time": time.time(),
+            "wall_us": round(wall_us, 1),
+            "suite_us_total": round(sum(r["us_per_call"] for r in rows), 1),
+            "failures": failures,
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+
     if failures:
         raise SystemExit(1)
 

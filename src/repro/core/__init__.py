@@ -7,6 +7,7 @@ Public surface:
   serial_read_latencies, throughput — the calibrated timing model
   Engine                            — one benchmarking engine per channel
   ShuhaiCampaign                    — host-side suites (one per table/figure)
+  Sweep                             — batch-first campaign grids (memoized)
   SwitchModel, HBMTopology          — Sec. II / VI switch + topology
   MemoryOracle, AccessPattern       — TPU-facing constants + derating
   choose_layout, advise_microbatch  — the technique as a framework feature
@@ -22,6 +23,7 @@ from repro.core.latency import LatencyModule
 from repro.core.oracle import AccessPattern, MemoryOracle
 from repro.core.params import EngineRegisters, RSTParams
 from repro.core.rst import addresses_jnp, addresses_np, block_params
+from repro.core.sweep import Sweep, SweepPoint, SweepResult
 from repro.core.switch import SwitchModel
 from repro.core.timing_model import (LatencyTrace, ThroughputResult,
                                      refresh_interval_estimate,
@@ -36,6 +38,7 @@ __all__ = [
     "LatencyModule", "AccessPattern", "MemoryOracle",
     "EngineRegisters", "RSTParams",
     "addresses_jnp", "addresses_np", "block_params",
+    "Sweep", "SweepPoint", "SweepResult",
     "SwitchModel", "LatencyTrace", "ThroughputResult",
     "refresh_interval_estimate", "serial_read_latencies", "throughput",
 ]

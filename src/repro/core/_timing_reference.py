@@ -1,0 +1,150 @@
+"""Pre-vectorization reference implementation of the DRAM timing model.
+
+This is the original per-transaction Python-loop model, kept verbatim as the
+golden oracle for the vectorized implementation in
+:mod:`repro.core.timing_model`.  The parity tests
+(tests/core/test_timing_parity.py) assert that the vectorized model matches
+these loops transaction-for-transaction across the hit/closed/miss, refresh,
+and bank-group-run regimes on both HBM and DDR4.
+
+Do not optimize this module: its value is being slow and obviously correct.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.address_mapping import AddressMapping
+from repro.core.hwspec import MemorySpec
+from repro.core.params import RSTParams
+from repro.core.timing_model import (_MAX_EXPAND, _REORDER_WINDOW, PAGE_CLOSED,
+                                     PAGE_HIT, PAGE_MISS, LatencyTrace,
+                                     ThroughputResult, _expand_addresses)
+
+
+def serial_read_latencies(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    switch_enabled: bool = False,
+    switch_extra_cycles: int = 0,
+) -> LatencyTrace:
+    """Reference serial-latency loop: one transaction per Python iteration."""
+    p.validate(spec)
+    addrs = _expand_addresses(p)
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id(addrs))
+    row = dec["R"]
+
+    base_extra = (spec.switch_penalty if switch_enabled else 0) + (
+        switch_extra_cycles if switch_enabled else 0)
+
+    open_row: Dict[int, int] = {}
+    now_ns = 0.0
+    next_refresh = spec.t_refi_ns
+    lat = np.zeros(len(addrs), dtype=np.float64)
+    states = []
+    refresh_hits = np.zeros(len(addrs), dtype=bool)
+
+    for i in range(len(addrs)):
+        stall_ns = 0.0
+        # Refresh closes all banks; a transaction arriving during the
+        # refresh cycle stalls until it completes (Sec. V-A).
+        while now_ns >= next_refresh:
+            open_row.clear()
+            refresh_end = next_refresh + spec.t_rfc_ns
+            if now_ns < refresh_end:
+                stall_ns = refresh_end - now_ns
+                refresh_hits[i] = True
+            next_refresh += spec.t_refi_ns
+
+        b, r = int(bank[i]), int(row[i])
+        if b in open_row and open_row[b] == r:
+            state, cyc = PAGE_HIT, spec.lat_page_hit
+        elif b not in open_row:
+            state, cyc = PAGE_CLOSED, spec.lat_page_closed
+        else:
+            state, cyc = PAGE_MISS, spec.lat_page_miss
+        open_row[b] = r
+
+        total_cycles = cyc + base_extra + spec.ns_to_cycles(stall_ns)
+        lat[i] = total_cycles
+        states.append(state)
+        now_ns += spec.cycles_to_ns(total_cycles)
+
+    return LatencyTrace(cycles=lat, states=states, refresh_hits=refresh_hits)
+
+
+def throughput(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    op: str = "read",
+) -> ThroughputResult:
+    """Reference throughput model: per-window dict loops."""
+    del op  # symmetric in this model
+    p.validate(spec)
+    txn_addrs = _expand_addresses(p)
+    cmds_per_txn = max(1, p.b // spec.bus_bytes_per_cycle)
+    max_txns = max(16, _MAX_EXPAND // cmds_per_txn)
+    if len(txn_addrs) > max_txns:
+        txn_addrs = txn_addrs[:max_txns]
+    offs = np.arange(cmds_per_txn, dtype=np.int64) * spec.bus_bytes_per_cycle
+    addrs = (txn_addrs[:, None] + offs[None, :]).reshape(-1)
+    n = len(addrs)
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id(addrs))
+    row = np.asarray(dec["R"])
+    bg = np.asarray(dec["BG"])
+
+    ccd_l_cyc = spec.ns_to_cycles(spec.t_ccd_l_ns)
+
+    # --- command-issue bound (data bus + bank-group tCCD_L) ----------------
+    transitions = int(np.count_nonzero(bg[1:] != bg[:-1]))
+    run_len = n / (transitions + 1)
+    g_cap = max(1.0, _REORDER_WINDOW / (2.0 * run_len))
+    issue_cycles = 0.0
+    for lo in range(0, n, _REORDER_WINDOW):
+        chunk_bg = bg[lo:lo + _REORDER_WINDOW]
+        g = min(float(len(np.unique(chunk_bg))), g_cap)
+        rate = min(1.0, g / ccd_l_cyc)           # commands per cycle
+        issue_cycles += len(chunk_bg) / rate
+
+    # --- bank bound (row activations serialize at tRC per bank) ------------
+    open_row: Dict[int, int] = {}
+    total_acts = 0
+    t_rc_cyc = spec.ns_to_cycles(spec.t_rc_ns)
+    bank_cycles = 0.0
+    for lo in range(0, n, _REORDER_WINDOW):
+        acts_in_window: Dict[int, int] = {}
+        for i in range(lo, min(lo + _REORDER_WINDOW, n)):
+            b_, r_ = int(bank[i]), int(row[i])
+            if open_row.get(b_) != r_:
+                acts_in_window[b_] = acts_in_window.get(b_, 0) + 1
+                open_row[b_] = r_
+                total_acts += 1
+        if acts_in_window:
+            bank_cycles += max(acts_in_window.values()) * t_rc_cyc
+
+    # --- four-activate-window bound ----------------------------------------
+    faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0
+
+    bounds = {"bus/ccd": issue_cycles, "bank": bank_cycles, "faw": faw_cycles}
+    bound_name = max(bounds, key=bounds.get)
+    steady_cycles = bounds[bound_name]
+
+    eff = (1.0 - spec.t_rfc_ns / spec.t_refi_ns) * (1.0 - spec.sched_overhead)
+    total_bytes = len(txn_addrs) * p.b
+    seconds = spec.cycles_to_ns(steady_cycles) * 1e-9
+    gbps = total_bytes / seconds / 1e9 * eff if seconds > 0 else 0.0
+    gbps = min(gbps, spec.peak_channel_gbps)
+
+    return ThroughputResult(
+        gbps=gbps,
+        bound=bound_name,
+        detail={**bounds, "txns": float(n), "cmds_per_txn": float(cmds_per_txn),
+                "total_acts": float(total_acts), "efficiency": eff},
+    )

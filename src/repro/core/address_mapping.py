@@ -15,6 +15,7 @@ the timing model.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -70,14 +71,21 @@ class AddressMapping:
         ignored, as in the controller (app_addr[27:5] for HBM).
         """
         a = np.asarray(app_addr, dtype=np.int64) >> self.spec.addr_lsb
-        out = {"R": np.zeros_like(a), "BG": np.zeros_like(a),
-               "B": np.zeros_like(a), "C": np.zeros_like(a)}
+        out: Dict[str, np.ndarray] = {}
         pos = self.mapped_bits
         for f, n in self.fields:           # MSB-first
             pos -= n
             piece = (a >> pos) & ((1 << n) - 1)
-            out[f] = (out[f] << n) | piece
+            prev = out.get(f)
+            out[f] = piece if prev is None else (prev << n) | piece
+        for f in ("R", "BG", "B", "C"):    # zero-width fields, if any
+            out.setdefault(f, np.zeros_like(a))
         return out
+
+    def bank_id_from(self, decoded: Dict[str, np.ndarray]):
+        """Flat bank index from already-decoded fields (avoids re-decoding
+        the address stream on the timing model's hot path)."""
+        return decoded["BG"] * (1 << self.spec.bank_bits) + decoded["B"]
 
     def encode(self, r, bg, b, c):
         """Inverse of decode: fields -> byte address (LSBs zero)."""
@@ -101,8 +109,7 @@ class AddressMapping:
 
     def bank_id(self, app_addr):
         """Flat bank index combining bank-group and bank fields."""
-        d = self.decode(app_addr)
-        return d["BG"] * (1 << self.spec.bank_bits) + d["B"]
+        return self.bank_id_from(self.decode(app_addr))
 
 
 # --- paper Table II --------------------------------------------------------
@@ -125,15 +132,23 @@ _DDR4_POLICIES = {
 DEFAULT_POLICY = {"hbm": "RGBCG", "ddr4": "RCB"}
 
 
-def policies_for(spec: MemorySpec) -> Dict[str, AddressMapping]:
+@functools.lru_cache(maxsize=None)
+def _policies_for_cached(spec: MemorySpec) -> Dict[str, AddressMapping]:
+    # Mappings are immutable and specs are frozen dataclasses, so the parsed
+    # policy table can be built once per spec — get_mapping sits on the
+    # timing model's hot path and is called once per sweep point.
     table = _HBM_POLICIES if spec.name == "hbm" else _DDR4_POLICIES
     return {name: AddressMapping(name, tuple(parse_policy(desc)), spec)
             for name, desc in table.items()}
 
 
+def policies_for(spec: MemorySpec) -> Dict[str, AddressMapping]:
+    return dict(_policies_for_cached(spec))
+
+
 def get_mapping(spec: MemorySpec, policy: str | None = None) -> AddressMapping:
     policy = policy or DEFAULT_POLICY[spec.name]
-    pols = policies_for(spec)
+    pols = _policies_for_cached(spec)
     if policy not in pols:
         raise ValueError(
             f"policy {policy!r} not available for {spec.name}; "

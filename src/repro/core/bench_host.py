@@ -5,11 +5,18 @@ module over PCIe: it packs runtime registers, fans them out to M engines
 (M = 32 for HBM, M = 2 for DDR4, Fig. 3), triggers runs, and collects
 status/latency lists.  Every paper table/figure has a `suite_*` method here;
 benchmarks/ are thin CSV printers over these.
+
+Since the sweep refactor the multi-point suites are *batch-first*: each one
+plans its whole (params × policy × channel) grid as a `core.sweep.Sweep`
+and executes it in one `run()`, which memoizes repeated points and
+broadcasts channel-independent results (DESIGN.md §4).  Single-point suites
+(`suite_refresh`, `suite_idle_latency`) keep the register-faithful
+configure-then-trigger flow through one engine.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -19,6 +26,7 @@ from repro.core.engine import Engine
 from repro.core.hwspec import DDR4, HBM, MemorySpec
 from repro.core.latency import LatencyModule
 from repro.core.params import RSTParams
+from repro.core.sweep import Sweep
 from repro.core.switch import SwitchModel
 from repro.core.timing_model import refresh_interval_estimate
 
@@ -40,6 +48,9 @@ class ShuhaiCampaign:
     # ------------------------------------------------------------------ utils
     def _engine(self, ch: int) -> Engine:
         return self.engines[ch]
+
+    def _sweep(self) -> Sweep:
+        return Sweep(self.spec, self.backend)
 
     # --------------------------------------------------------------- Fig. 4
     def suite_refresh(self, n: int = 1024) -> Dict[str, object]:
@@ -91,21 +102,22 @@ class ShuhaiCampaign:
         w: int = 0x10000000,
         n: int = 4096,
     ) -> Dict[str, Dict[int, Dict[int, float]]]:
-        """Throughput for every address-mapping policy x stride x burst."""
+        """Throughput for every address-mapping policy x stride x burst,
+        planned as one batched sweep."""
         bursts = bursts or (self.spec.min_burst, 2 * self.spec.min_burst)
-        eng = self._engine(0)
-        results: Dict[str, Dict[int, Dict[int, float]]] = {}
+        sweep = self._sweep()
+        keys: List[Tuple[str, int, int]] = []
         for policy in policies_for(self.spec):
-            per_b: Dict[int, Dict[int, float]] = {}
             for b in bursts:
-                per_s: Dict[int, float] = {}
                 for s in strides:
                     if s < b:
                         continue
-                    eng.configure_read(RSTParams(n=n, b=b, s=s, w=w))
-                    per_s[s] = eng.read_throughput(policy=policy).gbps
-                per_b[b] = per_s
-            results[policy] = per_b
+                    sweep.add(RSTParams(n=n, b=b, s=s, w=w), policy=policy)
+                    keys.append((policy, b, s))
+        results: Dict[str, Dict[int, Dict[int, float]]] = {
+            policy: {b: {} for b in bursts} for policy in policies_for(self.spec)}
+        for (policy, b, s), r in zip(keys, sweep.run()):
+            results[policy][b][s] = r.value.gbps
         return results
 
     # --------------------------------------------------------------- Fig. 7
@@ -115,34 +127,48 @@ class ShuhaiCampaign:
         bursts: Optional[Sequence[int]] = None,
         n: int = 4096,
     ) -> Dict[int, Dict[int, Dict[int, float]]]:
-        """W=8K (locality) vs W=256M (baseline) throughput (Sec. V-E)."""
+        """W=8K (locality) vs W=256M (baseline) throughput (Sec. V-E).
+
+        Combinations with S < B or S > W violate the RST constraints
+        (Table I) and are omitted from the result — the returned per-burst
+        dict then simply lacks that stride key, so consumers must guard
+        lookups (see benchmarks/run.py:bench_fig7_locality).
+        """
         bursts = bursts or (self.spec.min_burst, 2 * self.spec.min_burst)
-        eng = self._engine(0)
-        results: Dict[int, Dict[int, Dict[int, float]]] = {}
-        for w in (8 * 1024, 256 * MB):
-            per_b: Dict[int, Dict[int, float]] = {}
+        sweep = self._sweep()
+        keys: List[Tuple[int, int, int]] = []
+        windows = (8 * 1024, 256 * MB)
+        for w in windows:
             for b in bursts:
-                per_s: Dict[int, float] = {}
                 for s in strides:
                     if s < b or s > w:
-                        continue
-                    eng.configure_read(RSTParams(n=n, b=b, s=s, w=w))
-                    per_s[s] = eng.read_throughput().gbps
-                per_b[b] = per_s
-            results[w] = per_b
+                        continue  # invalid RST point (Table I): skipped
+                    sweep.add(RSTParams(n=n, b=b, s=s, w=w))
+                    keys.append((w, b, s))
+        results: Dict[int, Dict[int, Dict[int, float]]] = {
+            w: {b: {} for b in bursts} for w in windows}
+        for (w, b, s), r in zip(keys, sweep.run()):
+            results[w][b][s] = r.value.gbps
         return results
 
     # --------------------------------------------------------------- Table V
     def suite_total_throughput(self) -> Dict[str, float]:
         """All M engines hit their local channels simultaneously; per the
         paper (footnote 11) channels are independent, so the aggregate is
-        per-channel throughput x M."""
+        per-channel throughput x M.  The sweep evaluates one channel and
+        broadcasts it to the other M-1."""
         p = RSTParams(n=8192, b=self.spec.min_burst, s=self.spec.min_burst,
                       w=0x10000000)
-        per_channel = []
+        sweep = self._sweep()
         for eng in self.engines:
             eng.configure_read(p)
-            per_channel.append(eng.read_throughput().gbps)
+            sweep.add(p, channel=eng.channel)
+        per_channel = [r.value.gbps for r in sweep.run()]
+        if self.backend == "sim":
+            # Mirror the read module's completion count, as read_throughput
+            # would have (status register, Sec. III-C-3).
+            for eng in self.engines:
+                eng.registers = dataclasses.replace(eng.registers, status=p.n)
         return {
             "per_channel_gbps": float(np.mean(per_channel)),
             "num_channels": len(self.engines),
@@ -153,23 +179,30 @@ class ShuhaiCampaign:
     # -------------------------------------------------------------- Table VI
     def suite_switch_latency(self, dst_channel: int = 0
                              ) -> Dict[int, Dict[str, float]]:
-        """Idle latency from every AXI channel to one HBM channel, switch ON."""
+        """Idle latency from every AXI channel to one HBM channel, switch ON.
+
+        Batched: all 64 probe runs are planned in one sweep, and the four
+        channels of each mini-switch share a switch distance, so only the
+        8 distinct (params, extra) latency points are simulated."""
         if self.spec.name != "hbm":
             raise ValueError("the DDR4 controller has no switch (Sec. IV-D)")
         module = LatencyModule()
+        p_small = RSTParams(n=1024, b=32, s=128, w=0x1000000)
+        p_large = RSTParams(n=1024, b=32, s=128 * 1024, w=0x1000000)
+        sweep = self._sweep()
+        for ch in range(NUM_AXI_CHANNELS):
+            for p in (p_small, p_large):
+                sweep.add_latency(p, channel=ch, dst_channel=dst_channel,
+                                  switch_enabled=True)
+        results = sweep.run()
         out: Dict[int, Dict[str, float]] = {}
         for ch in range(NUM_AXI_CHANNELS):
             eng = self._engine(ch)
-            eng.configure_read(RSTParams(n=1024, b=32, s=128, w=0x1000000))
-            cap_small = module.capture(eng.read_latency(
-                dst_channel=dst_channel, switch_enabled=True))
             extra = eng.switch.distance_extra_cycles(ch, dst_channel) + \
                 self.spec.switch_penalty
+            cap_small = module.capture(results[2 * ch].value)
             cats = module.category_latencies(cap_small, self.spec, extra)
-            eng.configure_read(RSTParams(n=1024, b=32, s=128 * 1024,
-                                         w=0x1000000))
-            cap_large = module.capture(eng.read_latency(
-                dst_channel=dst_channel, switch_enabled=True))
+            cap_large = module.capture(results[2 * ch + 1].value)
             cats_miss = module.category_latencies(cap_large, self.spec, extra)
             out[ch] = {"hit": cats["hit"], "closed": cats["closed"],
                        "miss": cats_miss["miss"]}
@@ -181,18 +214,21 @@ class ShuhaiCampaign:
         strides: Sequence[int] = (64, 256, 1024, 4096),
     ) -> Dict[int, Dict[int, float]]:
         """Throughput from one AXI channel per mini-switch to HBM channel 0.
-        Paper setting: B=64, W=0x1000000, N=200000."""
+        Paper setting: B=64, W=0x1000000, N=200000.  One sweep point per
+        stride; the non-blocking switch broadcasts it to all mini-switches."""
         if self.spec.name != "hbm":
             raise ValueError("the DDR4 controller has no switch")
-        out: Dict[int, Dict[int, float]] = {}
+        sweep = self._sweep()
+        keys: List[Tuple[int, int]] = []
         for sw in range(NUM_AXI_CHANNELS // AXI_PER_MINI_SWITCH):
             ch = sw * AXI_PER_MINI_SWITCH
-            eng = self._engine(ch)
-            per_s = {}
             for s in strides:
-                eng.configure_read(RSTParams(n=200000, b=64, s=s, w=0x1000000))
-                per_s[s] = eng.read_throughput(dst_channel=dst_channel).gbps
-            out[ch] = per_s
+                sweep.add(RSTParams(n=200000, b=64, s=s, w=0x1000000),
+                          channel=ch, dst_channel=dst_channel)
+                keys.append((ch, s))
+        out: Dict[int, Dict[int, float]] = {}
+        for (ch, s), r in zip(keys, sweep.run()):
+            out.setdefault(ch, {})[s] = r.value.gbps
         return out
 
 

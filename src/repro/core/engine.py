@@ -8,11 +8,16 @@ never the bottleneck.  Two backends implement the same interface:
                U280 numbers on this CPU-only container);
 * ``pallas`` — the real TPU kernels (kernels/rst_read.py, rst_write.py),
                run in interpret mode for validation here, compiled on TPU.
+
+The register-driven methods (`read_throughput`, `read_latency`, ...) mirror
+the paper's configure-then-trigger flow.  The `evaluate_*` methods take
+RSTParams directly and never touch the register file; `core/sweep.py` uses
+them to batch-evaluate whole campaign grids with memoization.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -61,26 +66,76 @@ class Engine:
         dst = self.channel if dst_channel is None else dst_channel
         return self.switch.total_extra_cycles(self.channel, dst)
 
+    def throughput_scale(self, dst_channel: Optional[int]) -> float:
+        """Switch datapath scale for a read hitting `dst_channel` (Fig. 8)."""
+        if self.spec.name != "hbm" or self.switch is None:
+            return 1.0
+        dst = self.channel if dst_channel is None else dst_channel
+        return self.switch.throughput_scale(self.channel, dst)
+
+    # -- parameter-direct evaluation (used by register methods and sweeps) ---
+    def evaluate_throughput(self, p: RSTParams, *,
+                            policy: Optional[str] = None,
+                            dst_channel: Optional[int] = None,
+                            op: str = "read") -> timing_model.ThroughputResult:
+        """Evaluate one throughput point without touching the register file."""
+        p = p.validate(self.spec)
+        if self.backend == "sim":
+            res = timing_model.throughput(p, self._mapping(policy), self.spec,
+                                          op=op)
+            if op == "read":
+                scale = self.throughput_scale(dst_channel)
+                if scale != 1.0:
+                    res = dataclasses.replace(res, gbps=res.gbps * scale)
+            return res
+        from repro.kernels import ops  # deferred: keeps sim path jax-free
+        sample = (ops.measure_read_bandwidth(p) if op == "read"
+                  else ops.measure_write_bandwidth(p))
+        return timing_model.ThroughputResult(
+            gbps=sample.gbps, bound="measured",
+            detail={"seconds": sample.seconds,
+                    "bytes": float(sample.bytes_moved)})
+
+    def latency_config(self, dst_channel: Optional[int] = None,
+                       switch_enabled: Optional[bool] = None
+                       ) -> Tuple[bool, int]:
+        """Resolve (switch_enabled, extra_cycles) for a latency run.  The
+        switch is DISABLED by default, matching paper footnote 6."""
+        enabled = (False if switch_enabled is None else switch_enabled)
+        extra = 0
+        if enabled and self.spec.name == "hbm" and self.switch is not None:
+            sw = dataclasses.replace(self.switch, enabled=True)
+            dst = self.channel if dst_channel is None else dst_channel
+            extra = sw.distance_extra_cycles(self.channel, dst)
+        return enabled, extra
+
+    def evaluate_latency(self, p: RSTParams, *,
+                         policy: Optional[str] = None,
+                         dst_channel: Optional[int] = None,
+                         switch_enabled: Optional[bool] = None
+                         ) -> timing_model.LatencyTrace:
+        """Evaluate one serial-latency point without the register file."""
+        if self.backend != "sim":
+            raise NotImplementedError(
+                "per-transaction latency needs on-chip timers; on TPU use "
+                "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
+                "the sim backend (DESIGN.md §2)")
+        p = p.validate(self.spec)
+        enabled, extra = self.latency_config(dst_channel, switch_enabled)
+        return timing_model.serial_read_latencies(
+            p, self._mapping(policy), self.spec,
+            switch_enabled=enabled, switch_extra_cycles=extra)
+
     # -- read module ---------------------------------------------------------
     def read_throughput(self, policy: Optional[str] = None,
                         dst_channel: Optional[int] = None
                         ) -> timing_model.ThroughputResult:
         p = self.registers.read_params.validate(self.spec)
+        res = self.evaluate_throughput(p, policy=policy,
+                                       dst_channel=dst_channel, op="read")
         if self.backend == "sim":
-            res = timing_model.throughput(p, self._mapping(policy), self.spec)
-            if self.spec.name == "hbm" and self.switch is not None:
-                dst = self.channel if dst_channel is None else dst_channel
-                scale = self.switch.throughput_scale(self.channel, dst)
-                res = dataclasses.replace(res, gbps=res.gbps * scale)
-            self.registers = dataclasses.replace(
-                self.registers, status=p.n)
-            return res
-        from repro.kernels import ops  # deferred: keeps sim path jax-free
-        sample = ops.measure_read_bandwidth(p)
-        return timing_model.ThroughputResult(
-            gbps=sample.gbps, bound="measured",
-            detail={"seconds": sample.seconds,
-                    "bytes": float(sample.bytes_moved)})
+            self.registers = dataclasses.replace(self.registers, status=p.n)
+        return res
 
     def read_latency(self, policy: Optional[str] = None,
                      dst_channel: Optional[int] = None,
@@ -90,34 +145,14 @@ class Engine:
         latency runs, matching paper footnote 6; pass switch_enabled=True
         for the Table VI experiments."""
         p = self.registers.read_params.validate(self.spec)
-        if self.backend != "sim":
-            raise NotImplementedError(
-                "per-transaction latency needs on-chip timers; on TPU use "
-                "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
-                "the sim backend (DESIGN.md §2)")
-        enabled = (False if switch_enabled is None else switch_enabled)
-        extra = 0
-        if enabled and self.spec.name == "hbm" and self.switch is not None:
-            sw = dataclasses.replace(self.switch, enabled=True)
-            dst = self.channel if dst_channel is None else dst_channel
-            extra = sw.distance_extra_cycles(self.channel, dst)
-        return timing_model.serial_read_latencies(
-            p, self._mapping(policy), self.spec,
-            switch_enabled=enabled, switch_extra_cycles=extra)
+        return self.evaluate_latency(p, policy=policy, dst_channel=dst_channel,
+                                     switch_enabled=switch_enabled)
 
     # -- write module ----------------------------------------------------------
     def write_throughput(self, policy: Optional[str] = None
                          ) -> timing_model.ThroughputResult:
         p = self.registers.write_params.validate(self.spec)
-        if self.backend == "sim":
-            return timing_model.throughput(p, self._mapping(policy), self.spec,
-                                           op="write")
-        from repro.kernels import ops
-        sample = ops.measure_write_bandwidth(p)
-        return timing_model.ThroughputResult(
-            gbps=sample.gbps, bound="measured",
-            detail={"seconds": sample.seconds,
-                    "bytes": float(sample.bytes_moved)})
+        return self.evaluate_throughput(p, policy=policy, op="write")
 
     # -- latency module --------------------------------------------------------
     def capture_latency_list(self, **kwargs) -> np.ndarray:

@@ -9,7 +9,7 @@ paper performs: clustering latencies into page-hit / page-closed / page-miss
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
@@ -30,6 +30,19 @@ class LatencyModule:
         return lat.astype(np.uint8)
 
     @staticmethod
+    def _nearest_anchor(captured: np.ndarray, anchors: Dict[str, int]
+                        ) -> tuple:
+        """(nearest-anchor index array, refresh-inflated mask); argmin takes
+        the first minimum, preserving the hit < closed < miss tie-break of
+        the original per-sample scan."""
+        c = np.asarray(captured, dtype=np.int64)
+        vals = np.array([anchors["hit"], anchors["closed"], anchors["miss"]],
+                        dtype=np.int64)
+        nearest = np.argmin(np.abs(c[:, None] - vals[None, :]), axis=1)
+        refresh = c > anchors["miss"] + 8
+        return nearest, refresh
+
+    @staticmethod
     def classify(captured: np.ndarray, spec: MemorySpec,
                  extra_cycles: int = 0) -> Dict[str, int]:
         """Count page states by matching against the spec's anchor latencies.
@@ -42,14 +55,10 @@ class LatencyModule:
             "closed": spec.lat_page_closed + extra_cycles,
             "miss": spec.lat_page_miss + extra_cycles,
         }
-        counts = {"hit": 0, "closed": 0, "miss": 0, "refresh": 0}
-        for c in captured:
-            c = int(c)
-            best = min(anchors, key=lambda k: abs(anchors[k] - c))
-            if c > anchors["miss"] + 8:
-                counts["refresh"] += 1
-            else:
-                counts[best] += 1
+        nearest, refresh = LatencyModule._nearest_anchor(captured, anchors)
+        counts = {name: int(np.count_nonzero(~refresh & (nearest == k)))
+                  for k, name in enumerate(("hit", "closed", "miss"))}
+        counts["refresh"] = int(np.count_nonzero(refresh))
         return counts
 
     @staticmethod
@@ -67,11 +76,10 @@ class LatencyModule:
             "closed": spec.lat_page_closed + extra_cycles,
             "miss": spec.lat_page_miss + extra_cycles,
         }
-        out: Dict[str, List[int]] = {k: [] for k in anchors}
-        for c in captured:
-            c = int(c)
-            if c > anchors["miss"] + 8:
-                continue  # refresh-inflated sample
-            best = min(anchors, key=lambda k: abs(anchors[k] - c))
-            out[best].append(c)
-        return {k: (int(np.median(v)) if v else -1) for k, v in out.items()}
+        nearest, refresh = LatencyModule._nearest_anchor(captured, anchors)
+        c = np.asarray(captured, dtype=np.int64)
+        out: Dict[str, int] = {}
+        for k, name in enumerate(("hit", "closed", "miss")):
+            vals = c[~refresh & (nearest == k)]   # refresh samples excluded
+            out[name] = int(np.median(vals)) if vals.size else -1
+        return out

@@ -1,0 +1,173 @@
+"""Batch-first campaign sweeps over (RSTParams × policy × channel) grids.
+
+The paper's value is exhaustive measurement: every point of Figs. 4–8 and
+Tables IV–VI is one (policy, stride, burst, window, channel) evaluation.  A
+:class:`Sweep` makes that the unit of work — the host plans a whole grid,
+then one :meth:`Sweep.run` evaluates it batched:
+
+* **Memoization** — on the ``sim`` backend the timing model is a pure
+  function of (spec, mapping policy, params, op), so repeated grid points
+  are evaluated once and served from cache afterwards.
+* **Channel independence** — the paper's channels are independent
+  (footnote 11) and the switch datapath is non-blocking (Fig. 8), so a
+  throughput point is computed for one channel and *broadcast* to every
+  channel that requests it; only the (currently neutral) switch scale is
+  applied per channel.  Latency points fold 32 AXI channels down to the
+  8 distinct switch distances (Table VI rows repeat within a mini-switch).
+
+`ShuhaiCampaign` (core/bench_host.py) builds one Sweep per suite; see
+DESIGN.md §4 for the architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import timing_model
+from repro.core.engine import Engine
+from repro.core.hwspec import HBM, MemorySpec
+from repro.core.params import RSTParams
+
+KIND_THROUGHPUT = "throughput"
+KIND_LATENCY = "latency"
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One campaign grid point (an engine configuration plus a trigger)."""
+
+    params: RSTParams
+    policy: Optional[str] = None
+    channel: int = 0
+    dst_channel: Optional[int] = None
+    op: str = "read"
+    kind: str = KIND_THROUGHPUT
+    switch_enabled: Optional[bool] = None   # latency runs only
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """One evaluated point; `value` is a ThroughputResult or LatencyTrace."""
+
+    point: SweepPoint
+    value: object
+    cached: bool
+
+
+@dataclasses.dataclass
+class SweepStats:
+    points: int = 0
+    evaluated: int = 0
+
+    @property
+    def cache_hits(self) -> int:
+        return self.points - self.evaluated
+
+
+class Sweep:
+    """Planner + batched executor for a grid of campaign points."""
+
+    def __init__(self, spec: MemorySpec = HBM, backend: str = "sim"):
+        self.spec = spec
+        self.backend = backend
+        self.stats = SweepStats()
+        self._points: List[SweepPoint] = []
+        self._engines: Dict[int, Engine] = {}
+        # Unscaled throughput results keyed by (params, policy, op); latency
+        # traces keyed by (params, policy, enabled, extra_cycles).  sim only.
+        self._tp_cache: Dict[Tuple, timing_model.ThroughputResult] = {}
+        self._lat_cache: Dict[Tuple, timing_model.LatencyTrace] = {}
+
+    # ------------------------------------------------------------- planning
+    def add(self, params: RSTParams, *, policy: Optional[str] = None,
+            channel: int = 0, dst_channel: Optional[int] = None,
+            op: str = "read") -> "Sweep":
+        """Queue one throughput point; returns self for chaining."""
+        self._points.append(SweepPoint(params, policy, channel, dst_channel,
+                                       op, KIND_THROUGHPUT))
+        return self
+
+    def add_latency(self, params: RSTParams, *, policy: Optional[str] = None,
+                    channel: int = 0, dst_channel: Optional[int] = None,
+                    switch_enabled: Optional[bool] = None) -> "Sweep":
+        """Queue one serial-latency point; returns self for chaining."""
+        self._points.append(SweepPoint(params, policy, channel, dst_channel,
+                                       "read", KIND_LATENCY, switch_enabled))
+        return self
+
+    def add_grid(self, params: Iterable[RSTParams], *,
+                 policies: Sequence[Optional[str]] = (None,),
+                 channels: Sequence[int] = (0,),
+                 dst_channel: Optional[int] = None,
+                 op: str = "read") -> List[SweepPoint]:
+        """Queue the full product policies × params × channels (policy-major
+        order); returns the points queued, in order, so callers can key
+        their result tables."""
+        added = []
+        for pol, p, ch in itertools.product(policies, params, channels):
+            self.add(p, policy=pol, channel=ch, dst_channel=dst_channel, op=op)
+            added.append(self._points[-1])
+        return added
+
+    @property
+    def points(self) -> List[SweepPoint]:
+        return list(self._points)
+
+    # ------------------------------------------------------------ execution
+    def _engine(self, channel: int) -> Engine:
+        eng = self._engines.get(channel)
+        if eng is None:
+            eng = Engine(channel=channel, spec=self.spec, backend=self.backend)
+            self._engines[channel] = eng
+        return eng
+
+    def _run_throughput(self, pt: SweepPoint) -> Tuple[object, bool]:
+        eng = self._engine(pt.channel)
+        if self.backend != "sim":
+            # Real measurements are per-point; no memoization.
+            self.stats.evaluated += 1
+            return eng.evaluate_throughput(
+                pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
+                op=pt.op), False
+        key = (pt.params, pt.policy, pt.op)
+        base = self._tp_cache.get(key)
+        cached = base is not None
+        if base is None:
+            p = pt.params.validate(self.spec)
+            base = timing_model.throughput(p, eng._mapping(pt.policy),
+                                           self.spec, op=pt.op)
+            self._tp_cache[key] = base
+            self.stats.evaluated += 1
+        # Channel broadcast: location only enters through the switch scale.
+        if pt.op == "read":
+            scale = eng.throughput_scale(pt.dst_channel)
+            if scale != 1.0:
+                base = dataclasses.replace(base, gbps=base.gbps * scale)
+        return base, cached
+
+    def _run_latency(self, pt: SweepPoint) -> Tuple[object, bool]:
+        eng = self._engine(pt.channel)
+        enabled, extra = eng.latency_config(pt.dst_channel, pt.switch_enabled)
+        key = (pt.params, pt.policy, enabled, extra)
+        trace = self._lat_cache.get(key)
+        cached = trace is not None
+        if trace is None:
+            trace = eng.evaluate_latency(
+                pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
+                switch_enabled=pt.switch_enabled)
+            self._lat_cache[key] = trace
+            self.stats.evaluated += 1
+        return trace, cached
+
+    def run(self) -> List[SweepResult]:
+        """Evaluate every queued point; results align with `points` order."""
+        out: List[SweepResult] = []
+        for pt in self._points:
+            self.stats.points += 1
+            if pt.kind == KIND_THROUGHPUT:
+                value, cached = self._run_throughput(pt)
+            else:
+                value, cached = self._run_latency(pt)
+            out.append(SweepResult(point=pt, value=value, cached=cached))
+        return out

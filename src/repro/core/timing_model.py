@@ -1,4 +1,4 @@
-"""Event-level DRAM timing model for the `sim` backend.
+"""Event-level DRAM timing model for the `sim` backend (vectorized).
 
 Two entry points, mirroring the two measurement modes of the paper's engine
 module (Sec. III-C-1):
@@ -23,6 +23,20 @@ module (Sec. III-C-1):
     - refresh:        (1 - tRFC/tREFI) de-rating,
     - scheduler:      calibrated constant inefficiency.
 
+Both functions are NumPy array code end to end (DESIGN.md §3):
+
+* Page-state classification is a segment analysis: a stable argsort groups
+  the stream by bank, a shifted-array comparison finds each transaction's
+  previous same-bank access, and hit/closed/miss falls out of one row
+  comparison.  The only remaining Python loop in the serial model iterates
+  over *refresh epochs* (~tREFI of simulated time each), not transactions.
+* The throughput bounds are segment reductions over reorder-window chunks:
+  per-window distinct-bank-group counts via a row-wise sort, per-window
+  per-bank activation counts via ``np.bincount`` on a (window, bank) key.
+
+The loop-based reference implementation is preserved verbatim in
+:mod:`repro.core._timing_reference`; parity tests pin this module to it.
+
   Calibration anchors (see tests/core/test_timing_model.py):
     HBM  sequential read  B=32  -> 13.27 GB/s  (Table V)
     DDR4 sequential read  B=64  -> 18.0  GB/s  (Table V)
@@ -33,7 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 
@@ -43,6 +57,7 @@ from repro.core.params import RSTParams
 
 # Page states, following Sec. V-B.
 PAGE_HIT, PAGE_CLOSED, PAGE_MISS = "hit", "closed", "miss"
+_STATE_NAMES = np.array((PAGE_HIT, PAGE_CLOSED, PAGE_MISS))
 
 # Cap on how many transactions we expand when the stream is periodic.
 _MAX_EXPAND = 1 << 16
@@ -68,6 +83,23 @@ def _expand_addresses(p: RSTParams) -> np.ndarray:
     return p.a + (i * p.s) % p.w
 
 
+def _prev_same_bank(bank: np.ndarray) -> np.ndarray:
+    """Index of the previous transaction touching the same bank, -1 if none.
+
+    Stable argsort groups the stream by bank while preserving issue order
+    inside each group, so each group's predecessor is one shifted-array
+    comparison away.
+    """
+    n = len(bank)
+    prev = np.full(n, -1, dtype=np.int64)
+    if n > 1:
+        order = np.argsort(bank, kind="stable")
+        sorted_bank = bank[order]
+        same = sorted_bank[1:] == sorted_bank[:-1]
+        prev[order[1:]] = np.where(same, order[:-1], -1)
+    return prev
+
+
 def serial_read_latencies(
     p: RSTParams,
     mapping: AddressMapping,
@@ -81,50 +113,83 @@ def serial_read_latencies(
     `switch_extra_cycles` is the distance-dependent addition from
     core/switch.py (Table VI); `switch_enabled` alone adds the flat
     7-cycle penalty (paper footnote 9).
+
+    Vectorized over refresh epochs: between two refreshes no bank is ever
+    closed by the controller, so the page state of every transaction in the
+    epoch is a pure function of its previous same-bank access — closed if
+    that access predates the epoch (the refresh closed the bank), otherwise
+    hit/miss by row comparison.  Each outer iteration therefore commits one
+    whole epoch (~tREFI / page-hit-latency transactions) at once.
     """
     p.validate(spec)
     addrs = _expand_addresses(p)
     dec = mapping.decode(addrs)
-    bank = np.asarray(mapping.bank_id(addrs))
-    row = dec["R"]
+    bank = np.asarray(mapping.bank_id_from(dec))
+    row = np.asarray(dec["R"])
+    n = len(addrs)
 
     base_extra = (spec.switch_penalty if switch_enabled else 0) + (
         switch_extra_cycles if switch_enabled else 0)
 
-    open_row: Dict[int, int] = {}
+    prev_idx = _prev_same_bank(bank)
+    rowmatch = np.zeros(n, dtype=bool)
+    has_prev = np.nonzero(prev_idx >= 0)[0]
+    rowmatch[has_prev] = row[has_prev] == row[prev_idx[has_prev]]
+
+    c_hit = float(spec.lat_page_hit + base_extra)
+    c_closed = float(spec.lat_page_closed + base_extra)
+    c_miss = float(spec.lat_page_miss + base_extra)
+    # No epoch can span more transactions than tREFI / min-latency; slicing
+    # to this cap keeps total work O(N) instead of O(N * epochs).
+    epoch_cap = int(spec.t_refi_ns / spec.cycles_to_ns(spec.lat_page_hit)) + 2
+
+    lat = np.zeros(n, dtype=np.float64)
+    codes = np.zeros(n, dtype=np.int8)        # 0=hit, 1=closed, 2=miss
+    refresh_hits = np.zeros(n, dtype=bool)
+
+    pos = 0
     now_ns = 0.0
     next_refresh = spec.t_refi_ns
-    lat = np.zeros(len(addrs), dtype=np.float64)
-    states = []
-    refresh_hits = np.zeros(len(addrs), dtype=bool)
-
-    for i in range(len(addrs)):
-        stall_ns = 0.0
+    while pos < n:
         # Refresh closes all banks; a transaction arriving during the
         # refresh cycle stalls until it completes (Sec. V-A).
+        stall_ns = 0.0
         while now_ns >= next_refresh:
-            open_row.clear()
             refresh_end = next_refresh + spec.t_rfc_ns
             if now_ns < refresh_end:
                 stall_ns = refresh_end - now_ns
-                refresh_hits[i] = True
+                refresh_hits[pos] = True
             next_refresh += spec.t_refi_ns
 
-        b, r = int(bank[i]), int(row[i])
-        if b in open_row and open_row[b] == r:
-            state, cyc = PAGE_HIT, spec.lat_page_hit
-        elif b not in open_row:
-            state, cyc = PAGE_CLOSED, spec.lat_page_closed
-        else:
-            state, cyc = PAGE_MISS, spec.lat_page_miss
-        open_row[b] = r
+        cap = epoch_cap
+        while True:
+            end = min(n, pos + cap)
+            # Closed iff first same-bank access since the epoch's refresh.
+            closed = prev_idx[pos:end] < pos
+            cyc = np.where(closed, c_closed,
+                           np.where(rowmatch[pos:end], c_hit, c_miss))
+            cyc[0] += spec.ns_to_cycles(stall_ns)
+            # Seeding the cumsum with now_ns reproduces the reference's
+            # sequential `now += cycles_to_ns(c)` fold bit-for-bit — epoch
+            # boundaries regularly land exactly on a refresh instant (all
+            # times are integer cycles), so the >= below is rounding-critical.
+            starts = np.cumsum(
+                np.concatenate(([now_ns], cyc[:-1] * spec.cycle_ns)))
+            crossed = np.nonzero(starts >= next_refresh)[0]
+            if crossed.size or end == n:
+                break
+            cap *= 2  # stall pushed the epoch past the cap; widen and retry
 
-        total_cycles = cyc + base_extra + spec.ns_to_cycles(stall_ns)
-        lat[i] = total_cycles
-        states.append(state)
-        now_ns += spec.cycles_to_ns(total_cycles)
+        k = int(crossed[0]) if crossed.size else end - pos
+        sl = slice(pos, pos + k)
+        lat[sl] = cyc[:k]
+        codes[sl] = np.where(closed[:k], 1, np.where(rowmatch[sl], 0, 2))
+        if crossed.size:
+            now_ns = float(starts[k])   # txn pos+k re-enters the refresh check
+        pos += k
 
-    return LatencyTrace(cycles=lat, states=states, refresh_hits=refresh_hits)
+    return LatencyTrace(cycles=lat, states=_STATE_NAMES[codes].tolist(),
+                        refresh_hits=refresh_hits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,52 +233,60 @@ def throughput(
     addrs = (txn_addrs[:, None] + offs[None, :]).reshape(-1)
     n = len(addrs)
     dec = mapping.decode(addrs)
-    bank = np.asarray(mapping.bank_id(addrs))
+    bank = np.asarray(mapping.bank_id_from(dec))
     row = np.asarray(dec["R"])
     bg = np.asarray(dec["BG"])
 
     ccd_l_cyc = spec.ns_to_cycles(spec.t_ccd_l_ns)
+    win = _REORDER_WINDOW
+    nw_full, rem = divmod(n, win)
 
     # --- command-issue bound (data bus + bank-group tCCD_L) ----------------
-    # Scan the stream in reorder-window chunks; within a chunk the scheduler
-    # interleaves commands from G distinct bank groups, so the aggregate
-    # command rate is min(1 cmd/cycle, G / tCCD_L).  Interleaving across
-    # bank-group *runs* is only possible while two runs coexist in the
-    # reorder window, so G is capped by window / (2 * mean run length):
-    # long single-BG runs (paper Fig. 6b, RBC with small S) serialize at
-    # tCCD_L even though the full stream eventually touches every group.
+    # Within a reorder-window chunk the scheduler interleaves commands from G
+    # distinct bank groups, so the aggregate command rate is
+    # min(1 cmd/cycle, G / tCCD_L).  Interleaving across bank-group *runs* is
+    # only possible while two runs coexist in the reorder window, so G is
+    # capped by window / (2 * mean run length): long single-BG runs (paper
+    # Fig. 6b, RBC with small S) serialize at tCCD_L even though the full
+    # stream eventually touches every group.  The per-window distinct-group
+    # count is a segment reduction: sort each window row, count transitions.
     transitions = int(np.count_nonzero(bg[1:] != bg[:-1]))
     run_len = n / (transitions + 1)
     g_cap = max(1.0, _REORDER_WINDOW / (2.0 * run_len))
     issue_cycles = 0.0
-    for lo in range(0, n, _REORDER_WINDOW):
-        chunk_bg = bg[lo:lo + _REORDER_WINDOW]
-        g = min(float(len(np.unique(chunk_bg))), g_cap)
-        rate = min(1.0, g / ccd_l_cyc)           # commands per cycle
-        issue_cycles += len(chunk_bg) / rate
+    if nw_full:
+        srt = np.sort(bg[:nw_full * win].reshape(nw_full, win), axis=1)
+        uniq = 1 + np.count_nonzero(srt[:, 1:] != srt[:, :-1], axis=1)
+        g = np.minimum(uniq.astype(np.float64), g_cap)
+        issue_cycles += float(np.sum(win / np.minimum(1.0, g / ccd_l_cyc)))
+    if rem:
+        g = min(float(len(np.unique(bg[nw_full * win:]))), g_cap)
+        issue_cycles += rem / min(1.0, g / ccd_l_cyc)
 
     # --- bank bound (row activations serialize at tRC per bank) ------------
     # An activation happens whenever a bank is accessed with a different row
-    # than its currently open one.  Activations to *different* banks overlap
-    # only while both live in the reorder window, so the bound is computed
-    # per window: sum over windows of (max activations to any one bank in
-    # that window) * tRC.  A stream that rotates banks slowly (runs longer
-    # than the window) therefore serializes fully, as the real controller
-    # does.
-    open_row: Dict[int, int] = {}
-    total_acts = 0
+    # than its currently open one — i.e. whenever the previous same-bank
+    # command (shifted-array comparison over the bank-grouped stream) used a
+    # different row, or there is none.  Activations to *different* banks
+    # overlap only while both live in the reorder window, so the bound is
+    # computed per window: sum over windows of (max activations to any one
+    # bank in that window) * tRC.  A stream that rotates banks slowly (runs
+    # longer than the window) therefore serializes fully, as the real
+    # controller does.  Per-(window, bank) counts come from one bincount.
+    prev_idx = _prev_same_bank(bank)
+    act = prev_idx < 0
+    has_prev = np.nonzero(~act)[0]
+    act[has_prev] = row[has_prev] != row[prev_idx[has_prev]]
+    total_acts = int(np.count_nonzero(act))
     t_rc_cyc = spec.ns_to_cycles(spec.t_rc_ns)
     bank_cycles = 0.0
-    for lo in range(0, n, _REORDER_WINDOW):
-        acts_in_window: Dict[int, int] = {}
-        for i in range(lo, min(lo + _REORDER_WINDOW, n)):
-            b_, r_ = int(bank[i]), int(row[i])
-            if open_row.get(b_) != r_:
-                acts_in_window[b_] = acts_in_window.get(b_, 0) + 1
-                open_row[b_] = r_
-                total_acts += 1
-        if acts_in_window:
-            bank_cycles += max(acts_in_window.values()) * t_rc_cyc
+    if total_acts:
+        act_idx = np.nonzero(act)[0]
+        nw_total = nw_full + (1 if rem else 0)
+        key = (act_idx // win) * spec.num_banks + bank[act_idx]
+        counts = np.bincount(key, minlength=nw_total * spec.num_banks)
+        per_window_max = counts.reshape(nw_total, spec.num_banks).max(axis=1)
+        bank_cycles = float(per_window_max.sum()) * t_rc_cyc
 
     # --- four-activate-window bound ----------------------------------------
     faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0

@@ -6,3 +6,6 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Make the optional-hypothesis shim (tests/hypothesis_compat.py) importable
+# from every test subdirectory.
+sys.path.insert(0, os.path.dirname(__file__))

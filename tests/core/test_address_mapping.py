@@ -1,8 +1,7 @@
 """Address-mapping policies (paper Table II): geometry + bijectivity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import DDR4, HBM, get_mapping, policies_for
 

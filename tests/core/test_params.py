@@ -1,7 +1,6 @@
 """RSTParams validation + 256-bit register packing (paper Table I, Sec. III-C-3)."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import DDR4, HBM, EngineRegisters, RSTParams
 

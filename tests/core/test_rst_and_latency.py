@@ -1,8 +1,7 @@
 """RST address stream (Eq. 1) properties + latency module behavior."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import HBM, LatencyModule, RSTParams, addresses_np, block_params
 from repro.core import get_mapping, serial_read_latencies

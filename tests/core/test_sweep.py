@@ -1,0 +1,123 @@
+"""Sweep planner: memoization, channel broadcast, campaign-suite parity."""
+import numpy as np
+import pytest
+
+from repro.core import (DDR4, HBM, Engine, RSTParams, ShuhaiCampaign, Sweep,
+                        get_mapping, throughput)
+
+
+def _p(**kw):
+    base = dict(n=1024, b=32, s=32, w=0x1000000)
+    base.update(kw)
+    return RSTParams(**base)
+
+
+class TestMemoization:
+    def test_repeated_point_evaluated_once(self):
+        sweep = Sweep(HBM)
+        for ch in range(32):
+            sweep.add(_p(), channel=ch)
+        results = sweep.run()
+        assert sweep.stats.points == 32
+        assert sweep.stats.evaluated == 1
+        assert sweep.stats.cache_hits == 31
+        assert results[0].cached is False
+        assert all(r.cached for r in results[1:])
+        # Broadcast value matches a direct single-channel evaluation.
+        direct = throughput(_p(), get_mapping(HBM), HBM)
+        assert all(r.value.gbps == direct.gbps for r in results)
+
+    def test_distinct_points_all_evaluated(self):
+        sweep = Sweep(HBM)
+        strides = (32, 64, 1024)
+        for s in strides:
+            sweep.add(_p(s=s))
+        sweep.run()
+        assert sweep.stats.evaluated == len(strides)
+
+    def test_policy_and_op_are_part_of_the_key(self):
+        sweep = Sweep(HBM)
+        sweep.add(_p(), policy="RGBCG")
+        sweep.add(_p(), policy="RBC")
+        sweep.add(_p(), policy="RGBCG", op="write")
+        sweep.run()
+        assert sweep.stats.evaluated == 3
+
+    def test_latency_points_fold_by_switch_distance(self):
+        # 32 AXI channels -> 8 mini-switches -> 8 distinct extras (Table VI):
+        # channels of one mini-switch share the cached trace.
+        sweep = Sweep(HBM)
+        for ch in range(32):
+            sweep.add_latency(_p(s=128), channel=ch, dst_channel=0,
+                              switch_enabled=True)
+        results = sweep.run()
+        assert sweep.stats.points == 32
+        assert sweep.stats.evaluated == 8
+        # Same mini-switch => identical trace object (served from cache).
+        assert results[1].value is results[0].value
+        assert results[4].value is not results[0].value
+
+
+class TestGrid:
+    def test_add_grid_expands_product(self):
+        sweep = Sweep(HBM)
+        params = [_p(s=s) for s in (32, 64)]
+        pts = sweep.add_grid(params, policies=("RGBCG", "RBC"),
+                             channels=(0, 4, 8))
+        assert len(pts) == 2 * 2 * 3
+        assert sweep.points == pts
+        results = sweep.run()
+        # Channels are broadcast: only policy x stride evaluate.
+        assert sweep.stats.evaluated == 4
+        assert len(results) == 12
+
+    def test_results_align_with_points(self):
+        sweep = Sweep(HBM)
+        sweep.add(_p(s=32)).add(_p(s=1024))
+        results = sweep.run()
+        assert [r.point.params.s for r in results] == [32, 1024]
+        assert results[0].value.gbps > results[1].value.gbps
+
+
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("spec", [HBM, DDR4], ids=["hbm", "ddr4"])
+    def test_sweep_matches_register_driven_engine(self, spec):
+        p = _p(b=spec.min_burst, s=4 * spec.min_burst)
+        eng = Engine(channel=0, spec=spec)
+        eng.configure_read(p)
+        want = eng.read_throughput()
+        got = Sweep(spec).add(p).run()[0].value
+        assert got.gbps == want.gbps
+        assert got.bound == want.bound
+
+    def test_dst_channel_path_matches_engine(self):
+        p = RSTParams(n=4096, b=64, s=1024, w=0x1000000)
+        eng = Engine(channel=8, spec=HBM)
+        eng.configure_read(p)
+        want = eng.read_throughput(dst_channel=0)
+        got = Sweep(HBM).add(p, channel=8, dst_channel=0).run()[0].value
+        assert got.gbps == want.gbps
+
+
+class TestCampaignSuitesOnSweep:
+    def test_total_throughput_broadcasts(self):
+        camp = ShuhaiCampaign(HBM)
+        res = camp.suite_total_throughput()
+        assert res["total_gbps"] == pytest.approx(
+            32 * res["per_channel_gbps"], rel=1e-9)
+        # The paper's headline number still holds through the sweep path.
+        assert res["total_gbps"] == pytest.approx(425.0, rel=0.02)
+
+    def test_switch_throughput_uniform_across_miniswitches(self):
+        camp = ShuhaiCampaign(HBM)
+        res = camp.suite_switch_throughput(strides=(64,))
+        vals = [res[ch][64] for ch in res]
+        assert len(res) == 8
+        assert max(vals) == pytest.approx(min(vals), rel=1e-9)  # Fig. 8
+
+    def test_locality_suite_omits_invalid_combos(self):
+        camp = ShuhaiCampaign(HBM)
+        res = camp.suite_locality(strides=(4096, 16384), bursts=(32,), n=512)
+        assert 16384 not in res[8 * 1024][32]       # S > W: RST-invalid
+        assert 16384 in res[256 * 1024**2][32]
+        assert 4096 in res[8 * 1024][32]

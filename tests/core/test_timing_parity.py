@@ -1,0 +1,124 @@
+"""Golden parity: vectorized timing model vs the pre-refactor loop reference.
+
+`repro.core._timing_reference` is the original per-transaction /
+per-window-dict implementation, kept verbatim.  The vectorized model in
+`repro.core.timing_model` must reproduce it transaction-for-transaction
+(serial latencies: bit-exact; throughput: to float-associativity tolerance)
+on HBM and DDR4 across the hit / closed / miss, refresh, bank-group-run and
+locality regimes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DDR4, HBM, RSTParams, get_mapping
+from repro.core import _timing_reference as ref
+from repro.core import timing_model as vec
+
+MB = 1024**2
+
+SERIAL_CASES = [
+    # (id, spec, policy, params kwargs, serial kwargs)
+    ("hbm_hit_regime", HBM, None,
+     dict(n=1024, b=32, s=128, w=0x1000000), {}),
+    ("hbm_miss_regime", HBM, None,
+     dict(n=1024, b=32, s=128 * 1024, w=0x1000000), {}),
+    ("hbm_refresh_fig4", HBM, None,
+     dict(n=2048, b=32, s=64, w=0x1000000), {}),
+    ("hbm_switch_table6", HBM, None,
+     dict(n=1024, b=32, s=128, w=0x1000000),
+     dict(switch_enabled=True, switch_extra_cycles=22)),
+    ("hbm_switch_miss", HBM, None,
+     dict(n=1024, b=32, s=128 * 1024, w=0x1000000),
+     dict(switch_enabled=True, switch_extra_cycles=5)),
+    ("hbm_bankgroup_runs_rbc", HBM, "RBC",
+     dict(n=1024, b=32, s=1024, w=0x1000000), {}),
+    ("hbm_brc_row_thrash", HBM, "BRC",
+     dict(n=1024, b=32, s=1024, w=0x1000000), {}),
+    ("hbm_locality_w8k", HBM, None,
+     dict(n=1024, b=32, s=4096, w=8 * 1024), {}),
+    ("ddr4_hit_regime", DDR4, None,
+     dict(n=1024, b=64, s=128, w=0x1000000), {}),
+    ("ddr4_miss_regime", DDR4, None,
+     dict(n=1024, b=64, s=128 * 1024, w=0x1000000), {}),
+    ("ddr4_refresh_fig4", DDR4, None,
+     dict(n=2048, b=64, s=64, w=0x1000000), {}),
+    ("ddr4_rbc_strided", DDR4, "RBC",
+     dict(n=1024, b=64, s=2048, w=0x1000000), {}),
+    ("single_txn", HBM, None, dict(n=1, b=32, s=32, w=0x1000000), {}),
+    ("tiny_window_wrap", HBM, None, dict(n=5, b=32, s=32, w=32), {}),
+]
+
+
+@pytest.mark.parametrize("spec,policy,kw,skw",
+                         [c[1:] for c in SERIAL_CASES],
+                         ids=[c[0] for c in SERIAL_CASES])
+def test_serial_read_latencies_parity(spec, policy, kw, skw):
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    got = vec.serial_read_latencies(p, m, spec, **skw)
+    want = ref.serial_read_latencies(p, m, spec, **skw)
+    np.testing.assert_array_equal(got.cycles, want.cycles)
+    assert got.states == want.states
+    np.testing.assert_array_equal(got.refresh_hits, want.refresh_hits)
+
+
+THROUGHPUT_CASES = [
+    # (id, spec, policy, params kwargs)
+    ("hbm_seq_table5", HBM, None, dict(n=8192, b=32, s=32, w=0x10000000)),
+    ("hbm_rbc_short_runs", HBM, "RBC", dict(n=4096, b=64, s=128, w=0x10000000)),
+    ("hbm_rbc_long_runs", HBM, "RBC", dict(n=4096, b=64, s=2048, w=0x10000000)),
+    ("hbm_brc_bank_bound", HBM, "BRC", dict(n=4096, b=32, s=1024, w=0x10000000)),
+    ("hbm_locality_w8k", HBM, None, dict(n=4096, b=32, s=4096, w=8 * 1024)),
+    ("hbm_locality_w256m", HBM, None, dict(n=4096, b=32, s=4096, w=256 * MB)),
+    ("hbm_multi_cmd_burst", HBM, None, dict(n=4096, b=256, s=2048, w=0x10000000)),
+    ("hbm_big_n_truncated", HBM, None, dict(n=200000, b=64, s=1024, w=0x1000000)),
+    ("hbm_far_stride", HBM, None, dict(n=4096, b=32, s=32768, w=0x10000000)),
+    ("ddr4_seq_table5", DDR4, None, dict(n=8192, b=64, s=64, w=0x10000000)),
+    ("ddr4_rbc_strided", DDR4, "RBC", dict(n=4096, b=64, s=2048, w=0x10000000)),
+    ("ddr4_partial_window", DDR4, "RCBI", dict(n=100, b=64, s=64, w=1 << 20)),
+]
+
+
+@pytest.mark.parametrize("spec,policy,kw",
+                         [c[1:] for c in THROUGHPUT_CASES],
+                         ids=[c[0] for c in THROUGHPUT_CASES])
+def test_throughput_parity(spec, policy, kw):
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    got = vec.throughput(p, m, spec)
+    want = ref.throughput(p, m, spec)
+    assert got.gbps == pytest.approx(want.gbps, rel=1e-9)
+    assert got.bound == want.bound
+    assert got.detail["total_acts"] == want.detail["total_acts"]
+    assert got.detail["txns"] == want.detail["txns"]
+    assert got.detail["cmds_per_txn"] == want.detail["cmds_per_txn"]
+    for bound in ("bus/ccd", "bank", "faw"):
+        assert got.detail[bound] == pytest.approx(want.detail[bound],
+                                                  rel=1e-9), bound
+
+
+def test_derived_quantities_within_one_percent():
+    """The ISSUE acceptance bar: headline derived numbers within 1% of the
+    reference across the Table IV/V and Fig. 6/7 operating points."""
+    points = [
+        (HBM, None, dict(n=8192, b=32, s=32, w=0x10000000)),      # Table V
+        (DDR4, None, dict(n=8192, b=64, s=64, w=0x10000000)),     # Table V
+        (HBM, None, dict(n=4096, b=32, s=4096, w=8 * 1024)),      # Fig. 7
+        (HBM, None, dict(n=4096, b=32, s=4096, w=256 * MB)),      # Fig. 7
+        (HBM, "RGBCG", dict(n=4096, b=32, s=1024, w=0x10000000)),  # Fig. 6
+        (HBM, "BRC", dict(n=4096, b=32, s=1024, w=0x10000000)),   # Fig. 6
+    ]
+    for spec, policy, kw in points:
+        p = RSTParams(**kw)
+        m = get_mapping(spec, policy)
+        got = vec.throughput(p, m, spec).gbps
+        want = ref.throughput(p, m, spec).gbps
+        assert got == pytest.approx(want, rel=0.01), (spec.name, policy, kw)
+
+
+def test_reference_module_is_loop_based():
+    """Guard against "optimizing" the golden reference: it must keep the
+    per-transaction loop the parity tests derive their authority from."""
+    import inspect
+    src = inspect.getsource(ref.serial_read_latencies)
+    assert "for i in range(len(addrs))" in src

@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+`hypothesis` is declared in requirements-dev.txt / pyproject.toml, but some
+execution environments provide only pytest.  Importing `given`/`settings`/
+`st` from here keeps module collection working everywhere: with hypothesis
+installed the real decorators are re-exported; without it the property tests
+turn into skips while the rest of the module still runs.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy construction and any chained call."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: _AnyStrategy()
+
+        def __call__(self, *a, **k):
+            return _AnyStrategy()
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        # Replace the property test with a no-arg skip so pytest never tries
+        # to resolve the strategy kwargs as fixtures.
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda f: f
