@@ -3,22 +3,34 @@
 Public surface:
   RSTParams, EngineRegisters        — runtime parameters (Table I) + packing
   addresses_np / addresses_jnp      — Eq. 1 address streams
-  AddressMapping, get_mapping       — Table II policies
+  AddressMapping, get_mapping       — Table II policies (registrable:
+                                      register_policies)
   serial_read_latencies, throughput — the calibrated timing model
-  Engine                            — one benchmarking engine per channel
-  ShuhaiCampaign                    — host-side suites (one per table/figure)
+  Engine, Backend                   — engines + pluggable measurement
+                                      backends (register_backend)
+  MemorySpec, register_spec         — registrable memory systems; HBM/DDR4
+                                      (measured) + HBM3/DDR3 (modeled)
+  Experiment, run_experiment        — declarative paper-artifact registry
+  ShuhaiCampaign                    — deprecated suite shims over the registry
   Sweep                             — batch-first campaign grids (memoized)
   SwitchModel, HBMTopology          — Sec. II / VI switch + topology
   MemoryOracle, AccessPattern       — TPU-facing constants + derating
   choose_layout, advise_microbatch  — the technique as a framework feature
 """
-from repro.core.address_mapping import AddressMapping, get_mapping, policies_for
+from repro.core.address_mapping import (AddressMapping, get_mapping,
+                                        policies_for, register_policies)
 from repro.core.autotune import (LayoutCandidate, advise_microbatch,
                                  advise_remat, choose_layout, score_layouts)
 from repro.core.bench_host import ShuhaiCampaign, default_campaigns
 from repro.core.channels import DDR4Topology, HBMTopology
-from repro.core.engine import Engine
-from repro.core.hwspec import DDR4, HBM, TPU_V5E, ChipSpec, MemorySpec
+from repro.core.engine import (Backend, Engine, available_backends,
+                               get_backend, register_backend)
+from repro.core.experiments import (Experiment, all_experiments,
+                                    experiments_for, get_experiment,
+                                    register_experiment, run_experiment)
+from repro.core.hwspec import (DDR3, DDR4, HBM, HBM3, TPU_V5E, ChipSpec,
+                               MemorySpec, available_specs, register_spec,
+                               spec_by_name)
 from repro.core.latency import LatencyModule
 from repro.core.oracle import AccessPattern, MemoryOracle
 from repro.core.params import EngineRegisters, RSTParams
@@ -30,11 +42,16 @@ from repro.core.timing_model import (LatencyTrace, ThroughputResult,
                                      serial_read_latencies, throughput)
 
 __all__ = [
-    "AddressMapping", "get_mapping", "policies_for",
+    "AddressMapping", "get_mapping", "policies_for", "register_policies",
     "LayoutCandidate", "advise_microbatch", "advise_remat", "choose_layout",
     "score_layouts", "ShuhaiCampaign", "default_campaigns",
-    "DDR4Topology", "HBMTopology", "Engine",
-    "DDR4", "HBM", "TPU_V5E", "ChipSpec", "MemorySpec",
+    "DDR4Topology", "HBMTopology",
+    "Backend", "Engine", "available_backends", "get_backend",
+    "register_backend",
+    "Experiment", "all_experiments", "experiments_for", "get_experiment",
+    "register_experiment", "run_experiment",
+    "DDR3", "DDR4", "HBM", "HBM3", "TPU_V5E", "ChipSpec", "MemorySpec",
+    "available_specs", "register_spec", "spec_by_name",
     "LatencyModule", "AccessPattern", "MemoryOracle",
     "EngineRegisters", "RSTParams",
     "addresses_jnp", "addresses_np", "block_params",

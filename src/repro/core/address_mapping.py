@@ -55,6 +55,11 @@ class AddressMapping:
             totals[f] = totals.get(f, 0) + n
         expect = {"R": self.spec.row_bits, "BG": self.spec.bankgroup_bits,
                   "B": self.spec.bank_bits, "C": self.spec.column_bits}
+        # Zero-width fields (e.g. DDR3 has no bank groups) are simply
+        # absent from the policy string.
+        for f, width in expect.items():
+            if width == 0:
+                totals.setdefault(f, 0)
         if totals != expect:
             raise ValueError(
                 f"policy {self.name} field widths {totals} do not match "
@@ -112,24 +117,15 @@ class AddressMapping:
         return self.bank_id_from(self.decode(app_addr))
 
 
-# --- paper Table II --------------------------------------------------------
+# --- policy-table registry -------------------------------------------------
+# One controller policy table per memory spec name.  The paper's Table II
+# entries (hbm, ddr4) are built in; a registered spec (hwspec.register_spec)
+# brings its own table through register_policies — see DESIGN.md §6.
 
-_HBM_POLICIES = {
-    "RBC":   "14R-2BG-2B-5C",
-    "RCB":   "14R-5C-2BG-2B",
-    "BRC":   "2BG-2B-14R-5C",
-    "RGBCG": "14R-1BG-2B-5C-1BG",   # default (blue in the paper)
-    "BRGCG": "2B-14R-1BG-5C-1BG",
-}
-
-_DDR4_POLICIES = {
-    "RBC":  "17R-2BG-2B-7C",
-    "RCB":  "17R-7C-2B-2BG",        # default
-    "BRC":  "2BG-2B-17R-7C",
-    "RCBI": "17R-6C-2B-1C-2BG",
-}
-
-DEFAULT_POLICY = {"hbm": "RGBCG", "ddr4": "RCB"}
+_POLICY_TABLES: Dict[str, Dict[str, str]] = {}
+# Public mutable mapping spec-name -> default policy name (kept as a plain
+# dict for backward compatibility with `DEFAULT_POLICY[...]` lookups).
+DEFAULT_POLICY: Dict[str, str] = {}
 
 
 @functools.lru_cache(maxsize=None)
@@ -137,9 +133,63 @@ def _policies_for_cached(spec: MemorySpec) -> Dict[str, AddressMapping]:
     # Mappings are immutable and specs are frozen dataclasses, so the parsed
     # policy table can be built once per spec — get_mapping sits on the
     # timing model's hot path and is called once per sweep point.
-    table = _HBM_POLICIES if spec.name == "hbm" else _DDR4_POLICIES
+    table = _POLICY_TABLES.get(spec.name)
+    if table is None:
+        raise ValueError(
+            f"no address-mapping policies registered for spec "
+            f"{spec.name!r}; call register_policies first "
+            f"(have {sorted(_POLICY_TABLES)})")
     return {name: AddressMapping(name, tuple(parse_policy(desc)), spec)
             for name, desc in table.items()}
+
+
+def register_policies(spec_name: str, table: Dict[str, str], *,
+                      default: str, override: bool = False) -> None:
+    """Register the address-mapping policy table of one memory spec.
+
+    `table` maps policy name -> field string ("14R-2BG-2B-5C"); `default`
+    names the controller's default policy.  Parsing/geometry validation is
+    deferred to first use (the spec object may carry any geometry), but the
+    default must be a key of the table.
+    """
+    if spec_name in _POLICY_TABLES and not override:
+        raise ValueError(
+            f"policies for {spec_name!r} already registered; pass "
+            f"override=True to replace them")
+    if default not in table:
+        raise ValueError(
+            f"default policy {default!r} for {spec_name!r} is not in its "
+            f"table {sorted(table)}")
+    _POLICY_TABLES[spec_name] = dict(table)
+    DEFAULT_POLICY[spec_name] = default
+    _policies_for_cached.cache_clear()
+
+
+# Paper Table II.  HBM3 (hwspec.HBM3) keeps the HBM2 pseudo-channel AXI
+# view, so both spec names register the same table object.
+_HBM_PSEUDO_CHANNEL_POLICIES = {
+    "RBC":   "14R-2BG-2B-5C",
+    "RCB":   "14R-5C-2BG-2B",
+    "BRC":   "2BG-2B-14R-5C",
+    "RGBCG": "14R-1BG-2B-5C-1BG",   # default (blue in the paper)
+    "BRGCG": "2B-14R-1BG-5C-1BG",
+}
+register_policies("hbm", _HBM_PSEUDO_CHANNEL_POLICIES, default="RGBCG")
+register_policies("hbm3", _HBM_PSEUDO_CHANNEL_POLICIES, default="RGBCG")
+
+register_policies("ddr4", {
+    "RBC":  "17R-2BG-2B-7C",
+    "RCB":  "17R-7C-2B-2BG",        # default
+    "BRC":  "2BG-2B-17R-7C",
+    "RCBI": "17R-6C-2B-1C-2BG",
+}, default="RCB")
+
+# DDR3 (hwspec.DDR3) has no bank groups: policies carry no BG field.
+register_policies("ddr3", {
+    "RBC": "16R-3B-7C",             # Xilinx MIG DDR3 default
+    "RCB": "16R-7C-3B",
+    "BRC": "3B-16R-7C",
+}, default="RBC")
 
 
 def policies_for(spec: MemorySpec) -> Dict[str, AddressMapping]:

@@ -1,36 +1,42 @@
 """Software component: the host-side campaign driver (paper Sec. III-B).
 
 `ShuhaiCampaign` plays the role of the CPU software talking to the parameter
-module over PCIe: it packs runtime registers, fans them out to M engines
-(M = 32 for HBM, M = 2 for DDR4, Fig. 3), triggers runs, and collects
-status/latency lists.  Every paper table/figure has a `suite_*` method here;
-benchmarks/ are thin CSV printers over these.
+module over PCIe.  Since the experiment-registry redesign the suites
+themselves live in :mod:`repro.core.experiments` — one declarative
+:class:`~repro.core.experiments.Experiment` per paper table/figure, lowered
+onto a batched :class:`~repro.core.sweep.Sweep` by
+:func:`~repro.core.experiments.run_experiment`.
 
-Since the sweep refactor the multi-point suites are *batch-first*: each one
-plans its whole (params × policy × channel) grid as a `core.sweep.Sweep`
-and executes it in one `run()`, which memoizes repeated points and
-broadcasts channel-independent results (DESIGN.md §4).  Single-point suites
-(`suite_refresh`, `suite_idle_latency`) keep the register-faithful
-configure-then-trigger flow through one engine.
+The `suite_*` methods below are **deprecated shims**: each one forwards its
+arguments to the registered experiment of the same artifact and returns the
+identical result structure.  They are kept so existing callers (and the
+paper-era reading order: "every table/figure has a suite_* method") keep
+working; new code should call `run_experiment` directly:
+
+    from repro.core.experiments import run_experiment
+    run_experiment("fig6_address_mapping", spec=HBM3, backend="sim")
+
+The campaign still owns M engines (M = spec.num_channels, Fig. 3) so the
+register-faithful configure-then-trigger flow of the paper remains
+demonstrable through `self.engines`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.address_mapping import DEFAULT_POLICY, policies_for
-from repro.core.channels import AXI_PER_MINI_SWITCH, NUM_AXI_CHANNELS, HBMTopology
 from repro.core.engine import Engine
-from repro.core.hwspec import DDR4, HBM, MemorySpec
-from repro.core.latency import LatencyModule
-from repro.core.params import RSTParams
-from repro.core.sweep import Sweep
-from repro.core.switch import SwitchModel
-from repro.core.timing_model import refresh_interval_estimate
+from repro.core.experiments import run_experiment
+from repro.core.hwspec import HBM, MemorySpec, available_specs, spec_by_name
 
-MB = 1024**2
+
+def _deprecated(suite: str, experiment: str) -> None:
+    # stacklevel: _deprecated(1) -> _run(2) -> suite_*(3) -> caller(4).
+    warnings.warn(
+        f"ShuhaiCampaign.{suite} is a deprecated shim; use "
+        f"run_experiment({experiment!r}, spec, backend) instead",
+        DeprecationWarning, stacklevel=4)
 
 
 @dataclasses.dataclass
@@ -49,189 +55,88 @@ class ShuhaiCampaign:
     def _engine(self, ch: int) -> Engine:
         return self.engines[ch]
 
-    def _sweep(self) -> Sweep:
-        return Sweep(self.spec, self.backend)
+    def _run(self, suite: str, experiment: str, **options):
+        _deprecated(suite, experiment)
+        return run_experiment(experiment, self.spec, self.backend, **options)
 
     # --------------------------------------------------------------- Fig. 4
     def suite_refresh(self, n: int = 1024) -> Dict[str, object]:
-        """Serial-read latency timeline showing periodic refresh spikes.
-        Paper setting: B=32, S=64, W=0x1000000, N=1024 (HBM)."""
-        p = RSTParams(n=n, b=self.spec.min_burst, s=64, w=0x1000000)
-        eng = self._engine(0)
-        eng.configure_read(p)
-        trace = eng.read_latency()
-        return {
-            "latency_cycles": trace.cycles,
-            "refresh_hits": trace.refresh_hits,
-            "estimated_refresh_interval_ns":
-                refresh_interval_estimate(trace, self.spec),
-            "params": p,
-        }
+        """Deprecated shim for the ``fig4_refresh`` experiment."""
+        return self._run("suite_refresh", "fig4_refresh", n=n)
 
     # ------------------------------------------------- Fig. 5 / Table IV
     def suite_idle_latency(self) -> Dict[str, Dict[str, float]]:
-        """Page hit/closed/miss latencies via the paper's two-stride probe:
-        S=128 isolates hit+closed, S=128K forces misses. Switch disabled
-        (footnote 6/9)."""
-        eng = self._engine(0)
-        out: Dict[str, Dict[str, float]] = {}
-        module = LatencyModule()
-
-        eng.configure_read(RSTParams(n=1024, b=self.spec.min_burst,
-                                     s=128, w=0x1000000))
-        cap_small = module.capture(eng.read_latency())
-        cats_small = module.category_latencies(cap_small, self.spec)
-
-        eng.configure_read(RSTParams(n=1024, b=self.spec.min_burst,
-                                     s=128 * 1024, w=0x1000000))
-        cap_large = module.capture(eng.read_latency())
-        cats_large = module.category_latencies(cap_large, self.spec)
-
-        for name, cyc in (("page_hit", cats_small["hit"]),
-                          ("page_closed", cats_small["closed"]),
-                          ("page_miss", cats_large["miss"])):
-            out[name] = {"cycles": cyc, "ns": cyc * self.spec.cycle_ns}
-        return out
+        """Deprecated shim for the ``table4_idle_latency`` experiment."""
+        return self._run("suite_idle_latency", "table4_idle_latency")
 
     # --------------------------------------------------------------- Fig. 6
     def suite_address_mapping(
         self,
-        strides: Sequence[int] = (64, 128, 256, 512, 1024, 2048, 4096, 8192,
-                                  16384, 32768),
+        strides: Optional[Sequence[int]] = None,
         bursts: Optional[Sequence[int]] = None,
-        w: int = 0x10000000,
-        n: int = 4096,
+        w: Optional[int] = None,
+        n: Optional[int] = None,
     ) -> Dict[str, Dict[int, Dict[int, float]]]:
-        """Throughput for every address-mapping policy x stride x burst,
-        planned as one batched sweep."""
-        bursts = bursts or (self.spec.min_burst, 2 * self.spec.min_burst)
-        sweep = self._sweep()
-        keys: List[Tuple[str, int, int]] = []
-        for policy in policies_for(self.spec):
-            for b in bursts:
-                for s in strides:
-                    if s < b:
-                        continue
-                    sweep.add(RSTParams(n=n, b=b, s=s, w=w), policy=policy)
-                    keys.append((policy, b, s))
-        results: Dict[str, Dict[int, Dict[int, float]]] = {
-            policy: {b: {} for b in bursts} for policy in policies_for(self.spec)}
-        for (policy, b, s), r in zip(keys, sweep.run()):
-            results[policy][b][s] = r.value.gbps
-        return results
+        """Deprecated shim for the ``fig6_address_mapping`` experiment."""
+        return self._run("suite_address_mapping", "fig6_address_mapping",
+                         strides=strides, bursts=bursts, w=w, n=n)
 
     # --------------------------------------------------------------- Fig. 7
     def suite_locality(
         self,
-        strides: Sequence[int] = (64, 256, 1024, 4096, 16384),
+        strides: Optional[Sequence[int]] = None,
         bursts: Optional[Sequence[int]] = None,
-        n: int = 4096,
+        n: Optional[int] = None,
     ) -> Dict[int, Dict[int, Dict[int, float]]]:
-        """W=8K (locality) vs W=256M (baseline) throughput (Sec. V-E).
+        """Deprecated shim for the ``fig7_locality`` experiment.
 
-        Combinations with S < B or S > W violate the RST constraints
-        (Table I) and are omitted from the result — the returned per-burst
-        dict then simply lacks that stride key, so consumers must guard
-        lookups (see benchmarks/run.py:bench_fig7_locality).
+        RST-invalid combinations (S < B or S > W, Table I) are omitted from
+        the result, so consumers must guard lookups.
         """
-        bursts = bursts or (self.spec.min_burst, 2 * self.spec.min_burst)
-        sweep = self._sweep()
-        keys: List[Tuple[int, int, int]] = []
-        windows = (8 * 1024, 256 * MB)
-        for w in windows:
-            for b in bursts:
-                for s in strides:
-                    if s < b or s > w:
-                        continue  # invalid RST point (Table I): skipped
-                    sweep.add(RSTParams(n=n, b=b, s=s, w=w))
-                    keys.append((w, b, s))
-        results: Dict[int, Dict[int, Dict[int, float]]] = {
-            w: {b: {} for b in bursts} for w in windows}
-        for (w, b, s), r in zip(keys, sweep.run()):
-            results[w][b][s] = r.value.gbps
-        return results
+        return self._run("suite_locality", "fig7_locality",
+                         strides=strides, bursts=bursts, n=n)
 
     # --------------------------------------------------------------- Table V
     def suite_total_throughput(self) -> Dict[str, float]:
-        """All M engines hit their local channels simultaneously; per the
-        paper (footnote 11) channels are independent, so the aggregate is
-        per-channel throughput x M.  The sweep evaluates one channel and
-        broadcasts it to the other M-1."""
-        p = RSTParams(n=8192, b=self.spec.min_burst, s=self.spec.min_burst,
-                      w=0x10000000)
-        sweep = self._sweep()
+        """Deprecated shim for the ``table5_total_throughput`` experiment.
+
+        Keeps the paper's register flow observable: every engine's read
+        register is configured with the run's params and (on deterministic
+        backends) the status register mirrors the completion count, as
+        `read_throughput` would have (Sec. III-C-3).
+        """
+        res = self._run("suite_total_throughput", "table5_total_throughput")
+        # The old suite returned numeric entries only; keep that contract
+        # and use the grid's params for the register mirror instead.
+        p = res.pop("params")
         for eng in self.engines:
             eng.configure_read(p)
-            sweep.add(p, channel=eng.channel)
-        per_channel = [r.value.gbps for r in sweep.run()]
-        if self.backend == "sim":
-            # Mirror the read module's completion count, as read_throughput
-            # would have (status register, Sec. III-C-3).
-            for eng in self.engines:
-                eng.registers = dataclasses.replace(eng.registers, status=p.n)
-        return {
-            "per_channel_gbps": float(np.mean(per_channel)),
-            "num_channels": len(self.engines),
-            "total_gbps": float(np.sum(per_channel)),
-            "theoretical_gbps": self.spec.peak_total_gbps,
-        }
+            if eng.backend_impl.deterministic:
+                eng.registers = dataclasses.replace(eng.registers,
+                                                    status=p.n)
+        return res
 
     # -------------------------------------------------------------- Table VI
     def suite_switch_latency(self, dst_channel: int = 0
                              ) -> Dict[int, Dict[str, float]]:
-        """Idle latency from every AXI channel to one HBM channel, switch ON.
-
-        Batched: all 64 probe runs are planned in one sweep, and the four
-        channels of each mini-switch share a switch distance, so only the
-        8 distinct (params, extra) latency points are simulated."""
-        if self.spec.name != "hbm":
-            raise ValueError("the DDR4 controller has no switch (Sec. IV-D)")
-        module = LatencyModule()
-        p_small = RSTParams(n=1024, b=32, s=128, w=0x1000000)
-        p_large = RSTParams(n=1024, b=32, s=128 * 1024, w=0x1000000)
-        sweep = self._sweep()
-        for ch in range(NUM_AXI_CHANNELS):
-            for p in (p_small, p_large):
-                sweep.add_latency(p, channel=ch, dst_channel=dst_channel,
-                                  switch_enabled=True)
-        results = sweep.run()
-        out: Dict[int, Dict[str, float]] = {}
-        for ch in range(NUM_AXI_CHANNELS):
-            eng = self._engine(ch)
-            extra = eng.switch.distance_extra_cycles(ch, dst_channel) + \
-                self.spec.switch_penalty
-            cap_small = module.capture(results[2 * ch].value)
-            cats = module.category_latencies(cap_small, self.spec, extra)
-            cap_large = module.capture(results[2 * ch + 1].value)
-            cats_miss = module.category_latencies(cap_large, self.spec, extra)
-            out[ch] = {"hit": cats["hit"], "closed": cats["closed"],
-                       "miss": cats_miss["miss"]}
-        return out
+        """Deprecated shim for the ``table6_switch_latency`` experiment."""
+        return self._run("suite_switch_latency", "table6_switch_latency",
+                         dst_channel=dst_channel)
 
     # --------------------------------------------------------------- Fig. 8
     def suite_switch_throughput(
         self, dst_channel: int = 0,
-        strides: Sequence[int] = (64, 256, 1024, 4096),
+        strides: Optional[Sequence[int]] = None,
     ) -> Dict[int, Dict[int, float]]:
-        """Throughput from one AXI channel per mini-switch to HBM channel 0.
-        Paper setting: B=64, W=0x1000000, N=200000.  One sweep point per
-        stride; the non-blocking switch broadcasts it to all mini-switches."""
-        if self.spec.name != "hbm":
-            raise ValueError("the DDR4 controller has no switch")
-        sweep = self._sweep()
-        keys: List[Tuple[int, int]] = []
-        for sw in range(NUM_AXI_CHANNELS // AXI_PER_MINI_SWITCH):
-            ch = sw * AXI_PER_MINI_SWITCH
-            for s in strides:
-                sweep.add(RSTParams(n=200000, b=64, s=s, w=0x1000000),
-                          channel=ch, dst_channel=dst_channel)
-                keys.append((ch, s))
-        out: Dict[int, Dict[int, float]] = {}
-        for (ch, s), r in zip(keys, sweep.run()):
-            out.setdefault(ch, {})[s] = r.value.gbps
-        return out
+        """Deprecated shim for the ``fig8_switch_throughput`` experiment."""
+        return self._run("suite_switch_throughput", "fig8_switch_throughput",
+                         dst_channel=dst_channel, strides=strides)
 
 
-def default_campaigns(backend: str = "sim") -> Dict[str, ShuhaiCampaign]:
-    return {"hbm": ShuhaiCampaign(HBM, backend),
-            "ddr4": ShuhaiCampaign(DDR4, backend)}
+def default_campaigns(backend: str = "sim", *,
+                      specs: Optional[Sequence[str]] = None
+                      ) -> Dict[str, ShuhaiCampaign]:
+    """One campaign per memory spec (default: every registered spec)."""
+    names = list(specs) if specs else available_specs()
+    return {name: ShuhaiCampaign(spec_by_name(name), backend)
+            for name in names}

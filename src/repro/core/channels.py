@@ -24,6 +24,18 @@ NUM_MINI_SWITCHES = NUM_AXI_CHANNELS // AXI_PER_MINI_SWITCH  # 8
 class HBMTopology:
     spec: MemorySpec = HBM
 
+    def __post_init__(self):
+        # This topology (8 mini-switches x 4 AXI channels, 2 stacks) is the
+        # U280's; it is the only switch fabric modeled so far.  A switched
+        # spec with a different channel count needs its own topology class
+        # (ROADMAP open item) — fail at construction, not deep in a sweep.
+        if self.spec.num_channels != NUM_AXI_CHANNELS:
+            raise ValueError(
+                f"HBMTopology models the U280's {NUM_AXI_CHANNELS}-channel "
+                f"crossbar; spec {self.spec.name!r} has "
+                f"{self.spec.num_channels} channels and needs its own "
+                f"topology model")
+
     @property
     def num_pseudo_channels(self) -> int:
         return NUM_STACKS * MEM_CHANNELS_PER_STACK * PSEUDO_PER_MEM_CHANNEL

@@ -2,12 +2,18 @@
 
 Faithful to Sec. III-C-1: an engine owns one channel, has independent read
 and write modules, is configured purely through runtime registers, and is
-never the bottleneck.  Two backends implement the same interface:
+never the bottleneck.  Backends are *pluggable*: a :class:`Backend`
+implements the two primitive measurements (throughput, serial latency) for
+one execution substrate and registers itself by name.  Two ship built in:
 
 * ``sim``    — the calibrated DRAM timing model (reproduces the paper's
                U280 numbers on this CPU-only container);
 * ``pallas`` — the real TPU kernels (kernels/rst_read.py, rst_write.py),
                run in interpret mode for validation here, compiled on TPU.
+
+`register_backend` adds a third; everything above (Engine, Sweep, the
+experiment registry) resolves backends through `get_backend` — see
+DESIGN.md §6.
 
 The register-driven methods (`read_throughput`, `read_latency`, ...) mirror
 the paper's configure-then-trigger flow.  The `evaluate_*` methods take
@@ -17,7 +23,7 @@ them to batch-evaluate whole campaign grids with memoization.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -29,7 +35,135 @@ from repro.core.latency import LatencyModule
 from repro.core.params import EngineRegisters, RSTParams
 from repro.core.switch import SwitchModel
 
-BACKENDS = ("sim", "pallas")
+
+# ---------------------------------------------------------------------------
+# Backend protocol + registry
+# ---------------------------------------------------------------------------
+
+
+class Backend:
+    """One execution substrate for the RST measurements.
+
+    Subclass, set the class attributes, implement `throughput` (and
+    `latency` if the substrate has per-transaction timers), then
+    `register_backend(MyBackend())`.
+
+    `throughput` returns the *unscaled* per-channel result — the switch
+    datapath scale (Fig. 8) is applied by the Engine/Sweep layer, which
+    knows channel positions.  `deterministic` declares that results are a
+    pure function of (spec, params, policy, op); the sweep layer memoizes
+    and channel-broadcasts only deterministic backends.
+    """
+
+    name: str = ""
+    deterministic: bool = False
+    supports_latency: bool = False
+
+    def throughput(self, spec: MemorySpec, p: RSTParams,
+                   mapping: AddressMapping, *,
+                   op: str = "read") -> timing_model.ThroughputResult:
+        raise NotImplementedError
+
+    def latency(self, spec: MemorySpec, p: RSTParams,
+                mapping: AddressMapping, *, switch_enabled: bool,
+                switch_extra_cycles: int) -> timing_model.LatencyTrace:
+        raise NotImplementedError(
+            f"backend {self.name!r} has no per-transaction timers; use the "
+            "sim backend for latency experiments (DESIGN.md §2)")
+
+
+class SimBackend(Backend):
+    """Calibrated DRAM timing model (core/timing_model.py)."""
+
+    name = "sim"
+    deterministic = True
+    supports_latency = True
+
+    def throughput(self, spec, p, mapping, *, op="read"):
+        return timing_model.throughput(p, mapping, spec, op=op)
+
+    def latency(self, spec, p, mapping, *, switch_enabled,
+                switch_extra_cycles):
+        return timing_model.serial_read_latencies(
+            p, mapping, spec, switch_enabled=switch_enabled,
+            switch_extra_cycles=switch_extra_cycles)
+
+
+class PallasBackend(Backend):
+    """Real RST kernels (kernels/), interpret mode off-TPU.
+
+    The kernels traverse a working buffer; the DRAM address-mapping policy
+    is the device's own, so `mapping` is ignored.  Latency raises: real
+    accelerators expose no per-transaction timers — use
+    ops.measure_read_bandwidth with N=1 as a coarse probe, or the sim
+    backend (DESIGN.md §2).
+    """
+
+    name = "pallas"
+    deterministic = False
+    supports_latency = False
+
+    def throughput(self, spec, p, mapping, *, op="read"):
+        del spec, mapping  # the device's controller, not the model's
+        from repro.kernels import ops  # deferred: keeps sim path jax-free
+        sample = (ops.measure_read_bandwidth(p) if op == "read"
+                  else ops.measure_write_bandwidth(p))
+        return timing_model.ThroughputResult(
+            gbps=sample.gbps, bound="measured",
+            detail={"seconds": sample.seconds,
+                    "bytes": float(sample.bytes_moved)})
+
+    def latency(self, spec, p, mapping, *, switch_enabled,
+                switch_extra_cycles):
+        raise NotImplementedError(
+            "per-transaction latency needs on-chip timers; on TPU use "
+            "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
+            "the sim backend (DESIGN.md §2)")
+
+
+_BACKEND_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, *, override: bool = False) -> Backend:
+    """Register a Backend instance under its `name`; returns it."""
+    if not backend.name:
+        raise ValueError("backend must set a non-empty `name`")
+    if backend.name in _BACKEND_REGISTRY and not override:
+        raise ValueError(
+            f"backend {backend.name!r} already registered; pass "
+            f"override=True to replace it")
+    _BACKEND_REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> List[str]:
+    """Names of every registered backend, registration order."""
+    return list(_BACKEND_REGISTRY)
+
+
+def get_backend(name: str) -> Backend:
+    backend = _BACKEND_REGISTRY.get(name)
+    if backend is None:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}")
+    return backend
+
+
+register_backend(SimBackend())
+register_backend(PallasBackend())
+
+
+def __getattr__(name: str):
+    # Deprecated: the hardcoded tuple became a registry; keep the old
+    # module attribute alive for external readers.
+    if name == "BACKENDS":
+        return tuple(available_backends())
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -43,10 +177,9 @@ class Engine:
     registers: EngineRegisters = dataclasses.field(default_factory=EngineRegisters)
 
     def __post_init__(self):
-        if self.backend not in BACKENDS:
-            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
-        if self.switch is None and self.spec.name == "hbm":
-            self.switch = SwitchModel(HBMTopology(), enabled=True)
+        self.backend_impl: Backend = get_backend(self.backend)
+        if self.switch is None and self.spec.has_switch:
+            self.switch = SwitchModel(HBMTopology(self.spec), enabled=True)
 
     # -- register plumbing (parameter module side) ---------------------------
     def configure_read(self, p: RSTParams) -> None:
@@ -61,14 +194,14 @@ class Engine:
         return get_mapping(self.spec, policy)
 
     def _switch_extra(self, dst_channel: Optional[int]) -> int:
-        if self.spec.name != "hbm" or self.switch is None:
+        if not self.spec.has_switch or self.switch is None:
             return 0
         dst = self.channel if dst_channel is None else dst_channel
         return self.switch.total_extra_cycles(self.channel, dst)
 
     def throughput_scale(self, dst_channel: Optional[int]) -> float:
         """Switch datapath scale for a read hitting `dst_channel` (Fig. 8)."""
-        if self.spec.name != "hbm" or self.switch is None:
+        if not self.spec.has_switch or self.switch is None:
             return 1.0
         dst = self.channel if dst_channel is None else dst_channel
         return self.switch.throughput_scale(self.channel, dst)
@@ -80,21 +213,15 @@ class Engine:
                             op: str = "read") -> timing_model.ThroughputResult:
         """Evaluate one throughput point without touching the register file."""
         p = p.validate(self.spec)
-        if self.backend == "sim":
-            res = timing_model.throughput(p, self._mapping(policy), self.spec,
-                                          op=op)
-            if op == "read":
-                scale = self.throughput_scale(dst_channel)
-                if scale != 1.0:
-                    res = dataclasses.replace(res, gbps=res.gbps * scale)
-            return res
-        from repro.kernels import ops  # deferred: keeps sim path jax-free
-        sample = (ops.measure_read_bandwidth(p) if op == "read"
-                  else ops.measure_write_bandwidth(p))
-        return timing_model.ThroughputResult(
-            gbps=sample.gbps, bound="measured",
-            detail={"seconds": sample.seconds,
-                    "bytes": float(sample.bytes_moved)})
+        res = self.backend_impl.throughput(self.spec, p,
+                                           self._mapping(policy), op=op)
+        if op == "read" and self.backend_impl.deterministic:
+            # Model backends see the switch through the datapath scale; a
+            # measuring backend's number already includes the real switch.
+            scale = self.throughput_scale(dst_channel)
+            if scale != 1.0:
+                res = dataclasses.replace(res, gbps=res.gbps * scale)
+        return res
 
     def latency_config(self, dst_channel: Optional[int] = None,
                        switch_enabled: Optional[bool] = None
@@ -103,7 +230,7 @@ class Engine:
         switch is DISABLED by default, matching paper footnote 6."""
         enabled = (False if switch_enabled is None else switch_enabled)
         extra = 0
-        if enabled and self.spec.name == "hbm" and self.switch is not None:
+        if enabled and self.spec.has_switch and self.switch is not None:
             sw = dataclasses.replace(self.switch, enabled=True)
             dst = self.channel if dst_channel is None else dst_channel
             extra = sw.distance_extra_cycles(self.channel, dst)
@@ -115,15 +242,10 @@ class Engine:
                          switch_enabled: Optional[bool] = None
                          ) -> timing_model.LatencyTrace:
         """Evaluate one serial-latency point without the register file."""
-        if self.backend != "sim":
-            raise NotImplementedError(
-                "per-transaction latency needs on-chip timers; on TPU use "
-                "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
-                "the sim backend (DESIGN.md §2)")
         p = p.validate(self.spec)
         enabled, extra = self.latency_config(dst_channel, switch_enabled)
-        return timing_model.serial_read_latencies(
-            p, self._mapping(policy), self.spec,
+        return self.backend_impl.latency(
+            self.spec, p, self._mapping(policy),
             switch_enabled=enabled, switch_extra_cycles=extra)
 
     # -- read module ---------------------------------------------------------
@@ -133,7 +255,7 @@ class Engine:
         p = self.registers.read_params.validate(self.spec)
         res = self.evaluate_throughput(p, policy=policy,
                                        dst_channel=dst_channel, op="read")
-        if self.backend == "sim":
+        if self.backend_impl.deterministic:
             self.registers = dataclasses.replace(self.registers, status=p.n)
         return res
 

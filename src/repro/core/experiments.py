@@ -1,0 +1,532 @@
+"""Declarative experiment registry: each paper table/figure as one spec.
+
+The paper's closing claim is that Shuhai "can be easily generalized to
+other FPGA boards or other generations of memory" — this module is that
+claim as code.  Every artifact of Sec. V/VI is a single :class:`Experiment`
+object: a *plan* that lays an ``(RSTParams × policy × channel)`` grid for
+any :class:`~repro.core.hwspec.MemorySpec`, and a named *derive* reducer
+that turns the evaluated grid back into the table/figure quantities.  One
+generic runner, :func:`run_experiment`, lowers any spec onto
+:class:`~repro.core.sweep.Sweep` for batched (memoized, channel-broadcast)
+execution on any registered backend.
+
+The three old entry points are thin views over this registry:
+`ShuhaiCampaign.suite_*` (deprecated shims), `benchmarks/run.py` (CSV/JSON
+rows via each experiment's `summarize`), and `examples/shuhai_campaign.py`
+(flat CSV via each experiment's `flatten`).  None of them contain grid
+logic of their own.
+
+Extending the library (DESIGN.md §6):
+
+* new memory generation — ``hwspec.register_spec`` + an
+  ``address_mapping.register_policies`` table; every experiment whose
+  requirements the spec meets runs unchanged (HBM3/DDR3 ship built in);
+* new execution substrate — subclass ``engine.Backend`` and
+  ``engine.register_backend`` it;
+* new measurement — build an :class:`Experiment` and
+  :func:`register_experiment` it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.address_mapping import DEFAULT_POLICY, policies_for
+from repro.core.channels import AXI_PER_MINI_SWITCH, HBMTopology
+from repro.core.hwspec import HBM, MemorySpec
+from repro.core.latency import LatencyModule
+from repro.core.params import RSTParams
+from repro.core.engine import get_backend
+from repro.core.sweep import (KIND_LATENCY, KIND_THROUGHPUT, Sweep,
+                              SweepPoint)
+from repro.core.switch import SwitchModel
+from repro.core.timing_model import refresh_interval_estimate
+
+MB = 1024**2
+
+# One planned grid entry: the caller-meaningful key the derive reducer will
+# see, plus the sweep point that produces its value.
+PlannedPoint = Tuple[Any, SweepPoint]
+Plan = Callable[[MemorySpec, Mapping[str, Any]], List[PlannedPoint]]
+Derive = Callable[[MemorySpec, List[Tuple[Any, Any]], Mapping[str, Any]], Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """One paper table/figure as a declarative spec.
+
+    `plan` builds the keyed grid for a memory spec + options; `derive`
+    reduces the keyed sweep values to the artifact's result structure.
+    `summarize` renders the one-line headline used by benchmarks/run.py;
+    `flatten` renders (key, value) CSV rows for the example driver.
+    `defaults` are the canonical paper options; `quick` overlays them for
+    fast CI runs; `bench` overlays them for the benchmark harness.
+    """
+
+    name: str                       # registry key, e.g. "fig6_address_mapping"
+    artifact: str                   # paper reference, e.g. "Fig. 6"
+    title: str
+    plan: Plan
+    derive: Derive
+    defaults: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    quick: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    bench: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    requires_switch: bool = False
+    summarize: Optional[Callable[[MemorySpec, Any], str]] = None
+    flatten: Optional[Callable[[MemorySpec, Any], List[Tuple[str, str]]]] = None
+    # Historical benchmark row prefix, where it differs from `name` (keeps
+    # BENCH_*.json perf trajectories comparable across the redesign).
+    bench_label: Optional[str] = None
+
+    def available_on(self, spec: MemorySpec) -> bool:
+        return spec.has_switch or not self.requires_switch
+
+    def summary(self, spec: MemorySpec, result: Any) -> str:
+        """One-line headline; falls back to a repr for experiments that
+        register no `summarize` of their own."""
+        if self.summarize is not None:
+            return self.summarize(spec, result)
+        return repr(result)[:120]
+
+    def rows(self, spec: MemorySpec, result: Any) -> List[Tuple[str, str]]:
+        """(key, value) CSV rows; falls back to one repr row for
+        experiments that register no `flatten` of their own."""
+        if self.flatten is not None:
+            return self.flatten(spec, result)
+        return [("result", repr(result)[:120])]
+
+    def options(self, *, quick: bool = False, bench: bool = False,
+                **overrides) -> Dict[str, Any]:
+        """defaults <- bench overlay <- quick overlay <- explicit overrides
+        (None-valued overrides fall back to the layered value)."""
+        out = dict(self.defaults)
+        if bench:
+            out.update(self.bench)
+        if quick:
+            out.update(self.quick)
+        out.update({k: v for k, v in overrides.items() if v is not None})
+        unknown = set(out) - set(self.defaults)
+        if unknown:
+            raise TypeError(
+                f"{self.name}: unknown option(s) {sorted(unknown)}; "
+                f"valid: {sorted(self.defaults)}")
+        return out
+
+
+_EXPERIMENT_REGISTRY: Dict[str, Experiment] = {}
+
+
+def register_experiment(exp: Experiment, *, override: bool = False
+                        ) -> Experiment:
+    if exp.name in _EXPERIMENT_REGISTRY and not override:
+        raise ValueError(
+            f"experiment {exp.name!r} already registered; pass "
+            f"override=True to replace it")
+    _EXPERIMENT_REGISTRY[exp.name] = exp
+    return exp
+
+
+def get_experiment(name: str) -> Experiment:
+    exp = _EXPERIMENT_REGISTRY.get(name)
+    if exp is None:
+        raise ValueError(f"unknown experiment {name!r}; registered: "
+                         f"{list(_EXPERIMENT_REGISTRY)}")
+    return exp
+
+
+def all_experiments() -> List[Experiment]:
+    """Every registered experiment, registration (= paper) order."""
+    return list(_EXPERIMENT_REGISTRY.values())
+
+
+def experiments_for(spec: MemorySpec) -> List[Experiment]:
+    return [e for e in all_experiments() if e.available_on(spec)]
+
+
+def run_experiment(experiment: "Experiment | str", spec: MemorySpec = HBM,
+                   backend: str = "sim", *, quick: bool = False,
+                   bench: bool = False, **options) -> Any:
+    """Lower one experiment spec onto a Sweep and reduce the results.
+
+    The whole grid executes as one batched `Sweep.run()` (memoized,
+    channel-broadcast on deterministic backends); `derive` only ever sees
+    ``(key, value)`` pairs in plan order.
+    """
+    exp = get_experiment(experiment) if isinstance(experiment, str) else experiment
+    if not exp.available_on(spec):
+        raise ValueError(
+            f"experiment {exp.name!r} needs an inter-channel switch, which "
+            f"the {spec.name} controller does not have (Sec. IV-D)")
+    opts = exp.options(quick=quick, bench=bench, **options)
+    planned = exp.plan(spec, opts)
+    backend_impl = get_backend(backend)
+    if not backend_impl.supports_latency and any(
+            pt.kind == KIND_LATENCY for _, pt in planned):
+        raise ValueError(
+            f"experiment {exp.name!r} needs serial-latency measurements, "
+            f"which backend {backend!r} does not provide "
+            f"(supports_latency=False); use the sim backend (DESIGN.md §2)")
+    sweep = Sweep(spec, backend)
+    for _, pt in planned:
+        sweep.add_point(pt)
+    values = [r.value for r in sweep.run()]
+    keyed = [(key, v) for (key, _), v in zip(planned, values)]
+    return exp.derive(spec, keyed, opts)
+
+
+# ---------------------------------------------------------------------------
+# grid/derive helpers
+# ---------------------------------------------------------------------------
+
+
+def _tp_point(p: RSTParams, policy=None, channel=0, dst_channel=None,
+              op="read") -> SweepPoint:
+    return SweepPoint(p, policy, channel, dst_channel, op, KIND_THROUGHPUT)
+
+
+def _lat_point(p: RSTParams, channel=0, dst_channel=None,
+               switch_enabled=None) -> SweepPoint:
+    return SweepPoint(p, None, channel, dst_channel, "read", KIND_LATENCY,
+                      switch_enabled)
+
+
+def _bursts(spec: MemorySpec, bursts) -> Tuple[int, ...]:
+    return tuple(bursts) if bursts else (spec.min_burst, 2 * spec.min_burst)
+
+
+def _categories(spec: MemorySpec, trace, extra_cycles: int = 0
+                ) -> Dict[str, float]:
+    module = LatencyModule()
+    return module.category_latencies(module.capture(trace), spec,
+                                     extra_cycles)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 — refresh spikes
+# ---------------------------------------------------------------------------
+
+
+def _fig4_plan(spec, o):
+    p = RSTParams(n=o["n"], b=spec.min_burst, s=64, w=0x1000000)
+    return [(p, _lat_point(p))]
+
+
+def _fig4_derive(spec, keyed, o):
+    (p, trace), = keyed
+    return {
+        "latency_cycles": trace.cycles,
+        "refresh_hits": trace.refresh_hits,
+        "estimated_refresh_interval_ns":
+            refresh_interval_estimate(trace, spec),
+        "params": p,
+    }
+
+
+register_experiment(Experiment(
+    name="fig4_refresh",
+    artifact="Fig. 4",
+    title="Serial-read latency timeline with periodic refresh spikes",
+    plan=_fig4_plan,
+    derive=_fig4_derive,
+    defaults={"n": 1024},
+    summarize=lambda spec, r:
+        f"tREFI_est_ns={r['estimated_refresh_interval_ns']:.0f}",
+    flatten=lambda spec, r: [
+        ("tREFI_ns", f"{r['estimated_refresh_interval_ns']:.0f}"),
+        ("spikes", str(int(r["refresh_hits"].sum()))),
+    ],
+))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 / Table IV — idle page hit/closed/miss latency
+# ---------------------------------------------------------------------------
+
+
+def _table4_plan(spec, o):
+    # The paper's two-stride probe: a small stride isolates hit+closed, a
+    # page-crossing stride forces misses.  Switch disabled (footnote 6/9).
+    small = RSTParams(n=o["n"], b=spec.min_burst, s=128, w=0x1000000)
+    large = RSTParams(n=o["n"], b=spec.min_burst, s=128 * 1024, w=0x1000000)
+    return [("small", _lat_point(small)), ("large", _lat_point(large))]
+
+
+def _table4_derive(spec, keyed, o):
+    traces = dict(keyed)
+    cats_small = _categories(spec, traces["small"])
+    cats_large = _categories(spec, traces["large"])
+    return {
+        name: {"cycles": cyc, "ns": cyc * spec.cycle_ns}
+        for name, cyc in (("page_hit", cats_small["hit"]),
+                          ("page_closed", cats_small["closed"]),
+                          ("page_miss", cats_large["miss"]))
+    }
+
+
+register_experiment(Experiment(
+    name="table4_idle_latency",
+    artifact="Table IV / Fig. 5",
+    title="Idle page hit/closed/miss latency",
+    plan=_table4_plan,
+    derive=_table4_derive,
+    defaults={"n": 1024},
+    summarize=lambda spec, r:
+        ";".join(f"{k}={v['ns']:.1f}ns" for k, v in r.items()),
+    flatten=lambda spec, r: [
+        (k, f"{v['cycles']}cyc/{v['ns']:.1f}ns") for k, v in r.items()],
+))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — address-mapping policy × stride × burst throughput
+# ---------------------------------------------------------------------------
+
+
+def _fig6_plan(spec, o):
+    out = []
+    for policy in policies_for(spec):
+        for b in _bursts(spec, o["bursts"]):
+            for s in o["strides"]:
+                if s < b:
+                    continue
+                p = RSTParams(n=o["n"], b=b, s=s, w=o["w"])
+                out.append(((policy, b, s), _tp_point(p, policy=policy)))
+    return out
+
+
+def _fig6_derive(spec, keyed, o):
+    results = {policy: {b: {} for b in _bursts(spec, o["bursts"])}
+               for policy in policies_for(spec)}
+    for (policy, b, s), r in keyed:
+        results[policy][b][s] = r.gbps
+    return results
+
+
+def _fig6_summarize(spec, r):
+    per_s = r[DEFAULT_POLICY[spec.name]][spec.min_burst]
+    best_seq = per_s[min(per_s)]
+    return f"default_seq_gbps={best_seq:.2f};policies={len(r)}"
+
+
+register_experiment(Experiment(
+    name="fig6_address_mapping",
+    artifact="Fig. 6",
+    title="Throughput for every address-mapping policy x stride x burst",
+    plan=_fig6_plan,
+    derive=_fig6_derive,
+    defaults={"strides": (64, 128, 256, 512, 1024, 2048, 4096, 8192,
+                          16384, 32768),
+              "bursts": None, "w": 0x10000000, "n": 4096},
+    quick={"strides": (64, 1024, 8192), "n": 1024},
+    summarize=_fig6_summarize,
+    flatten=lambda spec, r: [
+        (f"{pol}_B{b}_S{s}", f"{gbps:.2f}")
+        for pol, per_b in r.items()
+        for b, per_s in per_b.items()
+        for s, gbps in per_s.items()],
+))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — working-set locality (W=8K vs W=256M)
+# ---------------------------------------------------------------------------
+
+_FIG7_WINDOWS = (8 * 1024, 256 * MB)
+
+
+def _fig7_plan(spec, o):
+    # Combinations with S < B or S > W violate the RST constraints
+    # (Table I) and are omitted — consumers must guard lookups.
+    out = []
+    for w in _FIG7_WINDOWS:
+        for b in _bursts(spec, o["bursts"]):
+            for s in o["strides"]:
+                if s < b or s > w:
+                    continue
+                p = RSTParams(n=o["n"], b=b, s=s, w=w)
+                out.append(((w, b, s), _tp_point(p)))
+    return out
+
+
+def _fig7_derive(spec, keyed, o):
+    results = {w: {b: {} for b in _bursts(spec, o["bursts"])}
+               for w in _FIG7_WINDOWS}
+    for (w, b, s), r in keyed:
+        results[w][b][s] = r.gbps
+    return results
+
+
+def _fig7_summarize(spec, r):
+    b, s = spec.min_burst, 4096
+    try:
+        local, base = r[8 * 1024][b][s], r[256 * MB][b][s]
+    except KeyError as e:
+        # The headline point must exist; a miss is a bug, not a skip.
+        raise KeyError(
+            f"locality result is missing burst={b} stride={s}: {e}; "
+            f"available strides per window: "
+            f"{ {w: sorted(per_b.get(b, {})) for w, per_b in r.items()} }"
+        ) from e
+    return f"w8k_s4k_gbps={local:.2f};w256m_s4k_gbps={base:.2f}"
+
+
+register_experiment(Experiment(
+    name="fig7_locality",
+    artifact="Fig. 7",
+    title="W=8K (locality) vs W=256M (baseline) throughput",
+    plan=_fig7_plan,
+    derive=_fig7_derive,
+    defaults={"strides": (64, 256, 1024, 4096, 16384), "bursts": None,
+              "n": 4096},
+    quick={"n": 1024},
+    summarize=_fig7_summarize,
+    flatten=lambda spec, r: [
+        (f"W{w}_B{b}_S{s}", f"{gbps:.2f}")
+        for w, per_b in r.items()
+        for b, per_s in per_b.items()
+        for s, gbps in per_s.items()],
+))
+
+
+# ---------------------------------------------------------------------------
+# Table V — aggregate throughput, all channels
+# ---------------------------------------------------------------------------
+
+
+def _table5_params(spec, o) -> RSTParams:
+    return RSTParams(n=o["n"], b=spec.min_burst, s=spec.min_burst,
+                     w=0x10000000)
+
+
+def _table5_plan(spec, o):
+    # All M engines hit their local channels simultaneously; channels are
+    # independent (footnote 11), so the sweep evaluates one and broadcasts.
+    p = _table5_params(spec, o)
+    return [(c, _tp_point(p, channel=c)) for c in range(spec.num_channels)]
+
+
+def _table5_derive(spec, keyed, o):
+    per_channel = [r.gbps for _, r in keyed]
+    return {
+        "per_channel_gbps": float(np.mean(per_channel)),
+        "num_channels": len(per_channel),
+        "total_gbps": float(np.sum(per_channel)),
+        "theoretical_gbps": spec.peak_total_gbps,
+        # The grid's parameters, so register-faithful hosts (the
+        # ShuhaiCampaign shim) can mirror them into their engines.
+        "params": _table5_params(spec, o),
+    }
+
+
+register_experiment(Experiment(
+    name="table5_total_throughput",
+    artifact="Table V",
+    title="Aggregate sequential-read throughput over all channels",
+    plan=_table5_plan,
+    derive=_table5_derive,
+    defaults={"n": 8192},
+    bench_label="table5_total",
+    summarize=lambda spec, r: (f"total_gbps={r['total_gbps']:.1f};"
+                               f"per_channel={r['per_channel_gbps']:.2f}"),
+    flatten=lambda spec, r: [("total_gbps", f"{r['total_gbps']:.1f}")],
+))
+
+
+# ---------------------------------------------------------------------------
+# Table VI — switch distance latency (switched specs only)
+# ---------------------------------------------------------------------------
+
+
+def _table6_plan(spec, o):
+    small = RSTParams(n=o["n"], b=spec.min_burst, s=128, w=0x1000000)
+    large = RSTParams(n=o["n"], b=spec.min_burst, s=128 * 1024, w=0x1000000)
+    out = []
+    for ch in range(spec.num_channels):
+        for label, p in (("small", small), ("large", large)):
+            out.append(((ch, label),
+                        _lat_point(p, channel=ch,
+                                   dst_channel=o["dst_channel"],
+                                   switch_enabled=True)))
+    return out
+
+
+def _table6_derive(spec, keyed, o):
+    sw = SwitchModel(HBMTopology(spec), enabled=True)
+    traces = dict(keyed)
+    out = {}
+    for ch in range(spec.num_channels):
+        extra = sw.distance_extra_cycles(ch, o["dst_channel"]) + \
+            spec.switch_penalty
+        cats = _categories(spec, traces[(ch, "small")], extra)
+        cats_miss = _categories(spec, traces[(ch, "large")], extra)
+        out[ch] = {"hit": cats["hit"], "closed": cats["closed"],
+                   "miss": cats_miss["miss"]}
+    return out
+
+
+register_experiment(Experiment(
+    name="table6_switch_latency",
+    artifact="Table VI",
+    title="Idle latency from every AXI channel to one channel, switch on",
+    plan=_table6_plan,
+    derive=_table6_derive,
+    defaults={"dst_channel": 0, "n": 1024},
+    requires_switch=True,
+    summarize=lambda spec, r: (
+        f"hit_ch0={r[0]['hit']}cyc;"
+        f"hit_ch{max(r)}={r[max(r)]['hit']}cyc;"
+        f"spread={r[max(r)]['hit'] - r[0]['hit']}cyc"),
+    flatten=lambda spec, r: [
+        (f"ch{ch}_hit", f"{r[ch]['hit']}cyc")
+        for ch in range(0, spec.num_channels, AXI_PER_MINI_SWITCH)],
+))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — switch throughput (switched specs only)
+# ---------------------------------------------------------------------------
+
+
+def _fig8_plan(spec, o):
+    # One AXI channel per mini-switch; the non-blocking switch broadcasts.
+    out = []
+    for sw in range(spec.num_channels // AXI_PER_MINI_SWITCH):
+        ch = sw * AXI_PER_MINI_SWITCH
+        for s in o["strides"]:
+            p = RSTParams(n=o["n"], b=2 * spec.min_burst, s=s, w=0x1000000)
+            out.append(((ch, s),
+                        _tp_point(p, channel=ch,
+                                  dst_channel=o["dst_channel"])))
+    return out
+
+
+def _fig8_derive(spec, keyed, o):
+    out = {}
+    for (ch, s), r in keyed:
+        out.setdefault(ch, {})[s] = r.gbps
+    return out
+
+
+def _fig8_summarize(spec, r):
+    s0 = min(next(iter(r.values())))
+    vals = [r[ch][s0] for ch in r]
+    return f"min_gbps={min(vals):.2f};max_gbps={max(vals):.2f}"
+
+
+register_experiment(Experiment(
+    name="fig8_switch_throughput",
+    artifact="Fig. 8",
+    title="Throughput from one AXI channel per mini-switch, switch on",
+    plan=_fig8_plan,
+    derive=_fig8_derive,
+    defaults={"dst_channel": 0, "strides": (64, 256, 1024, 4096),
+              "n": 200000},
+    bench={"strides": (64, 1024)},
+    requires_switch=True,
+    summarize=_fig8_summarize,
+    flatten=lambda spec, r: [
+        (f"ch{ch}_S{s}", f"{per_s[s]:.2f}")
+        for ch, per_s in r.items() for s in per_s],
+))

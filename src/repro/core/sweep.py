@@ -25,7 +25,7 @@ import itertools
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import timing_model
-from repro.core.engine import Engine
+from repro.core.engine import Engine, get_backend
 from repro.core.hwspec import HBM, MemorySpec
 from repro.core.params import RSTParams
 
@@ -71,6 +71,7 @@ class Sweep:
     def __init__(self, spec: MemorySpec = HBM, backend: str = "sim"):
         self.spec = spec
         self.backend = backend
+        self.backend_impl = get_backend(backend)
         self.stats = SweepStats()
         self._points: List[SweepPoint] = []
         self._engines: Dict[int, Engine] = {}
@@ -94,6 +95,11 @@ class Sweep:
         """Queue one serial-latency point; returns self for chaining."""
         self._points.append(SweepPoint(params, policy, channel, dst_channel,
                                        "read", KIND_LATENCY, switch_enabled))
+        return self
+
+    def add_point(self, pt: SweepPoint) -> "Sweep":
+        """Queue an already-built point (the experiment registry's path)."""
+        self._points.append(pt)
         return self
 
     def add_grid(self, params: Iterable[RSTParams], *,
@@ -124,7 +130,7 @@ class Sweep:
 
     def _run_throughput(self, pt: SweepPoint) -> Tuple[object, bool]:
         eng = self._engine(pt.channel)
-        if self.backend != "sim":
+        if not self.backend_impl.deterministic:
             # Real measurements are per-point; no memoization.
             self.stats.evaluated += 1
             return eng.evaluate_throughput(
@@ -135,8 +141,8 @@ class Sweep:
         cached = base is not None
         if base is None:
             p = pt.params.validate(self.spec)
-            base = timing_model.throughput(p, eng._mapping(pt.policy),
-                                           self.spec, op=pt.op)
+            base = self.backend_impl.throughput(
+                self.spec, p, eng._mapping(pt.policy), op=pt.op)
             self._tp_cache[key] = base
             self.stats.evaluated += 1
         # Channel broadcast: location only enters through the switch scale.
@@ -148,6 +154,11 @@ class Sweep:
 
     def _run_latency(self, pt: SweepPoint) -> Tuple[object, bool]:
         eng = self._engine(pt.channel)
+        if not self.backend_impl.deterministic:
+            self.stats.evaluated += 1
+            return eng.evaluate_latency(
+                pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
+                switch_enabled=pt.switch_enabled), False
         enabled, extra = eng.latency_config(pt.dst_channel, pt.switch_enabled)
         key = (pt.params, pt.policy, enabled, extra)
         trace = self._lat_cache.get(key)

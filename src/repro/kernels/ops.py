@@ -28,6 +28,35 @@ def tile_bytes(dtype, burst_rows: int = SUBLANE) -> int:
     return burst_rows * LANE * jnp.dtype(dtype).itemsize
 
 
+def grid_bucket(n_txns: int, floor: int = 16) -> int:
+    """Round a transaction count up to the next power of two.
+
+    The grid size is a *static* argument of the jitted RST kernels, so every
+    distinct value costs a fresh trace+compile (~0.5 s in interpret mode —
+    it dominated non-quick benchmark wall time).  The actual transaction
+    count N is a *runtime* scalar (`pl.when(i < n)` gates the excess grid
+    steps), so bucketing the grid to powers of two lets every RST variant
+    within a bucket share one compiled kernel.
+
+    The excess grid steps still occupy the pipeline (they re-fetch the last
+    block), so a bucketed grid *biases a wall-clock bandwidth measurement
+    low* — up to 2x, or floor/N for tiny N.  The measure_* wrappers
+    therefore bucket only in interpret mode, where the gbps number is
+    documented as correctness-validation-only and the trace/compile cost is
+    what matters; compiled (real-TPU) runs keep the exact grid.
+    """
+    if n_txns <= 0:
+        raise ValueError(f"n_txns must be positive, got {n_txns}")
+    return max(floor, 1 << (n_txns - 1).bit_length())
+
+
+def default_grid(n_txns: int, interpret: bool) -> int:
+    """Grid the measure_* wrappers use when the caller passes none:
+    bucketed in interpret mode (compile sharing; gbps is validation-only),
+    exact in compiled mode (gbps is a real measurement)."""
+    return grid_bucket(n_txns) if interpret else n_txns
+
+
 def params_operand(p: RSTParams, dtype, burst_rows: int = SUBLANE,
                    grid_txns: int | None = None) -> jax.Array:
     """Pack byte-level RST params into the int32[4] scalar operand."""
@@ -70,7 +99,7 @@ def measure_read_bandwidth(p: RSTParams, *, dtype=jnp.float32,
                            burst_rows: int = SUBLANE,
                            grid_txns: int | None = None,
                            interpret: bool = True) -> BandwidthSample:
-    grid = grid_txns or p.n
+    grid = grid_txns or default_grid(p.n, interpret)
     operand = params_operand(p, dtype, burst_rows, grid)
     buf = make_working_buffer(p, dtype)
     # Warm-up compiles and (in interpret mode) validates tracing.
@@ -90,7 +119,7 @@ def measure_write_bandwidth(p: RSTParams, *, dtype=jnp.float32,
                             burst_rows: int = SUBLANE,
                             grid_txns: int | None = None,
                             interpret: bool = True) -> BandwidthSample:
-    grid = grid_txns or p.n
+    grid = grid_txns or default_grid(p.n, interpret)
     operand = params_operand(p, dtype, burst_rows, grid)
     buf = make_working_buffer(p, dtype)
     t0 = time.perf_counter()

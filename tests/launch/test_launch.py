@@ -129,7 +129,9 @@ rules = train_lib.make_rules(cfg, mesh)
 rules.update({{k: None for k in
              ("heads", "act_heads", "kv_heads", "cache_heads", "vocab",
               "act_vocab", "mlp", "act_mlp", "experts", "expert_mlp")}})
-with jax.set_mesh(mesh):
+# jax.set_mesh landed after 0.4; `with mesh:` is the older ambient-mesh
+# context and NamedSharding carries the mesh explicitly everywhere below.
+with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
     specs = model.param_specs()
     state = train_lib.abstract_state(model)
     s_shard = train_lib.state_shardings(specs, rules, mesh)
