@@ -11,9 +11,14 @@ are not paper artifacts and stay hand-written.
 
 With ``--json PATH`` the same rows (plus totals) are written as a
 ``BENCH_*.json`` perf-trajectory file so successive PRs can track the
-sim-backend speedup.
+sim-backend speedup (CI writes ``BENCH_ci.json`` on every push).
+``--experiments name1,name2`` restricts the registry suite (unknown names
+fail with the registered list).  ``--catalog [PATH]`` emits the
+registry-generated experiment-catalog table instead of benchmarking —
+to stdout, or spliced into README.md's catalog markers.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+         [--experiments NAMES] [--catalog [PATH]]
 """
 from __future__ import annotations
 
@@ -31,15 +36,33 @@ def _timed(fn):
     return out, dt
 
 
-# Specs the registry-driven benches run over: the paper's measured pair,
-# keeping the historical perf-trajectory row names stable.  The modeled
-# HBM3/DDR3 generalization targets are pinned by tier-1 tests and the
-# example campaign driver instead — adding them here would suffix the
-# single-spec rows (table6/fig8) and break BENCH_*.json comparability.
+# Specs the registry-driven benches run over by default: the paper's
+# measured pair, keeping the historical perf-trajectory row names stable.
+# The modeled HBM3/DDR3 generalization targets are pinned by tier-1 tests
+# and the example campaign driver instead — adding them here would suffix
+# the single-spec rows (table6/fig8) and break BENCH_*.json comparability.
+# Experiments that set `bench_specs` (the write/duplex family runs on all
+# four registered systems) override this default per experiment.
 BENCH_SPEC_NAMES = ("hbm", "ddr4")
 
 
-def bench_experiments(quick=False):
+def resolve_experiments(names):
+    """Resolve a comma-separated experiment filter against the registry.
+
+    Exits with a clear message (listing every registered name) instead of
+    surfacing a traceback when a name is unknown.
+    """
+    from repro.core.experiments import all_experiments, get_experiment
+
+    if not names:
+        return all_experiments()
+    try:
+        return [get_experiment(n.strip()) for n in names.split(",")]
+    except ValueError as e:
+        raise SystemExit(f"benchmarks.run: {e}")
+
+
+def bench_experiments(quick=False, experiments=None):
     """One row per (registered experiment, applicable spec).
 
     All grid/derive/summary logic lives on the Experiment objects
@@ -49,11 +72,12 @@ def bench_experiments(quick=False):
     row names so BENCH_*.json trajectories stay comparable.
     """
     from repro.core import spec_by_name
-    from repro.core.experiments import all_experiments, run_experiment
+    from repro.core.experiments import run_experiment
 
-    specs = [spec_by_name(n) for n in BENCH_SPEC_NAMES]
     rows = []
-    for exp in all_experiments():
+    for exp in resolve_experiments(experiments):
+        specs = [spec_by_name(n)
+                 for n in (exp.bench_specs or BENCH_SPEC_NAMES)]
         available = [s for s in specs if exp.available_on(s)]
         label = exp.bench_label or exp.name
         for spec in available:
@@ -145,13 +169,46 @@ def bench_oracle_autotune():
              f"seq_eff={eff:.3f};kv_layout={'/'.join(lay.dims)}")]
 
 
+def emit_catalog(target: str) -> None:
+    """Print the registry-generated experiment catalog ("-") or splice it
+    between the catalog markers of a markdown file (e.g. README.md)."""
+    from repro.core.experiments import (CATALOG_BEGIN, CATALOG_END,
+                                        catalog_markdown)
+    md = catalog_markdown()
+    if target == "-":
+        print(md)
+        return
+    with open(target) as f:
+        text = f.read()
+    lo, hi = text.find(CATALOG_BEGIN), text.find(CATALOG_END)
+    if lo < 0 or hi < 0:
+        raise SystemExit(
+            f"--catalog: {target} has no '{CATALOG_BEGIN}' .. "
+            f"'{CATALOG_END}' markers to splice between")
+    with open(target, "w") as f:
+        f.write(text[:lo] + md + text[hi + len(CATALOG_END):])
+    print(f"updated experiment catalog in {target}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a BENCH_*.json perf-trajectory "
                          "file at PATH")
+    ap.add_argument("--experiments", metavar="NAMES", default=None,
+                    help="comma-separated experiment names to benchmark "
+                         "(default: every registered experiment); unknown "
+                         "names fail with the registered list")
+    ap.add_argument("--catalog", metavar="PATH", nargs="?", const="-",
+                    default=None,
+                    help="emit the registry-generated experiment catalog "
+                         "and exit: to stdout, or spliced between the "
+                         "catalog markers of PATH (e.g. README.md)")
     args, _ = ap.parse_known_args()
+    if args.catalog is not None:
+        emit_catalog(args.catalog)
+        return
     q = args.quick
     if args.json:
         # Fail before the (minutes-long, non-quick) run, not at write time.
@@ -166,7 +223,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     suites = [
-        lambda: bench_experiments(q),
+        lambda: bench_experiments(q, args.experiments),
         lambda: bench_sweep_grid(q),
         bench_table3_resources,
         lambda: bench_tpu_rst_kernel(q),

@@ -10,13 +10,15 @@ here with no changes.  `--specs hbm,ddr4,hbm3,ddr3` exercises the paper's
 generalization claim: the same campaign on HBM3 and DDR3.
 
 Run: PYTHONPATH=src python examples/shuhai_campaign.py \
-        [--csv out.csv] [--specs hbm,ddr4] [--backend sim] [--full]
+        [--csv out.csv] [--specs hbm,ddr4] [--experiments table5_total_throughput,duplex_rw_sweep] \
+        [--backend sim] [--full]
 """
 import argparse
 import sys
 
 from repro.core import available_specs, spec_by_name
-from repro.core.experiments import experiments_for, run_experiment
+from repro.core.experiments import (experiments_for, get_experiment,
+                                    run_experiment)
 
 
 def main():
@@ -26,6 +28,9 @@ def main():
                     help="comma-separated memory specs "
                          f"(registered: {','.join(available_specs())}); "
                          "'all' runs every registered spec")
+    ap.add_argument("--experiments", default=None,
+                    help="comma-separated experiment names (default: every "
+                         "registered experiment applicable to the spec)")
     ap.add_argument("--backend", default="sim")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (default: quick grids)")
@@ -33,10 +38,29 @@ def main():
 
     names = (available_specs() if args.specs == "all"
              else args.specs.split(","))
+    # Resolve every requested name up front: an unknown spec or experiment
+    # exits with the registered choices, not a traceback mid-campaign.
+    try:
+        specs = [spec_by_name(n.strip()) for n in names]
+        wanted = (None if args.experiments is None else
+                  [get_experiment(n.strip())
+                   for n in args.experiments.split(",")])
+    except ValueError as e:
+        raise SystemExit(f"shuhai_campaign: {e}")
+
     rows = [("system", "experiment", "key", "value")]
-    for name in names:
-        spec = spec_by_name(name.strip())
-        for exp in experiments_for(spec):
+    for spec in specs:
+        applicable = experiments_for(spec)
+        selected = applicable if wanted is None else wanted
+        for exp in selected:
+            if exp not in applicable:
+                # Explicitly requested but not runnable on this spec (e.g.
+                # a switch suite on DDR): report it like the backend skips
+                # below instead of silently producing no rows.
+                print(f"skipping {exp.name} on {spec.name}: needs an "
+                      f"inter-channel switch this spec does not have",
+                      file=sys.stderr)
+                continue
             try:
                 res = run_experiment(exp, spec, args.backend,
                                      quick=not args.full)

@@ -11,9 +11,11 @@ Public surface:
   MemorySpec, register_spec         — registrable memory systems; HBM/DDR4
                                       (measured) + HBM3/DDR3 (modeled)
   Experiment, run_experiment        — declarative paper-artifact registry
+                                      (+ write/duplex family, catalog)
   ShuhaiCampaign                    — deprecated suite shims over the registry
   Sweep                             — batch-first campaign grids (memoized)
-  SwitchModel, HBMTopology          — Sec. II / VI switch + topology
+  SwitchModel, SwitchTopology       — Sec. II / VI switch + parametric
+                                      fabrics (register_topology)
   MemoryOracle, AccessPattern       — TPU-facing constants + derating
   choose_layout, advise_microbatch  — the technique as a framework feature
 """
@@ -22,7 +24,10 @@ from repro.core.address_mapping import (AddressMapping, get_mapping,
 from repro.core.autotune import (LayoutCandidate, advise_microbatch,
                                  advise_remat, choose_layout, score_layouts)
 from repro.core.bench_host import ShuhaiCampaign, default_campaigns
-from repro.core.channels import DDR4Topology, HBMTopology
+from repro.core.channels import (CrossingLatencyTable, DDR4Topology,
+                                 HBMTopology, SwitchTopology,
+                                 available_topologies, flat_topology,
+                                 register_topology, topology_for)
 from repro.core.engine import (Backend, Engine, available_backends,
                                get_backend, register_backend)
 from repro.core.experiments import (Experiment, all_experiments,
@@ -39,13 +44,16 @@ from repro.core.sweep import Sweep, SweepPoint, SweepResult
 from repro.core.switch import SwitchModel
 from repro.core.timing_model import (LatencyTrace, ThroughputResult,
                                      refresh_interval_estimate,
-                                     serial_read_latencies, throughput)
+                                     serial_latencies, serial_read_latencies,
+                                     throughput)
 
 __all__ = [
     "AddressMapping", "get_mapping", "policies_for", "register_policies",
     "LayoutCandidate", "advise_microbatch", "advise_remat", "choose_layout",
     "score_layouts", "ShuhaiCampaign", "default_campaigns",
-    "DDR4Topology", "HBMTopology",
+    "CrossingLatencyTable", "DDR4Topology", "HBMTopology", "SwitchTopology",
+    "available_topologies", "flat_topology", "register_topology",
+    "topology_for",
     "Backend", "Engine", "available_backends", "get_backend",
     "register_backend",
     "Experiment", "all_experiments", "experiments_for", "get_experiment",
@@ -57,5 +65,6 @@ __all__ = [
     "addresses_jnp", "addresses_np", "block_params",
     "Sweep", "SweepPoint", "SweepResult",
     "SwitchModel", "LatencyTrace", "ThroughputResult",
-    "refresh_interval_estimate", "serial_read_latencies", "throughput",
+    "refresh_interval_estimate", "serial_latencies", "serial_read_latencies",
+    "throughput",
 ]

@@ -7,6 +7,13 @@ golden oracle for the vectorized implementation in
 these loops transaction-for-transaction across the hit/closed/miss, refresh,
 and bank-group-run regimes on both HBM and DDR4.
 
+The write path extends the loops the same way it extends the vectorized
+model (one extra term per site, DESIGN.md §7): `serial_write_latencies`
+adds the write-recovery segment to the page-miss branch, and `throughput`
+takes the direction overheads (per-window turnaround, per-activation tWR)
+from the shared `_direction_overheads` table and applies them inside the
+per-window loops.
+
 Do not optimize this module: its value is being slow and obviously correct.
 """
 from __future__ import annotations
@@ -20,7 +27,8 @@ from repro.core.hwspec import MemorySpec
 from repro.core.params import RSTParams
 from repro.core.timing_model import (_MAX_EXPAND, _REORDER_WINDOW, PAGE_CLOSED,
                                      PAGE_HIT, PAGE_MISS, LatencyTrace,
-                                     ThroughputResult, _expand_addresses)
+                                     ThroughputResult, _direction_overheads,
+                                     _expand_addresses)
 
 
 def serial_read_latencies(
@@ -77,6 +85,66 @@ def serial_read_latencies(
     return LatencyTrace(cycles=lat, states=states, refresh_hits=refresh_hits)
 
 
+def serial_write_latencies(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    switch_enabled: bool = False,
+    switch_extra_cycles: int = 0,
+) -> LatencyTrace:
+    """Reference serial-write loop: the read loop plus the write-recovery
+    segment on the page-miss branch (a miss precharges, and the precharge
+    must wait out the previous write to that bank)."""
+    p.validate(spec)
+    addrs = _expand_addresses(p)
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id(addrs))
+    row = dec["R"]
+
+    base_extra = (spec.switch_penalty if switch_enabled else 0) + (
+        switch_extra_cycles if switch_enabled else 0)
+    wr_cycles = spec.ns_to_cycles(spec.t_wr_ns)
+
+    open_row: Dict[int, int] = {}
+    now_ns = 0.0
+    next_refresh = spec.t_refi_ns
+    lat = np.zeros(len(addrs), dtype=np.float64)
+    states = []
+    refresh_hits = np.zeros(len(addrs), dtype=bool)
+
+    for i in range(len(addrs)):
+        stall_ns = 0.0
+        while now_ns >= next_refresh:
+            open_row.clear()
+            refresh_end = next_refresh + spec.t_rfc_ns
+            if now_ns < refresh_end:
+                stall_ns = refresh_end - now_ns
+                refresh_hits[i] = True
+            next_refresh += spec.t_refi_ns
+
+        b, r = int(bank[i]), int(row[i])
+        if b in open_row and open_row[b] == r:
+            state, cyc = PAGE_HIT, spec.lat_page_hit
+        elif b not in open_row:
+            state, cyc = PAGE_CLOSED, spec.lat_page_closed
+        else:
+            state, cyc = PAGE_MISS, spec.lat_page_miss
+        open_row[b] = r
+
+        # Float-op ordering mirrors the vectorized model exactly:
+        # (integer anchor + switch extra) first, then the tWR segment,
+        # then the refresh stall — the parity tests are bit-exact.
+        recovery = wr_cycles if state == PAGE_MISS else 0.0
+        total_cycles = (float(cyc + base_extra) + recovery
+                        + spec.ns_to_cycles(stall_ns))
+        lat[i] = total_cycles
+        states.append(state)
+        now_ns += spec.cycles_to_ns(total_cycles)
+
+    return LatencyTrace(cycles=lat, states=states, refresh_hits=refresh_hits)
+
+
 def throughput(
     p: RSTParams,
     mapping: AddressMapping,
@@ -84,8 +152,13 @@ def throughput(
     *,
     op: str = "read",
 ) -> ThroughputResult:
-    """Reference throughput model: per-window dict loops."""
-    del op  # symmetric in this model
+    """Reference throughput model: per-window dict loops.
+
+    Direction-aware like the vectorized model: per-window bus turnaround
+    for duplex, per-activation write recovery for write/duplex, zeros for
+    read (so read parity also pins the original pre-write-path loops).
+    """
+    turnaround_cyc, act_extra_cyc = _direction_overheads(spec, op)
     p.validate(spec)
     txn_addrs = _expand_addresses(p)
     cmds_per_txn = max(1, p.b // spec.bus_bytes_per_cycle)
@@ -107,11 +180,14 @@ def throughput(
     run_len = n / (transitions + 1)
     g_cap = max(1.0, _REORDER_WINDOW / (2.0 * run_len))
     issue_cycles = 0.0
+    num_windows = 0
     for lo in range(0, n, _REORDER_WINDOW):
         chunk_bg = bg[lo:lo + _REORDER_WINDOW]
         g = min(float(len(np.unique(chunk_bg))), g_cap)
         rate = min(1.0, g / ccd_l_cyc)           # commands per cycle
         issue_cycles += len(chunk_bg) / rate
+        num_windows += 1
+    issue_cycles += turnaround_cyc * num_windows
 
     # --- bank bound (row activations serialize at tRC per bank) ------------
     open_row: Dict[int, int] = {}
@@ -127,7 +203,8 @@ def throughput(
                 open_row[b_] = r_
                 total_acts += 1
         if acts_in_window:
-            bank_cycles += max(acts_in_window.values()) * t_rc_cyc
+            bank_cycles += max(acts_in_window.values()) * (t_rc_cyc
+                                                           + act_extra_cyc)
 
     # --- four-activate-window bound ----------------------------------------
     faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import timing_model
 from repro.core.address_mapping import AddressMapping, get_mapping
-from repro.core.channels import HBMTopology
+from repro.core.channels import topology_for
 from repro.core.hwspec import HBM, MemorySpec
 from repro.core.latency import LatencyModule
 from repro.core.params import EngineRegisters, RSTParams
@@ -66,7 +66,8 @@ class Backend:
 
     def latency(self, spec: MemorySpec, p: RSTParams,
                 mapping: AddressMapping, *, switch_enabled: bool,
-                switch_extra_cycles: int) -> timing_model.LatencyTrace:
+                switch_extra_cycles: int,
+                op: str = "read") -> timing_model.LatencyTrace:
         raise NotImplementedError(
             f"backend {self.name!r} has no per-transaction timers; use the "
             "sim backend for latency experiments (DESIGN.md §2)")
@@ -83,20 +84,22 @@ class SimBackend(Backend):
         return timing_model.throughput(p, mapping, spec, op=op)
 
     def latency(self, spec, p, mapping, *, switch_enabled,
-                switch_extra_cycles):
-        return timing_model.serial_read_latencies(
-            p, mapping, spec, switch_enabled=switch_enabled,
+                switch_extra_cycles, op="read"):
+        return timing_model.serial_latencies(
+            p, mapping, spec, op=op, switch_enabled=switch_enabled,
             switch_extra_cycles=switch_extra_cycles)
 
 
 class PallasBackend(Backend):
     """Real RST kernels (kernels/), interpret mode off-TPU.
 
-    The kernels traverse a working buffer; the DRAM address-mapping policy
-    is the device's own, so `mapping` is ignored.  Latency raises: real
-    accelerators expose no per-transaction timers — use
-    ops.measure_read_bandwidth with N=1 as a coarse probe, or the sim
-    backend (DESIGN.md §2).
+    All three traffic directions are wired: ``read`` -> rst_read.py,
+    ``write`` -> rst_write.py, ``duplex`` -> both over one buffer
+    (ops.measure_duplex_bandwidth).  The kernels traverse a working buffer;
+    the DRAM address-mapping policy is the device's own, so `mapping` is
+    ignored.  Latency raises: real accelerators expose no per-transaction
+    timers — use ops.measure_read_bandwidth with N=1 as a coarse probe, or
+    the sim backend (DESIGN.md §2).
     """
 
     name = "pallas"
@@ -106,15 +109,21 @@ class PallasBackend(Backend):
     def throughput(self, spec, p, mapping, *, op="read"):
         del spec, mapping  # the device's controller, not the model's
         from repro.kernels import ops  # deferred: keeps sim path jax-free
-        sample = (ops.measure_read_bandwidth(p) if op == "read"
-                  else ops.measure_write_bandwidth(p))
+        measurers = {"read": ops.measure_read_bandwidth,
+                     "write": ops.measure_write_bandwidth,
+                     "duplex": ops.measure_duplex_bandwidth}
+        if op not in measurers:
+            raise ValueError(
+                f"unknown op {op!r} for the pallas backend; valid: "
+                f"{sorted(measurers)}")
+        sample = measurers[op](p)
         return timing_model.ThroughputResult(
             gbps=sample.gbps, bound="measured",
             detail={"seconds": sample.seconds,
                     "bytes": float(sample.bytes_moved)})
 
     def latency(self, spec, p, mapping, *, switch_enabled,
-                switch_extra_cycles):
+                switch_extra_cycles, op="read"):
         raise NotImplementedError(
             "per-transaction latency needs on-chip timers; on TPU use "
             "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
@@ -179,7 +188,10 @@ class Engine:
     def __post_init__(self):
         self.backend_impl: Backend = get_backend(self.backend)
         if self.switch is None and self.spec.has_switch:
-            self.switch = SwitchModel(HBMTopology(self.spec), enabled=True)
+            # Resolve the spec's registered fabric (core/channels.py); an
+            # unregistered or mismatched topology fails here, not deep in
+            # a sweep with wrong distances.
+            self.switch = SwitchModel(topology_for(self.spec), enabled=True)
 
     # -- register plumbing (parameter module side) ---------------------------
     def configure_read(self, p: RSTParams) -> None:
@@ -215,9 +227,11 @@ class Engine:
         p = p.validate(self.spec)
         res = self.backend_impl.throughput(self.spec, p,
                                            self._mapping(policy), op=op)
-        if op == "read" and self.backend_impl.deterministic:
-            # Model backends see the switch through the datapath scale; a
-            # measuring backend's number already includes the real switch.
+        if self.backend_impl.deterministic:
+            # Model backends see the switch through the datapath scale (the
+            # same non-blocking path carries reads, writes and duplex,
+            # Fig. 8); a measuring backend's number already includes the
+            # real switch.
             scale = self.throughput_scale(dst_channel)
             if scale != 1.0:
                 res = dataclasses.replace(res, gbps=res.gbps * scale)
@@ -239,14 +253,14 @@ class Engine:
     def evaluate_latency(self, p: RSTParams, *,
                          policy: Optional[str] = None,
                          dst_channel: Optional[int] = None,
-                         switch_enabled: Optional[bool] = None
-                         ) -> timing_model.LatencyTrace:
+                         switch_enabled: Optional[bool] = None,
+                         op: str = "read") -> timing_model.LatencyTrace:
         """Evaluate one serial-latency point without the register file."""
         p = p.validate(self.spec)
         enabled, extra = self.latency_config(dst_channel, switch_enabled)
         return self.backend_impl.latency(
             self.spec, p, self._mapping(policy),
-            switch_enabled=enabled, switch_extra_cycles=extra)
+            switch_enabled=enabled, switch_extra_cycles=extra, op=op)
 
     # -- read module ---------------------------------------------------------
     def read_throughput(self, policy: Optional[str] = None,
@@ -275,6 +289,26 @@ class Engine:
                          ) -> timing_model.ThroughputResult:
         p = self.registers.write_params.validate(self.spec)
         return self.evaluate_throughput(p, policy=policy, op="write")
+
+    def write_latency(self, policy: Optional[str] = None,
+                      dst_channel: Optional[int] = None,
+                      switch_enabled: Optional[bool] = None
+                      ) -> timing_model.LatencyTrace:
+        """Serial write latencies from the write register (tWR on the
+        page-miss path; switch disabled by default like read_latency)."""
+        p = self.registers.write_params.validate(self.spec)
+        return self.evaluate_latency(p, policy=policy,
+                                     dst_channel=dst_channel,
+                                     switch_enabled=switch_enabled,
+                                     op="write")
+
+    def duplex_throughput(self, policy: Optional[str] = None
+                          ) -> timing_model.ThroughputResult:
+        """Read and write modules driving one channel concurrently; the
+        params come from the read register (both modules share the RST
+        tuple in this measurement, Sec. IV)."""
+        p = self.registers.read_params.validate(self.spec)
+        return self.evaluate_throughput(p, policy=policy, op="duplex")
 
     # -- latency module --------------------------------------------------------
     def capture_latency_list(self, **kwargs) -> np.ndarray:

@@ -3,12 +3,20 @@
 The paper's closing claim is that Shuhai "can be easily generalized to
 other FPGA boards or other generations of memory" — this module is that
 claim as code.  Every artifact of Sec. V/VI is a single :class:`Experiment`
-object: a *plan* that lays an ``(RSTParams × policy × channel)`` grid for
-any :class:`~repro.core.hwspec.MemorySpec`, and a named *derive* reducer
+object: a *plan* that lays an ``(RSTParams × policy × channel × op)`` grid
+for any :class:`~repro.core.hwspec.MemorySpec`, and a named *derive* reducer
 that turns the evaluated grid back into the table/figure quantities.  One
 generic runner, :func:`run_experiment`, lowers any spec onto
 :class:`~repro.core.sweep.Sweep` for batched (memoized, channel-broadcast)
 execution on any registered backend.
+
+Beyond the paper's read-only artifacts, a write-path family (Sec. IV as
+first-class workloads: ``table5_write_throughput``, ``fig7_write_locality``,
+``duplex_rw_sweep``) exercises the write and duplex directions of the
+timing model / pallas kernels on every registered memory system.
+
+:func:`catalog_markdown` renders the whole registry as the README's
+"Experiment catalog" table (``python -m benchmarks.run --catalog``).
 
 The three old entry points are thin views over this registry:
 `ShuhaiCampaign.suite_*` (deprecated shims), `benchmarks/run.py` (CSV/JSON
@@ -29,12 +37,13 @@ Extending the library (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 from repro.core.address_mapping import DEFAULT_POLICY, policies_for
-from repro.core.channels import AXI_PER_MINI_SWITCH, HBMTopology
+from repro.core.channels import topology_for
 from repro.core.hwspec import HBM, MemorySpec
 from repro.core.latency import LatencyModule
 from repro.core.params import RSTParams
@@ -79,6 +88,11 @@ class Experiment:
     # Historical benchmark row prefix, where it differs from `name` (keeps
     # BENCH_*.json perf trajectories comparable across the redesign).
     bench_label: Optional[str] = None
+    # Spec names benchmarks/run.py times this experiment on.  None keeps
+    # the harness default (the paper's measured hbm/ddr4 pair — widening it
+    # would rename historical BENCH_*.json rows); the write/duplex family
+    # opts into all four registered systems explicitly.
+    bench_specs: Optional[Tuple[str, ...]] = None
 
     def available_on(self, spec: MemorySpec) -> bool:
         return spec.has_switch or not self.requires_switch
@@ -336,7 +350,7 @@ register_experiment(Experiment(
 _FIG7_WINDOWS = (8 * 1024, 256 * MB)
 
 
-def _fig7_plan(spec, o):
+def _fig7_plan(spec, o, op="read"):
     # Combinations with S < B or S > W violate the RST constraints
     # (Table I) and are omitted — consumers must guard lookups.
     out = []
@@ -346,7 +360,7 @@ def _fig7_plan(spec, o):
                 if s < b or s > w:
                     continue
                 p = RSTParams(n=o["n"], b=b, s=s, w=w)
-                out.append(((w, b, s), _tp_point(p)))
+                out.append(((w, b, s), _tp_point(p, op=op)))
     return out
 
 
@@ -400,11 +414,12 @@ def _table5_params(spec, o) -> RSTParams:
                      w=0x10000000)
 
 
-def _table5_plan(spec, o):
+def _table5_plan(spec, o, op="read"):
     # All M engines hit their local channels simultaneously; channels are
     # independent (footnote 11), so the sweep evaluates one and broadcasts.
     p = _table5_params(spec, o)
-    return [(c, _tp_point(p, channel=c)) for c in range(spec.num_channels)]
+    return [(c, _tp_point(p, channel=c, op=op))
+            for c in range(spec.num_channels)]
 
 
 def _table5_derive(spec, keyed, o):
@@ -453,7 +468,7 @@ def _table6_plan(spec, o):
 
 
 def _table6_derive(spec, keyed, o):
-    sw = SwitchModel(HBMTopology(spec), enabled=True)
+    sw = SwitchModel(topology_for(spec), enabled=True)
     traces = dict(keyed)
     out = {}
     for ch in range(spec.num_channels):
@@ -480,7 +495,8 @@ register_experiment(Experiment(
         f"spread={r[max(r)]['hit'] - r[0]['hit']}cyc"),
     flatten=lambda spec, r: [
         (f"ch{ch}_hit", f"{r[ch]['hit']}cyc")
-        for ch in range(0, spec.num_channels, AXI_PER_MINI_SWITCH)],
+        for ch in range(0, spec.num_channels,
+                        topology_for(spec).axi_per_switch)],
 ))
 
 
@@ -492,8 +508,9 @@ register_experiment(Experiment(
 def _fig8_plan(spec, o):
     # One AXI channel per mini-switch; the non-blocking switch broadcasts.
     out = []
-    for sw in range(spec.num_channels // AXI_PER_MINI_SWITCH):
-        ch = sw * AXI_PER_MINI_SWITCH
+    step = topology_for(spec).axi_per_switch
+    for sw in range(spec.num_channels // step):
+        ch = sw * step
         for s in o["strides"]:
             p = RSTParams(n=o["n"], b=2 * spec.min_burst, s=s, w=0x1000000)
             out.append(((ch, s),
@@ -530,3 +547,149 @@ register_experiment(Experiment(
         (f"ch{ch}_S{s}", f"{per_s[s]:.2f}")
         for ch, per_s in r.items() for s in per_s],
 ))
+
+
+# ---------------------------------------------------------------------------
+# Write-path experiment family (paper Sec. IV; write-bandwidth results of
+# Choi et al. 2020 and the duplex findings of Li et al. 2020).  These run
+# on every registered memory system and are benchmarked on all four
+# built-ins (bench_specs), not just the measured hbm/ddr4 pair.
+# ---------------------------------------------------------------------------
+
+_ALL_BUILTIN_SPECS = ("hbm", "ddr4", "hbm3", "ddr3")
+
+# The write variants reuse the read experiments' plan/derive/summarize
+# bodies with the traffic direction flipped — one grid definition per
+# artifact, so a grid fix applies to both directions.
+register_experiment(Experiment(
+    name="table5_write_throughput",
+    artifact="Table V (write)",
+    title="Aggregate sequential-write throughput over all channels",
+    plan=functools.partial(_table5_plan, op="write"),
+    derive=_table5_derive,
+    defaults={"n": 8192},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=lambda spec, r: (f"total_gbps={r['total_gbps']:.1f};"
+                               f"per_channel={r['per_channel_gbps']:.2f}"),
+    flatten=lambda spec, r: [("total_gbps", f"{r['total_gbps']:.1f}")],
+))
+
+
+register_experiment(Experiment(
+    name="fig7_write_locality",
+    artifact="Fig. 7 (write)",
+    title="Write-path W=8K (locality) vs W=256M (baseline) throughput",
+    plan=functools.partial(_fig7_plan, op="write"),
+    derive=_fig7_derive,
+    defaults={"strides": (64, 256, 1024, 4096, 16384), "bursts": None,
+              "n": 4096},
+    quick={"n": 1024},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_fig7_summarize,
+    flatten=lambda spec, r: [
+        (f"W{w}_B{b}_S{s}", f"{gbps:.2f}")
+        for w, per_b in r.items()
+        for b, per_s in per_b.items()
+        for s, gbps in per_s.items()],
+))
+
+
+_DUPLEX_OPS = ("read", "write", "duplex")
+
+
+def _duplex_plan(spec, o):
+    # Same RST tuple in all three directions so the derive can report the
+    # duplex penalty as a ratio against pure reads at each stride.  The
+    # true sequential point (S = min burst) is always present — it anchors
+    # the summarize headline.
+    strides = dict.fromkeys(
+        (spec.min_burst,) + tuple(s for s in o["strides"]
+                                  if s >= spec.min_burst))
+    out = []
+    for s in strides:
+        p = RSTParams(n=o["n"], b=spec.min_burst, s=s, w=o["w"])
+        for op in _DUPLEX_OPS:
+            out.append(((op, s), _tp_point(p, op=op)))
+    return out
+
+
+def _duplex_derive(spec, keyed, o):
+    results = {op: {} for op in _DUPLEX_OPS}
+    for (op, s), r in keyed:
+        results[op][s] = r.gbps
+    return results
+
+
+def _duplex_summarize(spec, r):
+    s0 = spec.min_burst           # the sequential anchor the plan pins
+    ratio = r["duplex"][s0] / r["read"][s0] if r["read"][s0] else 0.0
+    return (f"seq_read_gbps={r['read'][s0]:.2f};"
+            f"seq_write_gbps={r['write'][s0]:.2f};"
+            f"seq_duplex_gbps={r['duplex'][s0]:.2f};"
+            f"duplex_ratio={ratio:.2f}")
+
+
+register_experiment(Experiment(
+    name="duplex_rw_sweep",
+    artifact="Sec. IV (duplex)",
+    title="Read vs write vs mixed read/write throughput across strides",
+    plan=_duplex_plan,
+    derive=_duplex_derive,
+    defaults={"strides": (64, 256, 1024, 4096, 16384), "w": 0x10000000,
+              "n": 4096},
+    quick={"strides": (64, 1024, 4096), "n": 1024},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_duplex_summarize,
+    flatten=lambda spec, r: [
+        (f"{op}_S{s}", f"{gbps:.2f}")
+        for op, per_s in r.items() for s, gbps in per_s.items()],
+))
+
+
+# ---------------------------------------------------------------------------
+# Experiment catalog (README.md section; `python -m benchmarks.run --catalog`)
+# ---------------------------------------------------------------------------
+
+CATALOG_BEGIN = "<!-- experiment-catalog:begin -->"
+CATALOG_END = "<!-- experiment-catalog:end -->"
+
+
+def _catalog_backends(planned: List[PlannedPoint]) -> str:
+    """Backends that can execute a plan: serial-latency points need
+    per-transaction timers (sim only, DESIGN.md §2)."""
+    if any(pt.kind == KIND_LATENCY for _, pt in planned):
+        return "sim"
+    return "sim, pallas"
+
+
+def catalog_rows() -> List[Tuple[str, ...]]:
+    """One row per registered experiment, derived live from the registry."""
+    from repro.core.hwspec import available_specs, spec_by_name
+    specs = [spec_by_name(n) for n in available_specs()]
+    rows = []
+    for exp in all_experiments():
+        spec = next(s for s in specs if exp.available_on(s))
+        planned = exp.plan(spec, exp.options())
+        systems = ("switched specs" if exp.requires_switch
+                   else "all registered specs")
+        rows.append((exp.name, exp.artifact,
+                     f"{len(planned)} ({spec.name})",
+                     _catalog_backends(planned), systems))
+    return rows
+
+
+def catalog_markdown() -> str:
+    """The README's "Experiment catalog" table, generated from the registry
+    (``python -m benchmarks.run --catalog``) so it can never drift."""
+    lines = [
+        CATALOG_BEGIN,
+        "<!-- generated by `python -m benchmarks.run --catalog README.md`; "
+        "do not edit by hand -->",
+        "| experiment | paper artifact | grid points | backends | systems |",
+        "|---|---|---|---|---|",
+    ]
+    for name, artifact, grid, backends, systems in catalog_rows():
+        lines.append(
+            f"| `{name}` | {artifact} | {grid} | {backends} | {systems} |")
+    lines.append(CATALOG_END)
+    return "\n".join(lines)

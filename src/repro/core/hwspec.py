@@ -73,6 +73,12 @@ class MemorySpec:
     # Where the numbers come from: "measured" (paper Tables IV-VI) or
     # "modeled" (JEDEC-derived generalization targets, Sec. VII).
     provenance: str = "measured"
+    # --- write-path timing, in nanoseconds --------------------------------
+    # The paper's engine has a full write module (Sec. III-C-1); these feed
+    # the write/duplex direction of the timing model (DESIGN.md §7).
+    t_wr_ns: float = 15.0    # write recovery: last write data -> precharge
+    t_wtr_ns: float = 7.5    # write->read bus turnaround
+    t_rtw_ns: float = 7.5    # read->write bus turnaround
 
     # -- derived ------------------------------------------------------------
     @property
@@ -147,9 +153,13 @@ class MemorySpec:
         if not 0 < self.t_rfc_ns < self.t_refi_ns:
             raise ValueError(f"{self.name}: need 0 < tRFC < tREFI, got "
                              f"tRFC={self.t_rfc_ns} tREFI={self.t_refi_ns}")
-        for field in ("t_rc_ns", "t_ccd_l_ns", "t_ccd_s_ns", "t_faw_ns"):
+        for field in ("t_rc_ns", "t_ccd_l_ns", "t_ccd_s_ns", "t_faw_ns",
+                      "t_wr_ns"):
             if getattr(self, field) <= 0:
                 raise ValueError(f"{self.name}: {field} must be positive")
+        for field in ("t_wtr_ns", "t_rtw_ns"):
+            if getattr(self, field) < 0:
+                raise ValueError(f"{self.name}: {field} must be >= 0")
         if not 0 <= self.sched_overhead < 1:
             raise ValueError(f"{self.name}: sched_overhead must be in [0, 1)")
         if self.provenance not in ("measured", "modeled"):
@@ -185,6 +195,9 @@ HBM = MemorySpec(
     t_faw_ns=8.0,          # HBM2 four-activate window (per pseudo channel)
     sched_overhead=0.012,
     has_switch=True,       # the Sec. II crossbar of mini-switches
+    t_wr_ns=16.0,          # HBM2 write recovery
+    t_wtr_ns=8.0,          # write->read turnaround
+    t_rtw_ns=8.0,          # read->write turnaround
 )
 
 # Alveo U280 DDR4 channel: 300 MHz AXI, 512-bit => 64 B/cycle => 19.2 GB/s
@@ -212,6 +225,9 @@ DDR4 = MemorySpec(
     t_ccd_s_ns=1 / 0.3,
     t_faw_ns=30.0,
     sched_overhead=0.015,
+    t_wr_ns=15.0,          # DDR4 JEDEC tWR
+    t_wtr_ns=7.5,          # tWTR_L
+    t_rtw_ns=7.5,
 )
 
 # HBM3 stack behind the same AXI pseudo-channel fabric (the paper's Sec. VII
@@ -248,6 +264,9 @@ HBM3 = MemorySpec(
     sched_overhead=0.012,
     has_switch=True,
     provenance="modeled",
+    t_wr_ns=14.0,          # HBM3 shortens write recovery slightly
+    t_wtr_ns=6.0,
+    t_rtw_ns=6.0,
 )
 
 # DDR3-1866 SODIMM as on the VCU709-class boards the paper's Sec. VII
@@ -279,6 +298,9 @@ DDR3 = MemorySpec(
     t_faw_ns=27.0,
     sched_overhead=0.015,
     provenance="modeled",
+    t_wr_ns=15.0,          # DDR3-1866 tWR
+    t_wtr_ns=7.5,
+    t_rtw_ns=7.5,
 )
 
 

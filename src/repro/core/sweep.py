@@ -91,10 +91,12 @@ class Sweep:
 
     def add_latency(self, params: RSTParams, *, policy: Optional[str] = None,
                     channel: int = 0, dst_channel: Optional[int] = None,
-                    switch_enabled: Optional[bool] = None) -> "Sweep":
-        """Queue one serial-latency point; returns self for chaining."""
+                    switch_enabled: Optional[bool] = None,
+                    op: str = "read") -> "Sweep":
+        """Queue one serial-latency point (op: "read" or "write"); returns
+        self for chaining."""
         self._points.append(SweepPoint(params, policy, channel, dst_channel,
-                                       "read", KIND_LATENCY, switch_enabled))
+                                       op, KIND_LATENCY, switch_enabled))
         return self
 
     def add_point(self, pt: SweepPoint) -> "Sweep":
@@ -145,11 +147,11 @@ class Sweep:
                 self.spec, p, eng._mapping(pt.policy), op=pt.op)
             self._tp_cache[key] = base
             self.stats.evaluated += 1
-        # Channel broadcast: location only enters through the switch scale.
-        if pt.op == "read":
-            scale = eng.throughput_scale(pt.dst_channel)
-            if scale != 1.0:
-                base = dataclasses.replace(base, gbps=base.gbps * scale)
+        # Channel broadcast: location only enters through the switch scale
+        # (the non-blocking datapath carries every traffic direction).
+        scale = eng.throughput_scale(pt.dst_channel)
+        if scale != 1.0:
+            base = dataclasses.replace(base, gbps=base.gbps * scale)
         return base, cached
 
     def _run_latency(self, pt: SweepPoint) -> Tuple[object, bool]:
@@ -158,15 +160,15 @@ class Sweep:
             self.stats.evaluated += 1
             return eng.evaluate_latency(
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
-                switch_enabled=pt.switch_enabled), False
+                switch_enabled=pt.switch_enabled, op=pt.op), False
         enabled, extra = eng.latency_config(pt.dst_channel, pt.switch_enabled)
-        key = (pt.params, pt.policy, enabled, extra)
+        key = (pt.params, pt.policy, enabled, extra, pt.op)
         trace = self._lat_cache.get(key)
         cached = trace is not None
         if trace is None:
             trace = eng.evaluate_latency(
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
-                switch_enabled=pt.switch_enabled)
+                switch_enabled=pt.switch_enabled, op=pt.op)
             self._lat_cache[key] = trace
             self.stats.evaluated += 1
         return trace, cached

@@ -1,70 +1,62 @@
-"""Model of the switch inside the Xilinx HBM memory controller (Sec. VI).
+"""Model of the inter-channel switch in front of a memory fabric (Sec. VI).
 
-Key measured facts reproduced here:
+The switch behavior is topology-parametric: a :class:`SwitchModel` wraps any
+:class:`~repro.core.channels.SwitchTopology` (the U280 crossbar, the modeled
+HBM3-class fabric, a flat DDR-style fabric — see ``core/channels.py``) and
+reproduces the paper's measured switch facts for it:
 
-* Enabling the switch costs a flat 7 cycles even for local access
-  (footnote 9: Table VI channel 0-3 page hit = 55 = 48 + 7).
-* Crossing mini-switches adds distance-dependent latency, up to 22 cycles
-  (Table VI); all four AXI channels of a mini-switch see identical latency
-  (the mini-switch is fully implemented).
+* Enabling the switch costs a flat per-spec penalty even for local access
+  (footnote 9: Table VI channel 0-3 page hit = 55 = 48 + 7 on the U280).
+* Crossing mini-switches adds distance-dependent latency from the
+  topology's crossing table (Table VI: up to 22 cycles on the U280); all
+  AXI channels of one mini-switch see identical latency (the mini-switch
+  is fully implemented).
 * Throughput is location-independent for a single requester (Fig. 8): the
-  switch is non-blocking on the datapath.
+  switch is non-blocking on the datapath, in both traffic directions.
 * With the switch disabled, an AXI channel can only reach its own pseudo
-  channel (Sec. II) — enforced by :meth:`SwitchModel.check_reachable`.
+  channel (Sec. II) — enforced by :meth:`SwitchModel.check_reachable` on
+  every topology, not just the U280's.
 """
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core.channels import AXI_PER_MINI_SWITCH, HBMTopology
-
-# Extra cycles to reach a target `d` mini-switches away inside one stack,
-# from Table VI rows 0-3 (page hit 55,56,58,60 minus local 55).
-_SAME_STACK_EXTRA = (0, 1, 3, 5)
-# Cross-stack base and per-hop increment, from Table VI rows 4-7
-# (71,73,75,77 minus 55 -> 16,18,20,22 at |d| = 4..7).
-_CROSS_STACK_BASE = 16
-_CROSS_STACK_STEP = 2
+from repro.core.channels import U280_CROSSBAR, SwitchTopology
 
 
 @dataclasses.dataclass(frozen=True)
 class SwitchModel:
-    topology: HBMTopology = HBMTopology()
+    topology: SwitchTopology = U280_CROSSBAR
     enabled: bool = True
 
     def check_reachable(self, axi_channel: int, pseudo_channel: int) -> None:
         if self.enabled:
+            self.topology._check(axi_channel)
+            self.topology._check(pseudo_channel)
             return
         if self.topology.local_pseudo_channel(axi_channel) != pseudo_channel:
             raise PermissionError(
                 f"switch disabled: AXI channel {axi_channel} can only access "
-                f"pseudo channel {axi_channel}, not {pseudo_channel}")
+                f"pseudo channel {axi_channel}, not {pseudo_channel} "
+                f"(topology {self.topology.name})")
 
     def distance_extra_cycles(self, axi_channel: int, pseudo_channel: int) -> int:
-        """Distance-dependent extra latency (on top of the flat 7-cycle
-        switch penalty), per Table VI."""
+        """Distance-dependent extra latency (on top of the flat switch
+        penalty), per the topology's crossing table (Table VI style)."""
         self.check_reachable(axi_channel, pseudo_channel)
         if not self.enabled:
             return 0
-        src = self.topology.mini_switch_of(axi_channel)
-        dst = pseudo_channel // AXI_PER_MINI_SWITCH
-        d = abs(src - dst)
-        same_stack = (self.topology.stack_of(axi_channel)
-                      == self.topology.stack_of(pseudo_channel))
-        if same_stack:
-            return _SAME_STACK_EXTRA[d]
-        # Extrapolation beyond the measured dst=0 column: crossing stacks
-        # dominates; each extra hop adds the measured 2-cycle step.
-        return _CROSS_STACK_BASE + _CROSS_STACK_STEP * max(0, d - 4)
+        return self.topology.crossing_extra_cycles(axi_channel, pseudo_channel)
 
     def total_extra_cycles(self, axi_channel: int, pseudo_channel: int) -> int:
-        """Flat penalty + distance; what serial_read_latencies consumes."""
+        """Flat penalty + distance; what serial latency runs consume."""
         if not self.enabled:
             self.check_reachable(axi_channel, pseudo_channel)
             return 0
         return self.distance_extra_cycles(axi_channel, pseudo_channel)
 
     def throughput_scale(self, axi_channel: int, pseudo_channel: int) -> float:
-        """Fig. 8: single-requester throughput does not depend on location."""
+        """Fig. 8: single-requester throughput does not depend on location
+        (reads and writes alike — the datapath is non-blocking)."""
         self.check_reachable(axi_channel, pseudo_channel)
         return 1.0

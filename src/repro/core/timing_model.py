@@ -1,12 +1,17 @@
 """Event-level DRAM timing model for the `sim` backend (vectorized).
 
 Two entry points, mirroring the two measurement modes of the paper's engine
-module (Sec. III-C-1):
+module (Sec. III-C-1), both *direction-aware* — the engine has independent
+read and write modules, and Sec. IV treats writes and mixed read/write
+traffic as first-class workloads:
 
-* :func:`serial_read_latencies` — the read module's latency mode: exactly one
-  outstanding transaction; the (i+1)-th read is issued only after the i-th
-  returns.  Reproduces Fig. 4 (refresh spikes), Fig. 5 / Table IV (page
-  hit / closed / miss), Table VI (switch distance).
+* :func:`serial_latencies` — the latency mode: exactly one outstanding
+  transaction; the (i+1)-th is issued only after the i-th returns.
+  Reproduces Fig. 4 (refresh spikes), Fig. 5 / Table IV (page hit / closed /
+  miss), Table VI (switch distance).  ``op="write"`` adds the write-recovery
+  segment (tWR) to the page-miss path: the precharge a miss requires must
+  wait out the previous write's recovery.  :func:`serial_read_latencies`
+  remains the read-only alias.
 
 * :func:`throughput` — the saturating mode: the engine always asserts the
   address-valid signals, the controller reorders inside a window.  Modeled as
@@ -18,10 +23,19 @@ module (Sec. III-C-1):
                       groups) — this is what makes bank-group interleaving
                       (paper Sec. V-D) and the LSB "BG" bit of the default
                       RGBCG policy matter,
-    - bank:           row activations serialize at tRC per bank,
+    - bank:           row activations serialize at tRC per bank; write
+                      traffic extends each activation by tWR (write
+                      recovery before precharge), duplex by tWR/2,
+    - turnaround:     duplex traffic reverses the bus direction; the
+                      modeled controller groups reads and writes within a
+                      reorder window, paying one read->write plus one
+                      write->read turnaround (tRTW + tWTR) per window,
     - tFAW:           at most 4 activations per tFAW window,
     - refresh:        (1 - tRFC/tREFI) de-rating,
     - scheduler:      calibrated constant inefficiency.
+
+  ``op="read"`` reproduces the pre-write-path numbers bit-for-bit (the
+  direction overheads are exactly zero).
 
 Both functions are NumPy array code end to end (DESIGN.md §3):
 
@@ -64,6 +78,36 @@ _STATE_NAMES = np.array((PAGE_HIT, PAGE_CLOSED, PAGE_MISS))
 _MAX_EXPAND = 1 << 16
 # Reorder-window size (transactions) of the modeled controller.
 _REORDER_WINDOW = 64
+
+# Traffic directions of the engine module: its read module, its write
+# module, or both running concurrently over one channel (Sec. III-C-1).
+OPS = ("read", "write", "duplex")
+# Serial latency is one-transaction-at-a-time; a duplex direction has no
+# meaning there (there is never a second in-flight transaction to turn the
+# bus around for).
+SERIAL_OPS = ("read", "write")
+
+
+def _direction_overheads(spec: MemorySpec, op: str) -> Tuple[float, float]:
+    """(per-reorder-window turnaround cycles, per-activation extra cycles)
+    for one traffic direction.
+
+    Reads: zero on both axes — the read path is bit-identical to the
+    pre-write-path model.  Writes: each row activation is extended by the
+    write recovery tWR (the precharge closing the row must wait it out).
+    Duplex: half the activations are writes (tWR/2 on average), and the
+    modeled controller groups reads and writes inside each reorder window,
+    paying one read->write plus one write->read bus turnaround per window.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; valid: {OPS}")
+    if op == "read":
+        return 0.0, 0.0
+    wr_cyc = spec.ns_to_cycles(spec.t_wr_ns)
+    if op == "write":
+        return 0.0, wr_cyc
+    turnaround = spec.ns_to_cycles(spec.t_rtw_ns + spec.t_wtr_ns)
+    return turnaround, 0.5 * wr_cyc
 
 
 @dataclasses.dataclass
@@ -125,15 +169,24 @@ def _prev_same_bank(bank: np.ndarray) -> np.ndarray:
     return prev
 
 
-def serial_read_latencies(
+def serial_latencies(
     p: RSTParams,
     mapping: AddressMapping,
     spec: MemorySpec,
     *,
+    op: str = "read",
     switch_enabled: bool = False,
     switch_extra_cycles: int = 0,
 ) -> LatencyTrace:
-    """Simulate N serial reads and return per-transaction latency cycles.
+    """Simulate N serial transactions and return per-transaction latencies.
+
+    `op` selects the engine module: ``"read"`` (the paper's measured mode)
+    or ``"write"``, where a page miss additionally pays the write-recovery
+    segment tWR — the precharge the miss requires must wait out the
+    previous write to that bank.  Page-hit and page-closed writes post at
+    the read anchors (no precharge on their path).  ``"duplex"`` is
+    rejected: serial mode never has a second in-flight transaction to turn
+    the bus around for.
 
     `switch_extra_cycles` is the distance-dependent addition from
     core/switch.py (Table VI); `switch_enabled` alone adds the flat
@@ -146,6 +199,10 @@ def serial_read_latencies(
     hit/miss by row comparison.  Each outer iteration therefore commits one
     whole epoch (~tREFI / page-hit-latency transactions) at once.
     """
+    if op not in SERIAL_OPS:
+        raise ValueError(
+            f"serial latency measures one outstanding transaction; op must "
+            f"be one of {SERIAL_OPS}, got {op!r}")
     p.validate(spec)
     addrs = _expand_addresses(p)
     dec = mapping.decode(addrs)
@@ -161,9 +218,12 @@ def serial_read_latencies(
     has_prev = np.nonzero(prev_idx >= 0)[0]
     rowmatch[has_prev] = row[has_prev] == row[prev_idx[has_prev]]
 
+    # Write misses carry the write-recovery segment; hit/closed do not
+    # precharge, so the read anchors apply unchanged (DESIGN.md §7).
+    wr_extra = spec.ns_to_cycles(spec.t_wr_ns) if op == "write" else 0.0
     c_hit = float(spec.lat_page_hit + base_extra)
     c_closed = float(spec.lat_page_closed + base_extra)
-    c_miss = float(spec.lat_page_miss + base_extra)
+    c_miss = float(spec.lat_page_miss + base_extra) + wr_extra
     # No epoch can span more transactions than tREFI / min-latency; slicing
     # to this cap keeps total work O(N) instead of O(N * epochs).
     epoch_cap = int(spec.t_refi_ns / spec.cycles_to_ns(spec.lat_page_hit)) + 2
@@ -217,6 +277,21 @@ def serial_read_latencies(
                         refresh_hits=refresh_hits)
 
 
+def serial_read_latencies(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    switch_enabled: bool = False,
+    switch_extra_cycles: int = 0,
+) -> LatencyTrace:
+    """Read-module alias of :func:`serial_latencies` (the paper's measured
+    latency mode)."""
+    return serial_latencies(p, mapping, spec, op="read",
+                            switch_enabled=switch_enabled,
+                            switch_extra_cycles=switch_extra_cycles)
+
+
 @dataclasses.dataclass(frozen=True)
 class ThroughputResult:
     gbps: float
@@ -236,11 +311,17 @@ def throughput(
 ) -> ThroughputResult:
     """Steady-state achievable throughput of one engine on one channel.
 
-    Reads and writes share the model: the paper's write module saturates
-    WA/WD the same way the read module saturates RA (Sec. III-C-1), and the
-    measured asymmetry is small compared to policy/stride effects.
+    `op` is the traffic direction: ``"read"``, ``"write"``, or ``"duplex"``
+    (the read and write modules running concurrently, Sec. III-C-1).  The
+    command-issue machinery is shared — the write module saturates WA/WD
+    the same way the read module saturates RA — but writes extend each row
+    activation by the write recovery tWR, and duplex traffic additionally
+    pays the read<->write bus turnaround (tRTW + tWTR) once per reorder
+    window.  Sequential (bus-bound) streams therefore measure direction-
+    symmetric while activation-heavy streams lose bandwidth on the write
+    path, matching the write results of Choi et al. 2020 / Li et al. 2020.
     """
-    del op  # symmetric in this model
+    turnaround_cyc, act_extra_cyc = _direction_overheads(spec, op)
     p.validate(spec)
     cmds_per_txn = max(1, p.b // spec.bus_bytes_per_cycle)
     # Expand bursts into column commands: a B-byte burst is B/bus_bytes
@@ -284,6 +365,9 @@ def throughput(
     if rem:
         g = min(float(len(np.unique(bg[nw_full * win:]))), g_cap)
         issue_cycles += rem / min(1.0, g / ccd_l_cyc)
+    # Duplex: one read->write plus one write->read turnaround per window.
+    nw_total = nw_full + (1 if rem else 0)
+    issue_cycles += turnaround_cyc * nw_total
 
     # --- bank bound (row activations serialize at tRC per bank) ------------
     # An activation happens whenever a bank is accessed with a different row
@@ -304,11 +388,12 @@ def throughput(
     bank_cycles = 0.0
     if total_acts:
         act_idx = np.nonzero(act)[0]
-        nw_total = nw_full + (1 if rem else 0)
         key = (act_idx // win) * spec.num_banks + bank[act_idx]
         counts = np.bincount(key, minlength=nw_total * spec.num_banks)
         per_window_max = counts.reshape(nw_total, spec.num_banks).max(axis=1)
-        bank_cycles = float(per_window_max.sum()) * t_rc_cyc
+        # Writes hold the row open tWR longer before the next activation's
+        # precharge may start (duplex: half the activations are writes).
+        bank_cycles = float(per_window_max.sum()) * (t_rc_cyc + act_extra_cyc)
 
     # --- four-activate-window bound ----------------------------------------
     faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0

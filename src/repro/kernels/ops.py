@@ -129,3 +129,35 @@ def measure_write_bandwidth(p: RSTParams, *, dtype=jnp.float32,
     dt = time.perf_counter() - t0
     return BandwidthSample(bytes_moved=min(p.n, grid) * p.b, seconds=dt,
                            checksum=np.asarray(out[:8]))
+
+
+def measure_duplex_bandwidth(p: RSTParams, *, dtype=jnp.float32,
+                             burst_rows: int = SUBLANE,
+                             grid_txns: int | None = None,
+                             interpret: bool = True) -> BandwidthSample:
+    """Mixed read/write traffic: both RST engines traverse one working
+    buffer (the paper's duplex mode, Sec. III-C-1 — read and write modules
+    run concurrently on one channel).  Off-TPU the two kernels run back to
+    back; bytes moved counts both directions (2·N·B over the wall time).
+    """
+    grid = grid_txns or default_grid(p.n, interpret)
+    operand = params_operand(p, dtype, burst_rows, grid)
+    buf = make_working_buffer(p, dtype)
+    # Warm-up compiles both engines (rst_write donates, so warm it on a
+    # throwaway copy and keep `buf` alive for the timed run).
+    chk = rst_read(operand, buf, grid_txns=grid, burst_rows=burst_rows,
+                   interpret=interpret)
+    chk.block_until_ready()
+    warm = rst_write(operand, jnp.array(buf), grid_txns=grid,
+                     burst_rows=burst_rows, interpret=interpret)
+    warm.block_until_ready()
+    t0 = time.perf_counter()
+    chk = rst_read(operand, buf, grid_txns=grid, burst_rows=burst_rows,
+                   interpret=interpret)
+    chk.block_until_ready()   # the write donates buf; finish reading first
+    out = rst_write(operand, buf, grid_txns=grid, burst_rows=burst_rows,
+                    interpret=interpret)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return BandwidthSample(bytes_moved=2 * min(p.n, grid) * p.b, seconds=dt,
+                           checksum=np.asarray(chk))

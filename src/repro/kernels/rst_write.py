@@ -1,5 +1,11 @@
 """RST write engine as a Pallas TPU kernel (paper Sec. III-C-1, write module).
 
+This is the pallas backend's write direction: `ops.measure_write_bandwidth`
+wraps it for ``op="write"`` sweep points, and `ops.measure_duplex_bandwidth`
+pairs it with the read engine for mixed read/write traffic — the same write
+and duplex workloads the sim backend models with tWR / turnaround segments
+(core/timing_model.py, DESIGN.md §7).
+
 One grid step = one write transaction: fill the tile at block index
 ``base + (i * stride) % wset`` with a value derived from i.  The working
 buffer is donated (input/output aliased) so tiles the traversal never

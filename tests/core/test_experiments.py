@@ -1,4 +1,6 @@
 """Experiment registry, backend/spec registries, and shim equivalence."""
+import os
+
 import numpy as np
 import pytest
 
@@ -19,6 +21,11 @@ PAPER_ARTIFACTS = {
     "fig7_locality", "table5_total_throughput", "table6_switch_latency",
     "fig8_switch_throughput",
 }
+# Write/duplex family (Sec. IV as first-class workloads); runs on every
+# registered spec and is benchmarked on all four built-ins.
+WRITE_FAMILY = {
+    "table5_write_throughput", "fig7_write_locality", "duplex_rw_sweep",
+}
 
 
 # ---------------------------------------------------------------------------
@@ -28,7 +35,8 @@ PAPER_ARTIFACTS = {
 
 class TestRegistryCompleteness:
     def test_every_paper_artifact_has_a_spec(self):
-        assert {e.name for e in all_experiments()} >= PAPER_ARTIFACTS
+        assert {e.name for e in all_experiments()} >= \
+            PAPER_ARTIFACTS | WRITE_FAMILY
 
     def test_artifact_labels_cover_sec5_and_sec6(self):
         artifacts = {e.artifact for e in all_experiments()}
@@ -300,14 +308,84 @@ class TestFourSpecCampaign:
                 <= spec.peak_total_gbps
 
     def test_hbm3_switch_distance_spread_matches_topology(self):
+        from repro.core import topology_for
         res = run_experiment("table6_switch_latency", HBM3)
-        assert res[31]["hit"] - res[0]["hit"] == 22   # same crossbar model
+        want = topology_for(HBM3).crossing_extra_cycles(31, 0)
+        assert res[31]["hit"] - res[0]["hit"] == want == 19  # 2x8 fabric
 
     def test_hbm_numbers_unchanged_by_redesign(self):
         res = run_experiment("table5_total_throughput", HBM)
         assert res["total_gbps"] == pytest.approx(425.0, rel=0.02)
         res = run_experiment("table5_total_throughput", DDR4)
         assert res["total_gbps"] == pytest.approx(36.0, rel=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Write/duplex experiment family (Sec. IV workloads)
+# ---------------------------------------------------------------------------
+
+
+class TestWriteFamily:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    def test_write_throughput_bounded_by_read(self, spec):
+        rd = run_experiment("table5_total_throughput", spec)
+        wr = run_experiment("table5_write_throughput", spec)
+        assert wr["num_channels"] == spec.num_channels
+        assert 0 < wr["total_gbps"] <= rd["total_gbps"] + 1e-9
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    def test_duplex_below_read_at_every_stride(self, spec):
+        res = run_experiment("duplex_rw_sweep", spec, quick=True)
+        assert set(res) == {"read", "write", "duplex"}
+        for s, rd_gbps in res["read"].items():
+            assert 0 < res["duplex"][s] < rd_gbps        # turnaround cost
+            assert res["write"][s] <= rd_gbps + 1e-9     # tWR cost
+
+    def test_write_locality_still_helps(self):
+        # The Fig. 7 effect survives on the write path: W=8K beats W=256M
+        # at the large-stride operating point.
+        res = run_experiment("fig7_write_locality", HBM, quick=True)
+        b, s = HBM.min_burst, 4096
+        assert res[8 * 1024][b][s] > res[256 * 1024**2][b][s]
+
+    def test_family_benchmarked_on_all_four_systems(self):
+        for name in ("table5_write_throughput", "fig7_write_locality",
+                     "duplex_rw_sweep"):
+            exp = get_experiment(name)
+            assert exp.bench_specs == ("hbm", "ddr4", "hbm3", "ddr3")
+            for spec in ALL_SPECS:
+                assert exp.available_on(spec)
+
+
+# ---------------------------------------------------------------------------
+# Experiment catalog (README section, `benchmarks.run --catalog`)
+# ---------------------------------------------------------------------------
+
+
+class TestCatalog:
+    def test_catalog_covers_registry(self):
+        from repro.core.experiments import catalog_markdown
+        md = catalog_markdown()
+        for exp in all_experiments():
+            assert f"`{exp.name}`" in md
+            assert exp.artifact in md
+
+    def test_readme_catalog_in_sync(self):
+        # The committed README table must be exactly what the registry
+        # generates — `python -m benchmarks.run --catalog README.md`
+        # refreshes it (CI enforces the same invariant).
+        from repro.core.experiments import catalog_markdown
+        readme_path = os.path.join(os.path.dirname(__file__),
+                                   "..", "..", "README.md")
+        with open(readme_path) as f:
+            readme = f.read()
+        assert catalog_markdown() in readme
+
+    def test_latency_experiments_are_sim_only_in_catalog(self):
+        from repro.core.experiments import catalog_rows
+        by_name = {r[0]: r for r in catalog_rows()}
+        assert by_name["fig4_refresh"][3] == "sim"
+        assert by_name["table5_write_throughput"][3] == "sim, pallas"
 
 
 # ---------------------------------------------------------------------------

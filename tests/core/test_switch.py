@@ -1,8 +1,11 @@
-"""Switch / mini-switch model vs paper Sec. VI (Tables VI, Fig. 8)."""
+"""Switch / mini-switch model vs paper Sec. VI (Tables VI, Fig. 8), plus
+the parametric SwitchTopology fabrics (DESIGN.md §7)."""
 import pytest
 
-from repro.core import (HBM, Engine, HBMTopology, LatencyModule, RSTParams,
-                        ShuhaiCampaign, SwitchModel)
+from repro.core import (DDR3, DDR4, HBM, HBM3, CrossingLatencyTable, Engine,
+                        HBMTopology, LatencyModule, RSTParams, ShuhaiCampaign,
+                        SwitchModel, SwitchTopology, flat_topology,
+                        register_topology, topology_for)
 
 # Table VI, page-hit column: AXI channel -> cycles to HBM channel 0.
 TABLE_VI_HIT = {0: 55, 4: 56, 8: 58, 12: 60, 16: 71, 20: 73, 24: 75, 28: 77}
@@ -74,6 +77,81 @@ class TestFig8:
         for s in (64, 1024):
             vals = [tp[ch][s] for ch in tp]
             assert max(vals) == pytest.approx(min(vals), rel=1e-6)
+
+
+class TestParametricTopology:
+    """SwitchTopology generalizes the U280-only model (DESIGN.md §7)."""
+
+    def test_registered_fabrics_match_their_specs(self):
+        for spec in (HBM, DDR4, HBM3, DDR3):
+            topo = topology_for(spec)
+            assert topo.num_axi_channels == spec.num_channels
+
+    def test_one_stack_fabric(self):
+        # A single-stack fabric never pays the cross-stack ladder.
+        t = SwitchTopology(
+            name="one_stack", num_stacks=1, mini_switches=4,
+            axi_per_switch=2,
+            crossing=CrossingLatencyTable(same_stack=(0, 2, 4, 6)))
+        assert t.switches_per_stack == 4
+        assert t.num_axi_channels == 8
+        assert all(t.stack_of(ch) == 0 for ch in range(8))
+        assert t.crossing_extra_cycles(0, 7) == 6     # d=3, same stack
+        assert t.crossing_extra_cycles(7, 6) == 0     # same mini-switch
+
+    def test_flat_fabric_has_no_crossing_latency(self):
+        t = flat_topology("flat_test", 4)
+        for src in range(4):
+            for dst in range(4):
+                assert t.crossing_extra_cycles(src, dst) == 0
+
+    def test_hbm3_fabric_table6_ladder(self):
+        # The modeled HBM3 fabric: 2 stacks x 8 switches x 2 AXI channels.
+        t = topology_for(HBM3)
+        assert (t.num_stacks, t.mini_switches, t.axi_per_switch) == (2, 16, 2)
+        assert t.switches_per_stack == 8
+        extras = [t.crossing_extra_cycles(ch, 0)
+                  for ch in range(0, 32, t.axi_per_switch)]
+        assert extras == sorted(extras)               # monotone in distance
+        assert extras[0] == 0
+        assert max(extras) == 19                      # 12 + 1 * 7
+        # Identical within a mini-switch (fully-implemented switch).
+        assert t.crossing_extra_cycles(10, 0) == t.crossing_extra_cycles(11, 0)
+
+    def test_switch_disabled_blocks_on_non_u280_topologies(self):
+        # The Sec. II access restriction holds on every fabric, not just
+        # the U280's crossbar.
+        for topo in (topology_for(HBM3), flat_topology("flat4", 4)):
+            sw = SwitchModel(topo, enabled=False)
+            sw.check_reachable(1, 1)
+            with pytest.raises(PermissionError):
+                sw.check_reachable(1, 2)
+            assert sw.total_extra_cycles(1, 1) == 0
+
+    def test_invalid_fabrics_fail_at_construction(self):
+        ok = CrossingLatencyTable(same_stack=(0, 1))
+        with pytest.raises(ValueError, match="divide"):
+            SwitchTopology(name="bad", num_stacks=3, mini_switches=4,
+                           axi_per_switch=2, crossing=ok)
+        with pytest.raises(ValueError, match="covers"):
+            SwitchTopology(name="bad", num_stacks=1, mini_switches=4,
+                           axi_per_switch=2, crossing=ok)
+        with pytest.raises(ValueError, match="monotone"):
+            CrossingLatencyTable(same_stack=(0, 5, 3))
+        with pytest.raises(ValueError, match="local mini-switch"):
+            CrossingLatencyTable(same_stack=(2, 3))
+
+    def test_register_topology_refuses_silent_replace(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_topology("hbm", flat_topology("imposter", 32))
+
+    def test_unknown_or_mismatched_topology_fails_loudly(self):
+        import dataclasses
+        with pytest.raises(ValueError, match="topology"):
+            topology_for(dataclasses.replace(HBM, name="hbm9"))
+        with pytest.raises(ValueError, match="topology"):
+            topology_for(dataclasses.replace(HBM, name="hbm",
+                                             num_channels=64))
 
 
 class TestLatencyDisabledVsEnabled:

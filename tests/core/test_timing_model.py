@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core import (DDR4, HBM, LatencyModule, RSTParams, get_mapping,
-                        refresh_interval_estimate, serial_read_latencies,
-                        throughput)
+                        refresh_interval_estimate, serial_latencies,
+                        serial_read_latencies, throughput)
 
 MB = 1024**2
 
@@ -182,6 +182,34 @@ class TestLocality:
         assert local == pytest.approx(base, rel=0.05)
 
 
+# ------------------------------------------------------------- write path
+class TestSerialWriteLatency:
+    def test_write_miss_carries_write_recovery(self):
+        # Compare transactions before the first refresh (the longer write
+        # misses shift every later refresh stall).
+        p = RSTParams(n=1024, b=32, s=128 * 1024, w=0x1000000)
+        m = get_mapping(HBM)
+        rd = serial_read_latencies(p, m, HBM)
+        wr = serial_latencies(p, m, HBM, op="write")
+        wr_cyc = HBM.ns_to_cycles(HBM.t_wr_ns)
+        for i in range(16):
+            assert rd.states[i] == wr.states[i]
+            if rd.states[i] == "miss":
+                assert wr.cycles[i] == pytest.approx(rd.cycles[i] + wr_cyc)
+            else:
+                assert wr.cycles[i] == rd.cycles[i]
+
+    def test_write_hits_match_read_anchors(self):
+        # Page hits never precharge: the write ladder starts at the read
+        # anchors (only the miss path carries tWR).
+        p = RSTParams(n=512, b=32, s=128, w=0x1000000)
+        wr = serial_latencies(p, get_mapping(HBM), HBM, op="write")
+        cap = LatencyModule().capture(wr)
+        cats = LatencyModule.category_latencies(cap, HBM)
+        assert cats["hit"] == HBM.lat_page_hit
+        assert cats["closed"] == HBM.lat_page_closed
+
+
 # ------------------------------------------------------------- misc
 class TestThroughputModel:
     def test_never_exceeds_wire_rate(self):
@@ -198,8 +226,36 @@ class TestThroughputModel:
         r = throughput(p, get_mapping(HBM, "BRC"), HBM)
         assert r.bound == "bank"   # row-thrashing a single bank
 
-    def test_write_read_symmetric(self):
+    def test_sequential_write_read_symmetric(self):
+        # Bus-bound sequential streams are direction-symmetric: tWR only
+        # extends row activations, and sequential traffic barely activates.
         p = RSTParams(n=2048, b=32, s=32, w=0x10000000)
         r = throughput(p, get_mapping(HBM), HBM, op="read")
         w = throughput(p, get_mapping(HBM), HBM, op="write")
         assert r.gbps == w.gbps
+
+    def test_write_recovery_penalizes_activation_heavy_streams(self):
+        # Row-thrashing traffic pays tWR per activation on the write path
+        # (Choi et al. 2020: write bandwidth drops for strided access).
+        p = RSTParams(n=2048, b=32, s=1024, w=0x10000000)
+        m = get_mapping(HBM, "BRC")            # bank-bound stream
+        r = throughput(p, m, HBM, op="read")
+        w = throughput(p, m, HBM, op="write")
+        assert w.bound == "bank"
+        assert w.gbps < r.gbps
+
+    def test_duplex_pays_turnaround(self):
+        # Mixed read/write traffic loses bandwidth to bus turnaround even
+        # when sequential (Li et al. 2020).
+        p = RSTParams(n=2048, b=32, s=32, w=0x10000000)
+        m = get_mapping(HBM)
+        r = throughput(p, m, HBM, op="read")
+        d = throughput(p, m, HBM, op="duplex")
+        assert d.gbps < r.gbps
+        # ... but sits between the halted extreme and pure reads.
+        assert d.gbps > 0.5 * r.gbps
+
+    def test_unknown_op_rejected(self):
+        p = RSTParams(n=64, b=32, s=32, w=0x10000)
+        with pytest.raises(ValueError, match="unknown op"):
+            throughput(p, get_mapping(HBM), HBM, op="erase")

@@ -62,6 +62,27 @@ def test_serial_read_latencies_parity(spec, policy, kw, skw):
     np.testing.assert_array_equal(got.refresh_hits, want.refresh_hits)
 
 
+@pytest.mark.parametrize("spec,policy,kw,skw",
+                         [c[1:] for c in SERIAL_CASES],
+                         ids=[c[0] for c in SERIAL_CASES])
+def test_serial_write_latencies_parity(spec, policy, kw, skw):
+    """The write direction (tWR on the page-miss path) is bit-exact
+    against its own loop oracle across the same regimes as reads."""
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    got = vec.serial_latencies(p, m, spec, op="write", **skw)
+    want = ref.serial_write_latencies(p, m, spec, **skw)
+    np.testing.assert_array_equal(got.cycles, want.cycles)
+    assert got.states == want.states
+    np.testing.assert_array_equal(got.refresh_hits, want.refresh_hits)
+
+
+def test_serial_duplex_rejected():
+    p = RSTParams(n=64, b=32, s=128, w=0x100000)
+    with pytest.raises(ValueError, match="duplex"):
+        vec.serial_latencies(p, get_mapping(HBM), HBM, op="duplex")
+
+
 THROUGHPUT_CASES = [
     # (id, spec, policy, params kwargs)
     ("hbm_seq_table5", HBM, None, dict(n=8192, b=32, s=32, w=0x10000000)),
@@ -79,14 +100,15 @@ THROUGHPUT_CASES = [
 ]
 
 
+@pytest.mark.parametrize("op", ["read", "write", "duplex"])
 @pytest.mark.parametrize("spec,policy,kw",
                          [c[1:] for c in THROUGHPUT_CASES],
                          ids=[c[0] for c in THROUGHPUT_CASES])
-def test_throughput_parity(spec, policy, kw):
+def test_throughput_parity(spec, policy, kw, op):
     p = RSTParams(**kw)
     m = get_mapping(spec, policy)
-    got = vec.throughput(p, m, spec)
-    want = ref.throughput(p, m, spec)
+    got = vec.throughput(p, m, spec, op=op)
+    want = ref.throughput(p, m, spec, op=op)
     assert got.gbps == pytest.approx(want.gbps, rel=1e-9)
     assert got.bound == want.bound
     assert got.detail["total_acts"] == want.detail["total_acts"]
@@ -120,5 +142,6 @@ def test_reference_module_is_loop_based():
     """Guard against "optimizing" the golden reference: it must keep the
     per-transaction loop the parity tests derive their authority from."""
     import inspect
-    src = inspect.getsource(ref.serial_read_latencies)
-    assert "for i in range(len(addrs))" in src
+    for fn in (ref.serial_read_latencies, ref.serial_write_latencies):
+        src = inspect.getsource(fn)
+        assert "for i in range(len(addrs))" in src

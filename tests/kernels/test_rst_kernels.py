@@ -165,6 +165,29 @@ class TestOpsWrappers:
         s = ops.measure_write_bandwidth(p, dtype=jnp.float32)
         assert s.bytes_moved == 8 * 4096
 
+    def test_measure_duplex_bandwidth(self):
+        # Both directions over one buffer: bytes count read + write, and
+        # the checksum is the read engine's (taken before the write
+        # mutates the buffer).
+        p = RSTParams(n=8, b=4096, s=4096, w=16 * 4096)
+        s = ops.measure_duplex_bandwidth(p, dtype=jnp.float32)
+        assert s.bytes_moved == 2 * 8 * 4096
+        ref = rst_read_checksum_ref(
+            np.asarray(ops.make_working_buffer(p, jnp.float32)), 1, 16, 0,
+            8, 8)
+        np.testing.assert_allclose(s.checksum, ref, rtol=1e-5)
+
+    def test_duplex_wired_into_pallas_backend(self):
+        from repro.core import HBM, get_backend, get_mapping
+        p = RSTParams(n=8, b=4096, s=4096, w=16 * 4096)
+        res = get_backend("pallas").throughput(HBM, p, get_mapping(HBM),
+                                               op="duplex")
+        assert res.bound == "measured"
+        assert res.detail["bytes"] == 2 * 8 * 4096
+        with pytest.raises(ValueError, match="unknown op"):
+            get_backend("pallas").throughput(HBM, p, get_mapping(HBM),
+                                             op="erase")
+
     def test_burst_must_match_tile(self):
         p = RSTParams(n=8, b=64, s=4096, w=16 * 4096)
         with pytest.raises(ValueError, match="tile"):
