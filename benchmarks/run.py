@@ -13,12 +13,14 @@ With ``--json PATH`` the same rows (plus totals) are written as a
 ``BENCH_*.json`` perf-trajectory file so successive PRs can track the
 sim-backend speedup (CI writes ``BENCH_ci.json`` on every push).
 ``--experiments name1,name2`` restricts the registry suite (unknown names
-fail with the registered list).  ``--catalog [PATH]`` emits the
-registry-generated experiment-catalog table instead of benchmarking —
-to stdout, or spliced into README.md's catalog markers.
+fail with the registered list).  ``--engines N`` replaces the contention
+experiments' engine-count ladder with powers of two up to N.
+``--catalog [PATH]`` emits the registry-generated experiment-catalog
+table instead of benchmarking — to stdout, or spliced into README.md's
+catalog markers.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
-         [--experiments NAMES] [--catalog [PATH]]
+         [--experiments NAMES] [--engines N] [--catalog [PATH]]
 """
 from __future__ import annotations
 
@@ -62,14 +64,30 @@ def resolve_experiments(names):
         raise SystemExit(f"benchmarks.run: {e}")
 
 
-def bench_experiments(quick=False, experiments=None):
+def engine_ladder(max_engines):
+    """The --engines override: powers of two up to (and including) N."""
+    if max_engines < 1:
+        raise SystemExit(
+            f"benchmarks.run: --engines must be >= 1, got {max_engines}")
+    ladder = []
+    k = 1
+    while k < max_engines:
+        ladder.append(k)
+        k *= 2
+    ladder.append(max_engines)
+    return tuple(ladder)
+
+
+def bench_experiments(quick=False, experiments=None, engines=None):
     """One row per (registered experiment, applicable spec).
 
     All grid/derive/summary logic lives on the Experiment objects
     (core/experiments.py); this harness only iterates the registry.
     Single-spec experiments (the switch suites) keep their bare row name;
     multi-spec ones are suffixed with the spec, matching the historical
-    row names so BENCH_*.json trajectories stay comparable.
+    row names so BENCH_*.json trajectories stay comparable.  `engines`
+    (the --engines flag) replaces the engine-count ladder of the
+    contention experiments — every experiment with an "engines" option.
     """
     from repro.core import spec_by_name
     from repro.core.experiments import run_experiment
@@ -80,9 +98,12 @@ def bench_experiments(quick=False, experiments=None):
                  for n in (exp.bench_specs or BENCH_SPEC_NAMES)]
         available = [s for s in specs if exp.available_on(s)]
         label = exp.bench_label or exp.name
+        overrides = ({"engines": engine_ladder(engines)}
+                     if engines is not None and "engines" in exp.defaults
+                     else {})
         for spec in available:
             res, dt = _timed(lambda: run_experiment(
-                exp, spec, quick=quick, bench=True))
+                exp, spec, quick=quick, bench=True, **overrides))
             name = label if len(available) == 1 else f"{label}_{spec.name}"
             rows.append((name, dt, exp.summary(spec, res)))
     return rows
@@ -200,12 +221,18 @@ def main() -> None:
                     help="comma-separated experiment names to benchmark "
                          "(default: every registered experiment); unknown "
                          "names fail with the registered list")
+    ap.add_argument("--engines", type=int, metavar="N", default=None,
+                    help="override the engine-count ladder of the "
+                         "contention experiments with powers of two up to "
+                         "N (e.g. 16 -> 1,2,4,8,16)")
     ap.add_argument("--catalog", metavar="PATH", nargs="?", const="-",
                     default=None,
                     help="emit the registry-generated experiment catalog "
                          "and exit: to stdout, or spliced between the "
                          "catalog markers of PATH (e.g. README.md)")
     args, _ = ap.parse_known_args()
+    if args.engines is not None:
+        engine_ladder(args.engines)   # validate up front, not per suite
     if args.catalog is not None:
         emit_catalog(args.catalog)
         return
@@ -223,7 +250,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     suites = [
-        lambda: bench_experiments(q, args.experiments),
+        lambda: bench_experiments(q, args.experiments, args.engines),
         lambda: bench_sweep_grid(q),
         bench_table3_resources,
         lambda: bench_tpu_rst_kernel(q),

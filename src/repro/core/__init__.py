@@ -6,6 +6,7 @@ Public surface:
   AddressMapping, get_mapping       — Table II policies (registrable:
                                       register_policies)
   serial_read_latencies, throughput — the calibrated timing model
+  contended_throughput              — N engines sharing one channel port
   Engine, Backend                   — engines + pluggable measurement
                                       backends (register_backend)
   MemorySpec, register_spec         — registrable memory systems; HBM/DDR4
@@ -42,7 +43,8 @@ from repro.core.params import EngineRegisters, RSTParams
 from repro.core.rst import addresses_jnp, addresses_np, block_params
 from repro.core.sweep import Sweep, SweepPoint, SweepResult
 from repro.core.switch import SwitchModel
-from repro.core.timing_model import (LatencyTrace, ThroughputResult,
+from repro.core.timing_model import (ContentionResult, LatencyTrace,
+                                     ThroughputResult, contended_throughput,
                                      refresh_interval_estimate,
                                      serial_latencies, serial_read_latencies,
                                      throughput)
@@ -64,7 +66,7 @@ __all__ = [
     "EngineRegisters", "RSTParams",
     "addresses_jnp", "addresses_np", "block_params",
     "Sweep", "SweepPoint", "SweepResult",
-    "SwitchModel", "LatencyTrace", "ThroughputResult",
-    "refresh_interval_estimate", "serial_latencies", "serial_read_latencies",
-    "throughput",
+    "SwitchModel", "LatencyTrace", "ThroughputResult", "ContentionResult",
+    "contended_throughput", "refresh_interval_estimate", "serial_latencies",
+    "serial_read_latencies", "throughput",
 ]

@@ -25,8 +25,9 @@ import numpy as np
 from repro.core.address_mapping import AddressMapping
 from repro.core.hwspec import MemorySpec
 from repro.core.params import RSTParams
-from repro.core.timing_model import (_MAX_EXPAND, _REORDER_WINDOW, PAGE_CLOSED,
-                                     PAGE_HIT, PAGE_MISS, LatencyTrace,
+from repro.core.timing_model import (_MAX_EXPAND, _REORDER_WINDOW,
+                                     PAGE_CLOSED, PAGE_HIT, PAGE_MISS,
+                                     ContentionResult, LatencyTrace,
                                      ThroughputResult, _direction_overheads,
                                      _expand_addresses)
 
@@ -224,4 +225,108 @@ def throughput(
         bound=bound_name,
         detail={**bounds, "txns": float(n), "cmds_per_txn": float(cmds_per_txn),
                 "total_acts": float(total_acts), "efficiency": eff},
+    )
+
+
+def contended_throughput(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    num_engines: int = 1,
+    op: str = "read",
+) -> ContentionResult:
+    """Reference contention model: explicit per-engine/per-round loops.
+
+    Builds the round-robin interleaved command stream one transaction at
+    a time (engine k's t-th transaction lands at position t*N + k, over
+    its own W-byte window at A + k*W), then replays the per-window dict
+    loops of :func:`throughput` over the shared stream.  The vectorized
+    `timing_model.contended_throughput` must match this to float-
+    associativity tolerance, and must be bit-identical to the
+    single-engine read path when num_engines == 1.
+    """
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    turnaround_cyc, act_extra_cyc = _direction_overheads(spec, op)
+    p.validate(spec)
+    txn = _expand_addresses(p)
+    cmds_per_txn = max(1, p.b // spec.bus_bytes_per_cycle)
+    max_txns = max(16, (_MAX_EXPAND // cmds_per_txn) // num_engines)
+    if len(txn) > max_txns:
+        txn = txn[:max_txns]
+    addr_list = []
+    for t in range(len(txn)):                 # round-robin arbitration
+        for k in range(num_engines):          # one txn per engine per round
+            base = int(txn[t]) + k * p.w
+            for c in range(cmds_per_txn):     # burst -> column commands
+                addr_list.append(base + c * spec.bus_bytes_per_cycle)
+    addrs = np.asarray(addr_list, dtype=np.int64)
+    n = len(addrs)
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id(addrs))
+    row = np.asarray(dec["R"])
+    bg = np.asarray(dec["BG"])
+
+    ccd_l_cyc = spec.ns_to_cycles(spec.t_ccd_l_ns)
+
+    # --- command-issue bound (data bus + bank-group tCCD_L) ----------------
+    transitions = int(np.count_nonzero(bg[1:] != bg[:-1]))
+    run_len = n / (transitions + 1)
+    g_cap = max(1.0, _REORDER_WINDOW / (2.0 * run_len))
+    issue_cycles = 0.0
+    num_windows = 0
+    for lo in range(0, n, _REORDER_WINDOW):
+        chunk_bg = bg[lo:lo + _REORDER_WINDOW]
+        g = min(float(len(np.unique(chunk_bg))), g_cap)
+        rate = min(1.0, g / ccd_l_cyc)           # commands per cycle
+        issue_cycles += len(chunk_bg) / rate
+        num_windows += 1
+    issue_cycles += turnaround_cyc * num_windows
+
+    # --- bank bound (row activations serialize at tRC per bank) ------------
+    open_row: Dict[int, int] = {}
+    total_acts = 0
+    t_rc_cyc = spec.ns_to_cycles(spec.t_rc_ns)
+    bank_cycles = 0.0
+    for lo in range(0, n, _REORDER_WINDOW):
+        acts_in_window: Dict[int, int] = {}
+        for i in range(lo, min(lo + _REORDER_WINDOW, n)):
+            b_, r_ = int(bank[i]), int(row[i])
+            if open_row.get(b_) != r_:
+                acts_in_window[b_] = acts_in_window.get(b_, 0) + 1
+                open_row[b_] = r_
+                total_acts += 1
+        if acts_in_window:
+            bank_cycles += max(acts_in_window.values()) * (t_rc_cyc
+                                                           + act_extra_cyc)
+
+    # --- four-activate-window bound ----------------------------------------
+    faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0
+
+    bounds = {"bus/ccd": issue_cycles, "bank": bank_cycles, "faw": faw_cycles}
+    bound_name = max(bounds, key=bounds.get)
+    steady_cycles = bounds[bound_name]
+
+    eff = (1.0 - spec.t_rfc_ns / spec.t_refi_ns) * (1.0 - spec.sched_overhead)
+    total_txns = len(txn) * num_engines
+    total_bytes = total_txns * p.b
+    seconds = spec.cycles_to_ns(steady_cycles) * 1e-9
+    gbps = total_bytes / seconds / 1e9 * eff if seconds > 0 else 0.0
+    gbps = min(gbps, spec.peak_channel_gbps)
+
+    mean_service = steady_cycles / total_txns if total_txns else 0.0
+    queueing = (num_engines - 1) * mean_service
+
+    return ContentionResult(
+        num_engines=num_engines,
+        aggregate_gbps=gbps,
+        bound=bound_name,
+        queueing_delay_cycles=queueing,
+        detail={**bounds, "txns": float(n),
+                "cmds_per_txn": float(cmds_per_txn),
+                "txns_per_engine": float(len(txn)),
+                "total_acts": float(total_acts),
+                "mean_service_cycles": mean_service,
+                "efficiency": eff},
     )

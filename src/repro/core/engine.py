@@ -31,7 +31,8 @@ from repro.core import timing_model
 from repro.core.address_mapping import AddressMapping, get_mapping
 from repro.core.channels import topology_for
 from repro.core.hwspec import HBM, MemorySpec
-from repro.core.latency import LatencyModule
+from repro.core.latency import (DEFAULT_COUNTER_BITS, DEFAULT_DEPTH,
+                                LatencyModule)
 from repro.core.params import EngineRegisters, RSTParams
 from repro.core.switch import SwitchModel
 
@@ -58,6 +59,7 @@ class Backend:
     name: str = ""
     deterministic: bool = False
     supports_latency: bool = False
+    supports_contention: bool = False
 
     def throughput(self, spec: MemorySpec, p: RSTParams,
                    mapping: AddressMapping, *,
@@ -72,6 +74,15 @@ class Backend:
             f"backend {self.name!r} has no per-transaction timers; use the "
             "sim backend for latency experiments (DESIGN.md §2)")
 
+    def contended_throughput(self, spec: MemorySpec, p: RSTParams,
+                             mapping: AddressMapping, *, num_engines: int,
+                             op: str = "read"
+                             ) -> timing_model.ContentionResult:
+        raise NotImplementedError(
+            f"backend {self.name!r} has no multi-engine contention path "
+            f"(supports_contention=False); use the sim backend or the "
+            f"pallas concurrent-access kernel (DESIGN.md §8)")
+
 
 class SimBackend(Backend):
     """Calibrated DRAM timing model (core/timing_model.py)."""
@@ -79,6 +90,7 @@ class SimBackend(Backend):
     name = "sim"
     deterministic = True
     supports_latency = True
+    supports_contention = True
 
     def throughput(self, spec, p, mapping, *, op="read"):
         return timing_model.throughput(p, mapping, spec, op=op)
@@ -88,6 +100,11 @@ class SimBackend(Backend):
         return timing_model.serial_latencies(
             p, mapping, spec, op=op, switch_enabled=switch_enabled,
             switch_extra_cycles=switch_extra_cycles)
+
+    def contended_throughput(self, spec, p, mapping, *, num_engines,
+                             op="read"):
+        return timing_model.contended_throughput(
+            p, mapping, spec, num_engines=num_engines, op=op)
 
 
 class PallasBackend(Backend):
@@ -105,6 +122,7 @@ class PallasBackend(Backend):
     name = "pallas"
     deterministic = False
     supports_latency = False
+    supports_contention = True
 
     def throughput(self, spec, p, mapping, *, op="read"):
         del spec, mapping  # the device's controller, not the model's
@@ -128,6 +146,26 @@ class PallasBackend(Backend):
             "per-transaction latency needs on-chip timers; on TPU use "
             "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
             "the sim backend (DESIGN.md §2)")
+
+    def contended_throughput(self, spec, p, mapping, *, num_engines,
+                             op="read"):
+        del spec, mapping  # the device's controller, not the model's
+        if op != "read":
+            raise ValueError(
+                f"the concurrent-access pallas kernel measures read "
+                f"traffic only, got op={op!r}; use the sim backend for "
+                f"write/duplex contention (DESIGN.md §8)")
+        from repro.kernels import ops  # deferred: keeps sim path jax-free
+        sample = ops.measure_contended_bandwidth(p, num_engines=num_engines)
+        return timing_model.ContentionResult(
+            num_engines=num_engines,
+            aggregate_gbps=sample.gbps,
+            bound="measured",
+            # A wall-clock sample cannot separate arbitration wait from
+            # service time; NaN marks "not measured", not zero.
+            queueing_delay_cycles=float("nan"),
+            detail={"seconds": sample.seconds,
+                    "bytes": float(sample.bytes_moved)})
 
 
 _BACKEND_REGISTRY: Dict[str, Backend] = {}
@@ -262,6 +300,25 @@ class Engine:
             self.spec, p, self._mapping(policy),
             switch_enabled=enabled, switch_extra_cycles=extra, op=op)
 
+    def evaluate_contention(self, p: RSTParams, *,
+                            num_engines: int = 1,
+                            policy: Optional[str] = None,
+                            dst_channel: Optional[int] = None,
+                            op: str = "read"
+                            ) -> timing_model.ContentionResult:
+        """N engines' streams multiplexed onto this engine's channel port
+        (the Choi et al. 2020 multi-PE scenario; DESIGN.md §8)."""
+        p = p.validate(self.spec)
+        res = self.backend_impl.contended_throughput(
+            self.spec, p, self._mapping(policy),
+            num_engines=num_engines, op=op)
+        if self.backend_impl.deterministic:
+            scale = self.throughput_scale(dst_channel)
+            if scale != 1.0:
+                res = dataclasses.replace(
+                    res, aggregate_gbps=res.aggregate_gbps * scale)
+        return res
+
     # -- read module ---------------------------------------------------------
     def read_throughput(self, policy: Optional[str] = None,
                         dst_channel: Optional[int] = None
@@ -311,5 +368,32 @@ class Engine:
         return self.evaluate_throughput(p, policy=policy, op="duplex")
 
     # -- latency module --------------------------------------------------------
-    def capture_latency_list(self, **kwargs) -> np.ndarray:
-        return LatencyModule().capture(self.read_latency(**kwargs))
+    def capture_latency_list(self, op: str = "read", *,
+                             depth: int = DEFAULT_DEPTH,
+                             counter_bits: int = DEFAULT_COUNTER_BITS,
+                             policy: Optional[str] = None,
+                             dst_channel: Optional[int] = None,
+                             switch_enabled: Optional[bool] = None
+                             ) -> np.ndarray:
+        """Capture up to `depth` serial latencies from the selected module.
+
+        `op` picks the engine module whose register params drive the run
+        (``"read"`` -> read register, ``"write"`` -> write register) and is
+        threaded through ``evaluate_latency(op=...)``, so ``op="write"``
+        captures serial *write* latencies (the tWR-bearing page-miss path)
+        — the old capture path hard-wired ``read_latency`` and silently
+        returned read latencies for every module.  `depth`/`counter_bits`
+        are the capture list's synthesis parameters (DESIGN.md §8).
+        """
+        if op not in timing_model.SERIAL_OPS:
+            raise ValueError(
+                f"the capture list holds serial latencies; op must be one "
+                f"of {timing_model.SERIAL_OPS}, got {op!r}")
+        regs = (self.registers.read_params if op == "read"
+                else self.registers.write_params)
+        p = regs.validate(self.spec)
+        trace = self.evaluate_latency(p, policy=policy,
+                                      dst_channel=dst_channel,
+                                      switch_enabled=switch_enabled, op=op)
+        return LatencyModule(depth=depth, counter_bits=counter_bits,
+                             op=op).capture(trace)

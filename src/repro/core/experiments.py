@@ -48,8 +48,8 @@ from repro.core.hwspec import HBM, MemorySpec
 from repro.core.latency import LatencyModule
 from repro.core.params import RSTParams
 from repro.core.engine import get_backend
-from repro.core.sweep import (KIND_LATENCY, KIND_THROUGHPUT, Sweep,
-                              SweepPoint)
+from repro.core.sweep import (KIND_CONTENTION, KIND_LATENCY,
+                              KIND_THROUGHPUT, Sweep, SweepPoint)
 from repro.core.switch import SwitchModel
 from repro.core.timing_model import refresh_interval_estimate
 
@@ -182,6 +182,13 @@ def run_experiment(experiment: "Experiment | str", spec: MemorySpec = HBM,
             f"experiment {exp.name!r} needs serial-latency measurements, "
             f"which backend {backend!r} does not provide "
             f"(supports_latency=False); use the sim backend (DESIGN.md §2)")
+    if not backend_impl.supports_contention and any(
+            pt.kind == KIND_CONTENTION for _, pt in planned):
+        raise ValueError(
+            f"experiment {exp.name!r} needs multi-engine contention "
+            f"support, which backend {backend!r} does not provide "
+            f"(supports_contention=False); use the sim backend "
+            f"(DESIGN.md §8)")
     sweep = Sweep(spec, backend)
     for _, pt in planned:
         sweep.add_point(pt)
@@ -201,9 +208,15 @@ def _tp_point(p: RSTParams, policy=None, channel=0, dst_channel=None,
 
 
 def _lat_point(p: RSTParams, channel=0, dst_channel=None,
-               switch_enabled=None) -> SweepPoint:
-    return SweepPoint(p, None, channel, dst_channel, "read", KIND_LATENCY,
+               switch_enabled=None, op="read") -> SweepPoint:
+    return SweepPoint(p, None, channel, dst_channel, op, KIND_LATENCY,
                       switch_enabled)
+
+
+def _cont_point(p: RSTParams, num_engines, policy=None, channel=0,
+                dst_channel=None, op="read") -> SweepPoint:
+    return SweepPoint(p, policy, channel, dst_channel, op, KIND_CONTENTION,
+                      num_engines=num_engines)
 
 
 def _bursts(spec: MemorySpec, bursts) -> Tuple[int, ...]:
@@ -647,6 +660,164 @@ register_experiment(Experiment(
 
 
 # ---------------------------------------------------------------------------
+# Per-transaction instrumentation + multi-engine contention family
+# (DESIGN.md §8; the serial write-latency classes the op-aware latency
+# module captures, and the shared-port contention scenarios of Choi et
+# al. 2020 / Zohouri & Matsuoka 2019).  All three run on every registered
+# memory system and are benchmarked on all four built-ins.
+# ---------------------------------------------------------------------------
+
+
+def _table4w_plan(spec, o):
+    # The Table-IV two-stride probe, driven through the *write* module: a
+    # small stride isolates hit+closed (no precharge, read anchors), a
+    # page-crossing stride forces tWR-bearing misses.
+    small = RSTParams(n=o["n"], b=spec.min_burst, s=128, w=0x1000000)
+    large = RSTParams(n=o["n"], b=spec.min_burst, s=128 * 1024, w=0x1000000)
+    return [("small", _lat_point(small, op="write")),
+            ("large", _lat_point(large, op="write"))]
+
+
+def _table4w_derive(spec, keyed, o):
+    traces = dict(keyed)
+    module = LatencyModule(op="write", counter_bits=o["counter_bits"])
+    cats_small = module.category_latencies(module.capture(traces["small"]),
+                                           spec)
+    cats_large = module.category_latencies(module.capture(traces["large"]),
+                                           spec)
+    out = {
+        name: {"cycles": cyc, "ns": cyc * spec.cycle_ns}
+        for name, cyc in (("page_hit", cats_small["hit"]),
+                          ("page_closed", cats_small["closed"]),
+                          ("page_miss", cats_large["miss"]))
+    }
+    # The write-direction delta the capture path used to silently drop:
+    # miss latency above the read anchor = the write-recovery segment.
+    out["write_recovery"] = {
+        "cycles": out["page_miss"]["cycles"] - spec.lat_page_miss,
+        "ns": (out["page_miss"]["cycles"] - spec.lat_page_miss)
+              * spec.cycle_ns,
+    }
+    return out
+
+
+register_experiment(Experiment(
+    name="table4_write_latency_classes",
+    artifact="Table IV (write)",
+    title="Serial write latency classes (tWR-bearing page-miss path)",
+    plan=_table4w_plan,
+    derive=_table4w_derive,
+    defaults={"n": 1024, "counter_bits": 8},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=lambda spec, r: (
+        ";".join(f"{k}={v['ns']:.1f}ns" for k, v in r.items()
+                 if k != "write_recovery")
+        + f";tWR={r['write_recovery']['cycles']}cyc"),
+    flatten=lambda spec, r: [
+        (k, f"{v['cycles']}cyc/{v['ns']:.1f}ns") for k, v in r.items()],
+))
+
+
+def _fig9_plan(spec, o):
+    # One sequential-stream engine ladder on one shared channel port —
+    # the Fig. 9-style scaling curve of a multi-PE design (Choi et al.).
+    p = RSTParams(n=o["n"], b=spec.min_burst, s=spec.min_burst, w=o["w"])
+    return [(n_eng, _cont_point(p, n_eng, op=o["op"]))
+            for n_eng in o["engines"]]
+
+
+def _fig9_derive(spec, keyed, o):
+    return {
+        n_eng: {
+            "aggregate_gbps": r.aggregate_gbps,
+            "per_engine_gbps": r.per_engine_gbps,
+            "queueing_delay_cycles": r.queueing_delay_cycles,
+            "bound": r.bound,
+        }
+        for n_eng, r in keyed
+    }
+
+
+def _fig9_summarize(spec, r):
+    n1, nmax = min(r), max(r)
+    agg1, aggn = r[n1]["aggregate_gbps"], r[nmax]["aggregate_gbps"]
+    scaling = aggn / (nmax / n1 * agg1) if agg1 else 0.0
+    return (f"agg_x{n1}={agg1:.2f};agg_x{nmax}={aggn:.2f};"
+            f"per_engine_x{nmax}={r[nmax]['per_engine_gbps']:.2f};"
+            f"qdelay_x{nmax}={r[nmax]['queueing_delay_cycles']:.1f}cyc;"
+            f"scaling={scaling:.2f}")
+
+
+register_experiment(Experiment(
+    name="fig9_channel_contention",
+    artifact="Fig. 9 (contention)",
+    title="N engines sharing one channel port: aggregate + per-engine",
+    plan=_fig9_plan,
+    derive=_fig9_derive,
+    defaults={"engines": (1, 2, 4, 8), "n": 4096, "w": 0x1000000,
+              "op": "read"},
+    quick={"engines": (1, 4), "n": 1024},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_fig9_summarize,
+    flatten=lambda spec, r: [
+        (f"N{n_eng}_{key}", f"{val:.2f}" if isinstance(val, float) else val)
+        for n_eng, per in r.items() for key, val in per.items()],
+))
+
+
+def _cont_sweep_plan(spec, o):
+    out = []
+    for n_eng in o["engines"]:
+        for s in o["strides"]:
+            if s < spec.min_burst:
+                continue
+            p = RSTParams(n=o["n"], b=spec.min_burst, s=s, w=o["w"])
+            out.append(((n_eng, s), _cont_point(p, n_eng, op=o["op"])))
+    return out
+
+
+def _cont_sweep_derive(spec, keyed, o):
+    gbps: Dict[int, Dict[int, float]] = {}
+    queueing: Dict[int, Dict[int, float]] = {}
+    for (n_eng, s), r in keyed:
+        gbps.setdefault(n_eng, {})[s] = r.aggregate_gbps
+        queueing.setdefault(n_eng, {})[s] = r.queueing_delay_cycles
+    base = gbps[min(gbps)]
+    n1 = min(gbps)
+    efficiency = {
+        n_eng: {s: (per_s[s] / ((n_eng / n1) * base[s]) if base[s] else 0.0)
+                for s in per_s}
+        for n_eng, per_s in gbps.items()
+    }
+    return {"gbps": gbps, "efficiency": efficiency, "queueing": queueing}
+
+
+def _cont_sweep_summarize(spec, r):
+    nmax = max(r["gbps"])
+    s0 = min(r["gbps"][nmax])
+    return (f"agg_x{nmax}_S{s0}={r['gbps'][nmax][s0]:.2f};"
+            f"eff_x{nmax}_S{s0}={r['efficiency'][nmax][s0]:.2f};"
+            f"qdelay_x{nmax}_S{s0}={r['queueing'][nmax][s0]:.1f}cyc")
+
+
+register_experiment(Experiment(
+    name="contention_scaling_sweep",
+    artifact="contention (scaling)",
+    title="Engine-count x stride contention grid with scaling efficiency",
+    plan=_cont_sweep_plan,
+    derive=_cont_sweep_derive,
+    defaults={"engines": (1, 2, 4, 8), "strides": (64, 1024, 4096),
+              "w": 0x1000000, "n": 4096, "op": "read"},
+    quick={"engines": (1, 4), "strides": (64, 1024), "n": 1024},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_cont_sweep_summarize,
+    flatten=lambda spec, r: [
+        (f"N{n_eng}_S{s}", f"{gbps:.2f}")
+        for n_eng, per_s in r["gbps"].items() for s, gbps in per_s.items()],
+))
+
+
+# ---------------------------------------------------------------------------
 # Experiment catalog (README.md section; `python -m benchmarks.run --catalog`)
 # ---------------------------------------------------------------------------
 
@@ -656,10 +827,16 @@ CATALOG_END = "<!-- experiment-catalog:end -->"
 
 def _catalog_backends(planned: List[PlannedPoint]) -> str:
     """Backends that can execute a plan: serial-latency points need
-    per-transaction timers (sim only, DESIGN.md §2)."""
-    if any(pt.kind == KIND_LATENCY for _, pt in planned):
-        return "sim"
-    return "sim, pallas"
+    per-transaction timers (sim only, DESIGN.md §2); contention points
+    need a multi-engine path (supports_contention, DESIGN.md §8)."""
+    from repro.core.engine import available_backends
+    needs_latency = any(pt.kind == KIND_LATENCY for _, pt in planned)
+    needs_contention = any(pt.kind == KIND_CONTENTION for _, pt in planned)
+    names = [name for name in available_backends()
+             if (not needs_latency or get_backend(name).supports_latency)
+             and (not needs_contention
+                  or get_backend(name).supports_contention)]
+    return ", ".join(names)
 
 
 def catalog_rows() -> List[Tuple[str, ...]]:

@@ -1,10 +1,33 @@
 """Latency module: bounded capture list + page-state classification.
 
-Mirrors the hardware latency module of Sec. III-C-4: a list of 1024 entries
-(synthesis parameter), each an 8-bit saturating register holding one read
-latency in cycles.  On top of the raw capture we provide the analyses the
-paper performs: clustering latencies into page-hit / page-closed / page-miss
+Mirrors the hardware latency module of Sec. III-C-4: a list of `depth`
+entries (synthesis parameter, 1024 in the paper's build), each a
+`counter_bits`-wide saturating register holding one serial latency in
+cycles.  On top of the raw capture we provide the analyses the paper
+performs: clustering latencies into page-hit / page-closed / page-miss
 (Table IV) and estimating the refresh interval (Fig. 4).
+
+The module is *per-transaction instrumentation*, not a read-only probe:
+
+* **op-aware** — ``op`` selects which engine module's traffic the capture
+  list holds.  Write misses carry the write-recovery segment tWR (the
+  precharge a miss requires waits out the previous write, DESIGN.md §7),
+  so the write-mode miss anchor sits tWR above the read anchor; duplex
+  traffic is half writes on average, so its miss anchor shifts by tWR/2.
+  Classifying a write capture with read anchors mis-bins tWR-bearing
+  misses as refresh on specs where tWR exceeds the 8-cycle refresh
+  margin (e.g. the modeled HBM3's 11-cycle tWR).
+* **width-aware** — ``counter_bits`` is the synthesis parameter of the
+  capture registers (8 in the RTL, hence the historical 255 clamp).
+  Classification derives its anchors *and* the refresh threshold from
+  the saturation point: anchors clamp to the counter maximum, and the
+  refresh threshold clamps to one below it so saturated samples still
+  bin as refresh when the miss anchor approaches the counter ceiling —
+  with the old unclamped ``miss + 8`` threshold, a distant Table-VI
+  crossing (or contention-inflated ``extra_cycles``) near 255 made the
+  threshold unreachable, refresh counts collapsed to 0, and every
+  saturated sample mis-binned as "miss".  Widening ``counter_bits``
+  removes the saturation entirely (a 16-bit build of the RTL register).
 """
 from __future__ import annotations
 
@@ -17,21 +40,88 @@ from repro.core.hwspec import MemorySpec
 from repro.core.timing_model import LatencyTrace
 
 DEFAULT_DEPTH = 1024
-_SATURATE = 255   # 8-bit registers
+DEFAULT_COUNTER_BITS = 8   # the paper's 8-bit saturating registers
+
+# Traffic directions the capture list can hold, mirroring the timing
+# model's ops: the miss anchor shifts by tWR for writes, tWR/2 for duplex.
+CAPTURE_OPS = ("read", "write", "duplex")
+
+# Narrowest unsigned dtype covering each legal counter width.
+_WIDTH_DTYPES = ((8, np.uint8), (16, np.uint16), (32, np.uint32))
 
 
 @dataclasses.dataclass
 class LatencyModule:
+    """One hardware latency-capture list plus its classification logic.
+
+    `depth` and `counter_bits` are synthesis parameters (list length and
+    register width); `op` declares which engine module feeds the list so
+    the page-state anchors include the direction's timing segments.
+    """
+
     depth: int = DEFAULT_DEPTH
+    counter_bits: int = DEFAULT_COUNTER_BITS
+    op: str = "read"
+
+    def __post_init__(self):
+        if self.depth <= 0:
+            raise ValueError(f"depth must be positive, got {self.depth}")
+        if not 1 <= self.counter_bits <= 32:
+            raise ValueError(
+                f"counter_bits must be in [1, 32], got {self.counter_bits}")
+        if self.op not in CAPTURE_OPS:
+            raise ValueError(
+                f"unknown op {self.op!r}; valid: {CAPTURE_OPS}")
+        self._dtype = next(d for bits, d in _WIDTH_DTYPES
+                           if self.counter_bits <= bits)
+
+    @property
+    def saturate(self) -> int:
+        """Largest value a capture register can hold."""
+        return (1 << self.counter_bits) - 1
 
     def capture(self, trace: LatencyTrace) -> np.ndarray:
-        """Store up to `depth` latencies, saturating at 8 bits like the RTL."""
-        lat = np.minimum(np.round(trace.cycles[: self.depth]), _SATURATE)
-        return lat.astype(np.uint8)
+        """Store up to `depth` latencies, saturating like the RTL."""
+        lat = np.minimum(np.round(trace.cycles[: self.depth]), self.saturate)
+        return lat.astype(self._dtype)
 
-    @staticmethod
-    def _nearest_anchor(captured: np.ndarray, anchors: Dict[str, int]
-                        ) -> tuple:
+    def anchors(self, spec: MemorySpec, extra_cycles: int = 0
+                ) -> Dict[str, int]:
+        """Page-state anchor latencies for this module's traffic direction.
+
+        `extra_cycles` shifts all anchors (switch penalty + distance, or a
+        contention queueing term) so the same classifier serves Table IV
+        (switch off), Table VI (on) and contended captures.  Write misses
+        add tWR (duplex: tWR/2) to the miss anchor, matching
+        `timing_model.serial_latencies`.  Anchors clamp to the counter's
+        saturation point — a saturated register can never read higher.
+        """
+        miss_extra = 0.0
+        if self.op == "write":
+            miss_extra = spec.ns_to_cycles(spec.t_wr_ns)
+        elif self.op == "duplex":
+            miss_extra = 0.5 * spec.ns_to_cycles(spec.t_wr_ns)
+        raw = {
+            "hit": spec.lat_page_hit + extra_cycles,
+            "closed": spec.lat_page_closed + extra_cycles,
+            "miss": int(round(spec.lat_page_miss + extra_cycles
+                              + miss_extra)),
+        }
+        return {name: min(int(v), self.saturate) for name, v in raw.items()}
+
+    def _refresh_threshold(self, anchors: Dict[str, int]) -> int:
+        """Samples strictly above this bin as refresh-stalled.
+
+        Normally `miss + 8` (the paper's spike margin), but clamped to one
+        below the saturation point so saturated samples remain detectable;
+        never below the miss anchor itself (when the miss anchor saturates
+        the counter, refresh and miss are indistinguishable — widen
+        `counter_bits`)."""
+        return max(min(anchors["miss"] + 8, self.saturate - 1),
+                   anchors["miss"])
+
+    def _nearest_anchor(self, captured: np.ndarray,
+                        anchors: Dict[str, int]) -> tuple:
         """(nearest-anchor index array, refresh-inflated mask); argmin takes
         the first minimum, preserving the hit < closed < miss tie-break of
         the original per-sample scan."""
@@ -39,23 +129,14 @@ class LatencyModule:
         vals = np.array([anchors["hit"], anchors["closed"], anchors["miss"]],
                         dtype=np.int64)
         nearest = np.argmin(np.abs(c[:, None] - vals[None, :]), axis=1)
-        refresh = c > anchors["miss"] + 8
+        refresh = c > self._refresh_threshold(anchors)
         return nearest, refresh
 
-    @staticmethod
-    def classify(captured: np.ndarray, spec: MemorySpec,
+    def classify(self, captured: np.ndarray, spec: MemorySpec,
                  extra_cycles: int = 0) -> Dict[str, int]:
-        """Count page states by matching against the spec's anchor latencies.
-
-        `extra_cycles` shifts the anchors (switch penalty + distance) so the
-        same classifier works for Table IV (switch off) and Table VI (on).
-        """
-        anchors = {
-            "hit": spec.lat_page_hit + extra_cycles,
-            "closed": spec.lat_page_closed + extra_cycles,
-            "miss": spec.lat_page_miss + extra_cycles,
-        }
-        nearest, refresh = LatencyModule._nearest_anchor(captured, anchors)
+        """Count page states by matching against this op's anchor latencies."""
+        nearest, refresh = self._nearest_anchor(
+            captured, self.anchors(spec, extra_cycles))
         counts = {name: int(np.count_nonzero(~refresh & (nearest == k)))
                   for k, name in enumerate(("hit", "closed", "miss"))}
         counts["refresh"] = int(np.count_nonzero(refresh))
@@ -67,16 +148,11 @@ class LatencyModule:
         vals, freq = np.unique(captured, return_counts=True)
         return int(vals[np.argmax(freq)])
 
-    @staticmethod
-    def category_latencies(captured: np.ndarray, spec: MemorySpec,
+    def category_latencies(self, captured: np.ndarray, spec: MemorySpec,
                            extra_cycles: int = 0) -> Dict[str, int]:
         """Per-category modal latency, for reproducing Table IV/VI rows."""
-        anchors = {
-            "hit": spec.lat_page_hit + extra_cycles,
-            "closed": spec.lat_page_closed + extra_cycles,
-            "miss": spec.lat_page_miss + extra_cycles,
-        }
-        nearest, refresh = LatencyModule._nearest_anchor(captured, anchors)
+        nearest, refresh = self._nearest_anchor(
+            captured, self.anchors(spec, extra_cycles))
         c = np.asarray(captured, dtype=np.int64)
         out: Dict[str, int] = {}
         for k, name in enumerate(("hit", "closed", "miss")):

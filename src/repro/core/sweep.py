@@ -31,6 +31,7 @@ from repro.core.params import RSTParams
 
 KIND_THROUGHPUT = "throughput"
 KIND_LATENCY = "latency"
+KIND_CONTENTION = "contention"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +45,7 @@ class SweepPoint:
     op: str = "read"
     kind: str = KIND_THROUGHPUT
     switch_enabled: Optional[bool] = None   # latency runs only
+    num_engines: int = 1                    # contention runs only
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,9 +78,11 @@ class Sweep:
         self._points: List[SweepPoint] = []
         self._engines: Dict[int, Engine] = {}
         # Unscaled throughput results keyed by (params, policy, op); latency
-        # traces keyed by (params, policy, enabled, extra_cycles).  sim only.
+        # traces keyed by (params, policy, enabled, extra_cycles); contention
+        # results keyed by (params, policy, op, num_engines).  sim only.
         self._tp_cache: Dict[Tuple, timing_model.ThroughputResult] = {}
         self._lat_cache: Dict[Tuple, timing_model.LatencyTrace] = {}
+        self._cont_cache: Dict[Tuple, timing_model.ContentionResult] = {}
 
     # ------------------------------------------------------------- planning
     def add(self, params: RSTParams, *, policy: Optional[str] = None,
@@ -97,6 +101,17 @@ class Sweep:
         self for chaining."""
         self._points.append(SweepPoint(params, policy, channel, dst_channel,
                                        op, KIND_LATENCY, switch_enabled))
+        return self
+
+    def add_contention(self, params: RSTParams, *, num_engines: int,
+                       policy: Optional[str] = None, channel: int = 0,
+                       dst_channel: Optional[int] = None,
+                       op: str = "read") -> "Sweep":
+        """Queue one multi-engine contention point (N engines sharing the
+        channel port, DESIGN.md §8); returns self for chaining."""
+        self._points.append(SweepPoint(params, policy, channel, dst_channel,
+                                       op, KIND_CONTENTION,
+                                       num_engines=num_engines))
         return self
 
     def add_point(self, pt: SweepPoint) -> "Sweep":
@@ -154,6 +169,31 @@ class Sweep:
             base = dataclasses.replace(base, gbps=base.gbps * scale)
         return base, cached
 
+    def _run_contention(self, pt: SweepPoint) -> Tuple[object, bool]:
+        eng = self._engine(pt.channel)
+        if not self.backend_impl.deterministic:
+            self.stats.evaluated += 1
+            return eng.evaluate_contention(
+                pt.params, num_engines=pt.num_engines, policy=pt.policy,
+                dst_channel=pt.dst_channel, op=pt.op), False
+        key = (pt.params, pt.policy, pt.op, pt.num_engines)
+        base = self._cont_cache.get(key)
+        cached = base is not None
+        if base is None:
+            p = pt.params.validate(self.spec)
+            base = self.backend_impl.contended_throughput(
+                self.spec, p, eng._mapping(pt.policy),
+                num_engines=pt.num_engines, op=pt.op)
+            self._cont_cache[key] = base
+            self.stats.evaluated += 1
+        # Channel broadcast, like throughput: location only enters through
+        # the non-blocking switch datapath scale.
+        scale = eng.throughput_scale(pt.dst_channel)
+        if scale != 1.0:
+            base = dataclasses.replace(
+                base, aggregate_gbps=base.aggregate_gbps * scale)
+        return base, cached
+
     def _run_latency(self, pt: SweepPoint) -> Tuple[object, bool]:
         eng = self._engine(pt.channel)
         if not self.backend_impl.deterministic:
@@ -180,6 +220,8 @@ class Sweep:
             self.stats.points += 1
             if pt.kind == KIND_THROUGHPUT:
                 value, cached = self._run_throughput(pt)
+            elif pt.kind == KIND_CONTENTION:
+                value, cached = self._run_contention(pt)
             else:
                 value, cached = self._run_latency(pt)
             out.append(SweepResult(point=pt, value=value, cached=cached))

@@ -37,6 +37,15 @@ traffic as first-class workloads:
   ``op="read"`` reproduces the pre-write-path numbers bit-for-bit (the
   direction overheads are exactly zero).
 
+* :func:`contended_throughput` — N engines sharing one channel /
+  mini-switch port (DESIGN.md §8): the engines' streams are round-robin
+  interleaved (engine k over its own W-byte window at ``A + k*W``) and the
+  shared stream runs through the same three bounds, so contention *emerges*
+  from interleaving — row thrash in shared banks, shortened bank-group
+  runs — rather than being asserted.  Reports the aggregate/per-engine
+  bandwidth split and a round-robin queueing-delay term; bit-identical to
+  :func:`throughput` at ``num_engines=1``.
+
 Both functions are NumPy array code end to end (DESIGN.md §3):
 
 * Page-state classification is a segment analysis: a stable argsort groups
@@ -340,6 +349,38 @@ def throughput(
     row = np.asarray(dec["R"])
     bg = np.asarray(dec["BG"])
 
+    bounds, total_acts = _stream_bounds(spec, bank, row, bg,
+                                        turnaround_cyc, act_extra_cyc)
+    bound_name = max(bounds, key=bounds.get)
+    steady_cycles = bounds[bound_name]
+
+    eff = (1.0 - spec.t_rfc_ns / spec.t_refi_ns) * (1.0 - spec.sched_overhead)
+    total_bytes = txns_used * p.b
+    seconds = spec.cycles_to_ns(steady_cycles) * 1e-9
+    gbps = total_bytes / seconds / 1e9 * eff if seconds > 0 else 0.0
+    # A channel can never beat its wire rate.
+    gbps = min(gbps, spec.peak_channel_gbps)
+
+    return ThroughputResult(
+        gbps=gbps,
+        bound=bound_name,
+        detail={**bounds, "txns": float(n), "cmds_per_txn": float(cmds_per_txn),
+                "total_acts": float(total_acts), "efficiency": eff},
+    )
+
+
+def _stream_bounds(spec: MemorySpec, bank: np.ndarray, row: np.ndarray,
+                   bg: np.ndarray, turnaround_cyc: float,
+                   act_extra_cyc: float) -> Tuple[Dict[str, float], int]:
+    """The three resource bounds of one decoded column-command stream.
+
+    Shared by :func:`throughput` (one engine's stream) and
+    :func:`contended_throughput` (N engines' streams round-robin
+    multiplexed onto one shared port) — the scheduler model does not care
+    who issued a command, only what it touches.  Returns
+    ``({"bus/ccd", "bank", "faw"} -> cycles, total_activations)``.
+    """
+    n = len(bank)
     ccd_l_cyc = spec.ns_to_cycles(spec.t_ccd_l_ns)
     win = _REORDER_WINDOW
     nw_full, rem = divmod(n, win)
@@ -399,21 +440,141 @@ def throughput(
     faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0
 
     bounds = {"bus/ccd": issue_cycles, "bank": bank_cycles, "faw": faw_cycles}
+    return bounds, total_acts
+
+
+# ---------------------------------------------------------------------------
+# Multi-engine contention (N engines sharing one channel / mini-switch port)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentionResult:
+    """N engines' streams multiplexed onto one shared channel port.
+
+    `aggregate_gbps` is the shared port's total; `queueing_delay_cycles`
+    is the mean round-robin arbitration wait one transaction spends
+    behind the other N-1 engines' in-flight transactions.
+    """
+
+    num_engines: int
+    aggregate_gbps: float
+    bound: str                    # "bus/ccd" | "bank" | "faw" | "measured"
+    queueing_delay_cycles: float
+    detail: Dict[str, float]
+
+    @property
+    def per_engine_gbps(self) -> float:
+        """Bandwidth-share of one engine (fair round-robin arbitration)."""
+        return self.aggregate_gbps / self.num_engines
+
+    def __repr__(self):
+        return (f"ContentionResult(N={self.num_engines}, "
+                f"{self.aggregate_gbps:.2f} GB/s aggregate, "
+                f"bound={self.bound})")
+
+
+def _contended_command_addresses(p: RSTParams, bus_bytes: int,
+                                 num_engines: int) -> Tuple[np.ndarray, int]:
+    """Round-robin interleaved column-command stream of N identical engines.
+
+    Engine k traverses its own W-byte window at base ``A + k*W`` (disjoint
+    windows, the Choi et al. 2020 multi-PE layout), and the shared port
+    arbitrates one transaction per engine per round.  The total modeled
+    command budget is the single-engine `_MAX_EXPAND` cap, split across
+    engines, so contention analyses cost the same as single-engine ones.
+    For ``num_engines == 1`` the construction reduces exactly to
+    `_command_addresses` — the read path is bit-identical.
+    """
+    txn = _expand_addresses(p)
+    cmds_per_txn = max(1, p.b // bus_bytes)
+    max_txns = max(16, (_MAX_EXPAND // cmds_per_txn) // num_engines)
+    if len(txn) > max_txns:
+        txn = txn[:max_txns]
+    engine_offs = np.arange(num_engines, dtype=np.int64) * p.w
+    # Row-major (txn, engine) flatten = round-robin: t0e0, t0e1, ..., t1e0.
+    inter = (txn[:, None] + engine_offs[None, :]).reshape(-1)
+    offs = np.arange(cmds_per_txn, dtype=np.int64) * bus_bytes
+    addrs = (inter[:, None] + offs[None, :]).reshape(-1)
+    return addrs, len(txn)
+
+
+def contended_throughput(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    num_engines: int = 1,
+    op: str = "read",
+) -> ContentionResult:
+    """Steady-state throughput of N engines sharing one channel port.
+
+    Models the scenario family of Choi et al. 2020 / Zohouri & Matsuoka
+    2019: several compute engines (PEs) multiplexed onto one HBM
+    pseudo-channel through the mini-switch.  Each engine issues the same
+    RST stream over its own W-byte window (base ``A + k*W``); the shared
+    port round-robins one transaction per engine per round, and the
+    interleaved stream runs through the same three resource bounds as a
+    single engine's (`_stream_bounds`) — interleaving is what creates the
+    contention: engines share banks but occupy different rows, so row
+    locality that survives one engine's stride is destroyed by its
+    neighbors' interleaved activations, while short bank-group runs can
+    actually *improve* bus utilization (the same effect as Fig. 6's
+    policy interleaving).
+
+    Two sharing terms come out:
+
+    * **bandwidth sharing** — ``aggregate_gbps`` is clamped at the shared
+      port's wire rate; ``per_engine_gbps = aggregate / N`` under fair
+      arbitration.
+    * **queueing delay** — the mean arbitration wait of one transaction:
+      ``(N - 1) x`` the interleaved stream's mean per-transaction service
+      time (each of the other engines has one transaction in flight per
+      round-robin round).
+
+    For ``num_engines == 1`` the result is bit-identical to
+    :func:`throughput` (same stream, same bounds, same float ops) with a
+    zero queueing term — pinned by the N=1 parity tests.
+    """
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    turnaround_cyc, act_extra_cyc = _direction_overheads(spec, op)
+    p.validate(spec)
+    cmds_per_txn = max(1, p.b // spec.bus_bytes_per_cycle)
+    addrs, txns_per_engine = _contended_command_addresses(
+        p, spec.bus_bytes_per_cycle, num_engines)
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id_from(dec))
+    row = np.asarray(dec["R"])
+    bg = np.asarray(dec["BG"])
+
+    bounds, total_acts = _stream_bounds(spec, bank, row, bg,
+                                        turnaround_cyc, act_extra_cyc)
     bound_name = max(bounds, key=bounds.get)
     steady_cycles = bounds[bound_name]
 
     eff = (1.0 - spec.t_rfc_ns / spec.t_refi_ns) * (1.0 - spec.sched_overhead)
-    total_bytes = txns_used * p.b
+    total_txns = txns_per_engine * num_engines
+    total_bytes = total_txns * p.b
     seconds = spec.cycles_to_ns(steady_cycles) * 1e-9
     gbps = total_bytes / seconds / 1e9 * eff if seconds > 0 else 0.0
-    # A channel can never beat its wire rate.
+    # The *shared port* can never beat its wire rate.
     gbps = min(gbps, spec.peak_channel_gbps)
 
-    return ThroughputResult(
-        gbps=gbps,
+    mean_service = steady_cycles / total_txns if total_txns else 0.0
+    queueing = (num_engines - 1) * mean_service
+
+    return ContentionResult(
+        num_engines=num_engines,
+        aggregate_gbps=gbps,
         bound=bound_name,
-        detail={**bounds, "txns": float(n), "cmds_per_txn": float(cmds_per_txn),
-                "total_acts": float(total_acts), "efficiency": eff},
+        queueing_delay_cycles=queueing,
+        detail={**bounds, "txns": float(len(bank)),
+                "cmds_per_txn": float(cmds_per_txn),
+                "txns_per_engine": float(txns_per_engine),
+                "total_acts": float(total_acts),
+                "mean_service_cycles": mean_service,
+                "efficiency": eff},
     )
 
 

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.params import RSTParams
 from repro.core.rst import block_params
+from repro.kernels.rst_contend import rst_contend_read
 from repro.kernels.rst_read import LANE, SUBLANE, rst_read
 from repro.kernels.rst_write import rst_write
 
@@ -71,11 +72,14 @@ def params_operand(p: RSTParams, dtype, burst_rows: int = SUBLANE,
     return jnp.array([stride_b, wset_b, base_b, n], dtype=jnp.int32)
 
 
-def make_working_buffer(p: RSTParams, dtype, key=None) -> jax.Array:
-    """Allocate the working set: W bytes of the given dtype as (rows, LANE)."""
+def make_working_buffer(p: RSTParams, dtype, key=None, *,
+                        num_engines: int = 1) -> jax.Array:
+    """Allocate the working set as (rows, LANE): W bytes of the given
+    dtype, times `num_engines` for the contention kernel's disjoint
+    per-engine windows."""
     itemsize = jnp.dtype(dtype).itemsize
-    rows = p.w // (LANE * itemsize)
-    if rows * LANE * itemsize != p.w:
+    rows = num_engines * p.w // (LANE * itemsize)
+    if rows * LANE * itemsize != num_engines * p.w:
         raise ValueError(f"W={p.w} not a whole number of ({LANE},) rows")
     if key is None:
         # Deterministic, cheap, nonconstant content.
@@ -113,6 +117,48 @@ def measure_read_bandwidth(p: RSTParams, *, dtype=jnp.float32,
     dt = time.perf_counter() - t0
     return BandwidthSample(bytes_moved=min(p.n, grid) * p.b, seconds=dt,
                            checksum=np.asarray(out))
+
+
+def contended_params_operand(p: RSTParams, num_engines: int, dtype,
+                             burst_rows: int = SUBLANE,
+                             grid_txns: int | None = None) -> jax.Array:
+    """Pack byte-level RST params + engine count into the int32[5] scalar
+    operand of the concurrent-access kernel."""
+    base = params_operand(p, dtype, burst_rows, grid_txns)
+    return jnp.concatenate(
+        [base, jnp.array([num_engines], dtype=jnp.int32)])
+
+
+def measure_contended_bandwidth(p: RSTParams, *, num_engines: int,
+                                dtype=jnp.float32,
+                                burst_rows: int = SUBLANE,
+                                grid_txns: int | None = None,
+                                interpret: bool = True) -> BandwidthSample:
+    """N read engines sharing one memory port (DESIGN.md §8): the
+    round-robin interleaved traversal of `timing_model.contended_throughput`
+    run on the device.  Each engine owns a disjoint W-byte window of one
+    shared buffer; bytes moved counts every engine (N·n·B over the wall
+    time), so `gbps` is the port's *aggregate* under contention."""
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    grid = grid_txns or default_grid(p.n, interpret)
+    operand = contended_params_operand(p, num_engines, dtype, burst_rows,
+                                       grid)
+    buf = make_working_buffer(p, dtype, num_engines=num_engines)
+    # Warm-up compiles and (in interpret mode) validates tracing.
+    out = rst_contend_read(operand, buf, grid_txns=grid,
+                           num_engines=num_engines, burst_rows=burst_rows,
+                           interpret=interpret)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    out = rst_contend_read(operand, buf, grid_txns=grid,
+                           num_engines=num_engines, burst_rows=burst_rows,
+                           interpret=interpret)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return BandwidthSample(
+        bytes_moved=num_engines * min(p.n, grid) * p.b, seconds=dt,
+        checksum=np.asarray(out))
 
 
 def measure_write_bandwidth(p: RSTParams, *, dtype=jnp.float32,

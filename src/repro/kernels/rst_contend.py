@@ -1,0 +1,111 @@
+"""Concurrent-access RST engines as one Pallas TPU kernel (DESIGN.md §8).
+
+The multi-engine contention scenario of Choi et al. 2020 / Zohouri &
+Matsuoka 2019 on the device side: N read engines share one memory port,
+round-robin arbitrated at transaction granularity.  Grid step
+``j = t * N + k`` is engine k's t-th transaction — the same interleaved
+stream `timing_model.contended_throughput` analyses — and engine k
+traverses its own W-byte window at block offset ``base + k * wset``
+(Eq. 1 per engine, disjoint windows).
+
+The kernel body is the read engine's single VPU checksum add, so the
+pipeline stays DMA-bound and the wall-clock number on a real TPU is the
+shared port's aggregate bandwidth under contention; in interpret mode it
+validates the interleaved traversal only.  Runtime parameterization is
+preserved: ``(stride, wset, base, n, num_engines)`` arrive via scalar
+prefetch, so one compiled image serves every engine count up to the
+static grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.rst_read import LANE, SUBLANE
+
+
+def _contend_index_map(j, params_ref):
+    """Block index of grid step j = t * num_engines + k.
+
+    Engine k = j mod N traverses its own window at ``base + k * wset``;
+    its transaction index t = j div N follows Eq. 1.  Steps past
+    n * num_engines revisit each engine's last real block (cheap,
+    pipelined) and are excluded from the checksum by the body's gate.
+    """
+    stride, wset, base, n, engines = (params_ref[0], params_ref[1],
+                                      params_ref[2], params_ref[3],
+                                      params_ref[4])
+    k = j % engines
+    t = jnp.minimum(j // engines, n - 1)
+    return base + k * wset + (t * stride) % wset, 0
+
+
+def _rst_contend_kernel(params_ref, buf_ref, out_ref, acc_ref):
+    j = pl.program_id(0)
+    n = params_ref[3]
+    engines = params_ref[4]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j < n * engines)
+    def _accumulate():
+        acc_ref[...] += buf_ref[...].astype(jnp.float32)
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid_txns", "num_engines", "burst_rows", "interpret"))
+def rst_contend_read(params: jax.Array, buf: jax.Array, *, grid_txns: int,
+                     num_engines: int, burst_rows: int = SUBLANE,
+                     interpret: bool = True) -> jax.Array:
+    """Run N interleaved RST read engines over `buf`.
+
+    Args:
+      params: int32[5] = (stride_blocks, wset_blocks, base_block, n_txns,
+        num_engines); blocks are `(burst_rows, LANE)` tiles and engine k's
+        window starts at block ``base_block + k * wset_blocks``.
+      buf: the shared working buffer covering every engine's window:
+        shape (rows, LANE) with rows % burst_rows == 0 and at least
+        ``num_engines * wset_blocks`` blocks past `base_block`.
+      grid_txns: static per-engine grid size (n_txns <= grid_txns).
+      num_engines: static engine count (the grid is grid_txns * engines).
+      burst_rows: rows per burst tile.
+      interpret: run the kernel body in interpret mode (CPU validation).
+
+    Returns:
+      float32[burst_rows, LANE] elementwise checksum of every tile read
+      by every engine.
+    """
+    rows, lane = buf.shape
+    if lane != LANE:
+        raise ValueError(f"buffer minor dim must be {LANE}, got {lane}")
+    if rows % burst_rows:
+        raise ValueError(f"rows ({rows}) % burst_rows ({burst_rows}) != 0")
+    if burst_rows % SUBLANE:
+        raise ValueError(f"burst_rows must be a multiple of {SUBLANE}")
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(grid_txns * num_engines,),
+        in_specs=[pl.BlockSpec((burst_rows, LANE), _contend_index_map)],
+        out_specs=pl.BlockSpec((burst_rows, LANE), lambda j, p: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((burst_rows, LANE), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _rst_contend_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((burst_rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(params, buf)

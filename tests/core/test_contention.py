@@ -1,0 +1,185 @@
+"""Multi-engine contention subsystem: model behavior + Engine/Sweep plumbing.
+
+Model-level parity against the loop oracle (and N=1 bit-identity with the
+single-engine path) lives in tests/core/test_timing_parity.py; this file
+covers the behavioral claims (bandwidth sharing, queueing delay, the
+memory-controller-wall collapse) and the engine-count plumbing through
+Backend / Engine / Sweep and the experiment registry.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DDR3, DDR4, HBM, HBM3, Backend, Engine, RSTParams,
+                        Sweep, contended_throughput, get_mapping,
+                        register_backend, throughput)
+from repro.core import engine as engine_mod
+from repro.core.experiments import run_experiment
+
+ALL_SPECS = [HBM, DDR4, HBM3, DDR3]
+SPEC_IDS = [s.name for s in ALL_SPECS]
+
+
+def _seq(spec, n=2048):
+    return RSTParams(n=n, b=spec.min_burst, s=spec.min_burst, w=0x1000000)
+
+
+# ---------------------------------------------------------------------------
+# Model behavior
+# ---------------------------------------------------------------------------
+
+
+class TestContentionModel:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_aggregate_never_exceeds_wire_rate(self, spec):
+        for n_eng in (1, 2, 4, 8, 16):
+            r = contended_throughput(_seq(spec), get_mapping(spec), spec,
+                                     num_engines=n_eng)
+            assert 0 < r.aggregate_gbps <= spec.peak_channel_gbps
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_per_engine_share_shrinks(self, spec):
+        shares = [contended_throughput(_seq(spec), get_mapping(spec), spec,
+                                       num_engines=n).per_engine_gbps
+                  for n in (1, 2, 4, 8)]
+        assert all(a >= b for a, b in zip(shares, shares[1:]))
+        assert shares[-1] < 0.6 * shares[0]
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_queueing_delay_grows_with_engines(self, spec):
+        delays = [contended_throughput(_seq(spec), get_mapping(spec), spec,
+                                       num_engines=n).queueing_delay_cycles
+                  for n in (1, 2, 4, 8)]
+        assert delays[0] == 0.0
+        assert all(a < b for a, b in zip(delays, delays[1:]))
+
+    def test_memory_controller_wall(self):
+        # Zohouri & Matsuoka 2019: interleaved sequential streams thrash
+        # rows in shared banks — aggregate bandwidth *collapses* below a
+        # single engine's, it does not merely divide.
+        single = contended_throughput(_seq(HBM), get_mapping(HBM), HBM,
+                                      num_engines=1)
+        contended = contended_throughput(_seq(HBM), get_mapping(HBM), HBM,
+                                         num_engines=8)
+        assert contended.aggregate_gbps < 0.5 * single.aggregate_gbps
+        assert contended.bound == "bank"          # row thrash, not the bus
+
+    def test_engines_occupy_disjoint_windows(self):
+        # The interleaved stream touches N distinct W-byte windows.
+        from repro.core.timing_model import _contended_command_addresses
+        p = _seq(HBM, n=64)
+        addrs, txns = _contended_command_addresses(
+            p, HBM.bus_bytes_per_cycle, 4)
+        windows = np.unique(np.asarray(addrs) // p.w)
+        assert set(windows.tolist()) == {0, 1, 2, 3}
+        assert len(addrs) == 4 * txns * (p.b // HBM.bus_bytes_per_cycle)
+
+
+# ---------------------------------------------------------------------------
+# Engine + backend plumbing
+# ---------------------------------------------------------------------------
+
+
+class _NoContentionBackend(Backend):
+    name = "testnocont"
+    deterministic = True
+    supports_latency = False
+    supports_contention = False
+
+    def throughput(self, spec, p, mapping, *, op="read"):
+        return throughput(p, mapping, spec, op=op)
+
+
+@pytest.fixture
+def no_contention_backend():
+    bk = register_backend(_NoContentionBackend())
+    yield bk
+    engine_mod._BACKEND_REGISTRY.pop("testnocont", None)
+
+
+class TestEnginePlumbing:
+    def test_evaluate_contention_matches_model(self):
+        eng = Engine(channel=0, spec=HBM)
+        p = _seq(HBM)
+        got = eng.evaluate_contention(p, num_engines=4)
+        want = contended_throughput(p, get_mapping(HBM), HBM, num_engines=4)
+        assert got.aggregate_gbps == want.aggregate_gbps
+        assert got.bound == want.bound
+
+    def test_backend_without_contention_raises(self, no_contention_backend):
+        eng = Engine(channel=0, spec=HBM, backend="testnocont")
+        with pytest.raises(NotImplementedError, match="contention"):
+            eng.evaluate_contention(_seq(HBM), num_engines=2)
+
+    def test_contention_experiment_on_unsupported_backend(
+            self, no_contention_backend):
+        with pytest.raises(ValueError, match="contention"):
+            run_experiment("fig9_channel_contention", HBM,
+                           backend="testnocont", quick=True)
+
+    def test_sim_backend_flags(self):
+        assert engine_mod.get_backend("sim").supports_contention
+        assert engine_mod.get_backend("pallas").supports_contention
+
+
+class TestSweepPlumbing:
+    def test_contention_points_memoized(self):
+        sweep = Sweep(HBM)
+        p = _seq(HBM, n=1024)
+        for ch in (0, 1, 2, 3):
+            sweep.add_contention(p, num_engines=4, channel=ch)
+        results = sweep.run()
+        assert sweep.stats.points == 4
+        assert sweep.stats.evaluated == 1       # channel-broadcast
+        assert all(r.value.aggregate_gbps == results[0].value.aggregate_gbps
+                   for r in results)
+
+    def test_engine_count_is_part_of_the_key(self):
+        sweep = Sweep(HBM)
+        p = _seq(HBM, n=1024)
+        for n_eng in (1, 2, 4):
+            sweep.add_contention(p, num_engines=n_eng)
+        sweep.run()
+        assert sweep.stats.evaluated == 3
+
+    def test_contention_and_throughput_caches_are_separate(self):
+        sweep = Sweep(HBM)
+        p = _seq(HBM, n=1024)
+        sweep.add(p)
+        sweep.add_contention(p, num_engines=1)
+        results = sweep.run()
+        assert sweep.stats.evaluated == 2
+        # ... but N=1 contention agrees with the plain throughput point.
+        assert results[1].value.aggregate_gbps == results[0].value.gbps
+
+
+# ---------------------------------------------------------------------------
+# Experiment family
+# ---------------------------------------------------------------------------
+
+
+class TestContentionExperiments:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_fig9_scaling_curve(self, spec):
+        res = run_experiment("fig9_channel_contention", spec)
+        assert set(res) == {1, 2, 4, 8}
+        assert res[1]["queueing_delay_cycles"] == 0.0
+        for n_eng in res:
+            per = res[n_eng]
+            assert per["aggregate_gbps"] == pytest.approx(
+                n_eng * per["per_engine_gbps"])
+
+    def test_scaling_sweep_efficiency_normalized(self):
+        res = run_experiment("contention_scaling_sweep", HBM, quick=True)
+        for s, eff in res["efficiency"][1].items():
+            assert eff == pytest.approx(1.0)     # N=1 is its own baseline
+        for n_eng, per_s in res["efficiency"].items():
+            for s, eff in per_s.items():
+                assert 0 < eff <= 1.0 + 1e-9
+
+    def test_write_latency_classes_carry_twr(self):
+        for spec in ALL_SPECS:
+            res = run_experiment("table4_write_latency_classes", spec)
+            assert res["write_recovery"]["cycles"] == int(
+                round(spec.lat_page_miss + spec.ns_to_cycles(spec.t_wr_ns))
+            ) - spec.lat_page_miss
+            assert res["page_hit"]["cycles"] == spec.lat_page_hit

@@ -1,0 +1,240 @@
+"""Per-transaction instrumentation: op-aware capture + width-aware classify.
+
+Covers the two capture-path bugfixes of DESIGN.md §8 — the read-only
+`Engine.capture_latency_list` and the 8-bit saturation overflow that
+collapsed refresh counts for high-latency configurations — plus the
+write/duplex classification family across all four registered specs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DDR3, DDR4, HBM, HBM3, Engine, LatencyModule,
+                        RSTParams, get_mapping, serial_latencies)
+
+ALL_SPECS = [HBM, DDR4, HBM3, DDR3]
+SPEC_IDS = [s.name for s in ALL_SPECS]
+
+
+def _miss_params(spec, n=512):
+    return RSTParams(n=n, b=spec.min_burst, s=128 * 1024, w=0x1000000)
+
+
+def _hit_params(spec, n=512):
+    return RSTParams(n=n, b=spec.min_burst, s=128, w=0x1000000)
+
+
+def _trace(spec, p, op="read", **kw):
+    return serial_latencies(p, get_mapping(spec), spec, op=op, **kw)
+
+
+def _wr_cycles(spec):
+    return spec.ns_to_cycles(spec.t_wr_ns)
+
+
+# ---------------------------------------------------------------------------
+# Module synthesis parameters
+# ---------------------------------------------------------------------------
+
+
+class TestSynthesisParameters:
+    def test_counter_width_selects_dtype(self):
+        t = _trace(HBM, _hit_params(HBM, 64))
+        assert LatencyModule(counter_bits=8).capture(t).dtype == np.uint8
+        assert LatencyModule(counter_bits=12).capture(t).dtype == np.uint16
+        assert LatencyModule(counter_bits=16).capture(t).dtype == np.uint16
+        assert LatencyModule(counter_bits=32).capture(t).dtype == np.uint32
+
+    def test_saturation_point_follows_width(self):
+        assert LatencyModule().saturate == 255          # RTL default
+        assert LatencyModule(counter_bits=10).saturate == 1023
+        assert LatencyModule(counter_bits=16).saturate == 65535
+
+    def test_narrow_counter_saturates_wide_does_not(self):
+        t = _trace(HBM, _hit_params(HBM, 64))
+        t.cycles[3] = 9999.0
+        assert LatencyModule().capture(t)[3] == 255
+        assert LatencyModule(counter_bits=16).capture(t)[3] == 9999
+
+    def test_bad_parameters_rejected(self):
+        with pytest.raises(ValueError, match="depth"):
+            LatencyModule(depth=0)
+        with pytest.raises(ValueError, match="counter_bits"):
+            LatencyModule(counter_bits=0)
+        with pytest.raises(ValueError, match="counter_bits"):
+            LatencyModule(counter_bits=33)
+        with pytest.raises(ValueError, match="unknown op"):
+            LatencyModule(op="erase")
+
+
+# ---------------------------------------------------------------------------
+# Op-aware anchors: write / duplex classification on every registered spec
+# ---------------------------------------------------------------------------
+
+
+class TestOpAwareClassification:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_write_miss_anchor_carries_twr(self, spec):
+        module = LatencyModule(op="write")
+        anchors = module.anchors(spec)
+        assert anchors["hit"] == spec.lat_page_hit
+        assert anchors["closed"] == spec.lat_page_closed
+        assert anchors["miss"] == int(round(spec.lat_page_miss
+                                            + _wr_cycles(spec)))
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_write_capture_classifies_as_misses(self, spec):
+        cap = LatencyModule(op="write").capture(
+            _trace(spec, _miss_params(spec), op="write"))
+        counts = LatencyModule(op="write").classify(cap, spec)
+        assert counts["miss"] > 0.8 * len(cap)
+        cats = LatencyModule(op="write").category_latencies(cap, spec)
+        assert cats["miss"] == int(round(spec.lat_page_miss
+                                         + _wr_cycles(spec)))
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_duplex_capture_classifies_as_misses(self, spec):
+        # A duplex capture list holds both directions' samples; the
+        # tWR/2 anchor sits between them, so both bin as page-miss.
+        rd = LatencyModule(op="read").capture(
+            _trace(spec, _miss_params(spec), op="read"))
+        wr = LatencyModule(op="write").capture(
+            _trace(spec, _miss_params(spec), op="write"))
+        mixed = np.concatenate([rd, wr])
+        counts = LatencyModule(op="duplex").classify(mixed, spec)
+        assert counts["miss"] > 0.8 * len(mixed)
+        assert counts["refresh"] < 0.2 * len(mixed)
+
+    def test_read_anchors_misbin_twr_misses_on_hbm3(self):
+        # Why op-awareness matters: HBM3's tWR (11 cycles) exceeds the
+        # 8-cycle refresh margin, so a write capture classified with READ
+        # anchors mis-bins nearly every tWR-bearing miss as refresh.
+        cap = LatencyModule(op="write").capture(
+            _trace(HBM3, _miss_params(HBM3), op="write"))
+        wrong = LatencyModule(op="read").classify(cap, HBM3)
+        right = LatencyModule(op="write").classify(cap, HBM3)
+        assert wrong["refresh"] > 0.8 * len(cap)
+        assert right["miss"] > 0.8 * len(cap)
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_write_hits_keep_read_anchors(self, spec):
+        # Page hits/closed never precharge: same anchors in both modes.
+        cap = LatencyModule(op="write").capture(
+            _trace(spec, _hit_params(spec), op="write"))
+        cats = LatencyModule(op="write").category_latencies(cap, spec)
+        assert cats["hit"] == spec.lat_page_hit
+        assert cats["closed"] == spec.lat_page_closed
+
+
+# ---------------------------------------------------------------------------
+# Saturation-overflow regression (the 8-bit `miss + 8` threshold bug)
+# ---------------------------------------------------------------------------
+
+
+class TestSaturationRegression:
+    # A distant Table-VI crossing on the modeled HBM3 fabric, inflated the
+    # way a contended capture is (switch penalty + crossing distance +
+    # queueing delay ~ 150 cycles): the write-miss anchor lands at
+    # round(92 + 150 + 11.2) = 253, within 8 cycles of the 8-bit ceiling.
+    EXTRA = 150
+
+    def _trace(self):
+        return _trace(HBM3, _miss_params(HBM3, n=1024), op="write",
+                      switch_enabled=True,
+                      switch_extra_cycles=self.EXTRA - HBM3.switch_penalty)
+
+    def test_old_threshold_was_unreachable(self):
+        # The regression itself: every refresh-stalled sample saturates at
+        # 255, but the unclamped threshold miss + 8 = 261 is unreachable
+        # by an 8-bit register — the old classifier counted zero refresh.
+        cap8 = LatencyModule(op="write").capture(self._trace())
+        anchors = LatencyModule(op="write").anchors(HBM3, self.EXTRA)
+        assert anchors["miss"] == 253
+        assert int(cap8.max()) == 255
+        assert np.count_nonzero(cap8 > 253 + 8) == 0   # old formula: 0 hits
+
+    def test_clamped_threshold_recovers_refresh_counts(self):
+        trace = self._trace()
+        assert trace.refresh_hits[:1024].sum() > 10    # plenty of stalls
+        module8 = LatencyModule(op="write")
+        counts8 = module8.classify(module8.capture(trace), HBM3, self.EXTRA)
+        assert counts8["refresh"] > 10                 # no longer collapsed
+        assert sum(counts8.values()) == 1024
+        # Saturated samples bin as refresh, not as phantom misses.
+        cap8 = module8.capture(trace)
+        assert counts8["refresh"] >= np.count_nonzero(cap8 == 255)
+
+    def test_wider_counter_removes_saturation_entirely(self):
+        trace = self._trace()
+        module16 = LatencyModule(op="write", counter_bits=16)
+        cap16 = module16.capture(trace)
+        assert int(cap16.max()) > 255                  # nothing saturates
+        counts16 = module16.classify(cap16, HBM3, self.EXTRA)
+        # 16-bit classification matches the trace's own refresh bookkeeping
+        # for every stall big enough to clear the 8-cycle margin.
+        big_stalls = np.count_nonzero(np.round(trace.cycles[:1024]) > 261)
+        assert counts16["refresh"] == big_stalls > 10
+        # The narrow counter detects at least as many (its threshold sits
+        # lower, at the clamp), never fewer.
+        module8 = LatencyModule(op="write")
+        counts8 = module8.classify(module8.capture(trace), HBM3, self.EXTRA)
+        assert counts8["refresh"] >= counts16["refresh"]
+
+    def test_saturated_miss_anchor_degenerates_gracefully(self):
+        # When the miss anchor itself saturates, refresh and miss are
+        # indistinguishable: everything bins by nearest anchor, none as
+        # refresh (the documented cue to widen counter_bits).
+        module = LatencyModule(op="write")
+        anchors = module.anchors(HBM3, 165)   # only the miss anchor clamps
+        assert anchors["miss"] == module.saturate
+        assert anchors["closed"] < module.saturate
+        cap = np.full(16, 255, dtype=np.uint8)
+        counts = module.classify(cap, HBM3, 165)
+        assert counts["refresh"] == 0
+        assert counts["miss"] == 16
+
+
+# ---------------------------------------------------------------------------
+# Engine capture routing (the read-only capture-path bugfix)
+# ---------------------------------------------------------------------------
+
+
+class TestEngineCaptureRouting:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_write_capture_distinct_from_read(self, spec):
+        # ISSUE acceptance: capture_latency_list(op="write") returns
+        # tWR-bearing latencies distinct from reads on all four specs.
+        eng = Engine(channel=0, spec=spec)
+        p = _miss_params(spec)
+        eng.configure_read(p)
+        eng.configure_write(p)
+        rd = eng.capture_latency_list(op="read")
+        wr = eng.capture_latency_list(op="write")
+        assert not np.array_equal(rd, wr)
+        rd_cats = LatencyModule(op="read").category_latencies(rd, spec)
+        wr_cats = LatencyModule(op="write").category_latencies(wr, spec)
+        assert wr_cats["miss"] - rd_cats["miss"] == int(
+            round(spec.lat_page_miss + _wr_cycles(spec))) - spec.lat_page_miss
+
+    def test_write_capture_uses_the_write_register(self):
+        # Different RST tuples in the two registers: op selects which one
+        # drives the run (the old path always read the read register).
+        eng = Engine(channel=0, spec=HBM)
+        eng.configure_read(_hit_params(HBM))     # hits
+        eng.configure_write(_miss_params(HBM))   # tWR-bearing misses
+        wr = eng.capture_latency_list(op="write")
+        cats = LatencyModule(op="write").category_latencies(wr, HBM)
+        assert cats["miss"] == int(round(HBM.lat_page_miss + _wr_cycles(HBM)))
+        assert cats["hit"] == -1                 # no hits: not the read reg
+
+    def test_capture_synthesis_parameters(self):
+        eng = Engine(channel=0, spec=HBM)
+        eng.configure_read(_hit_params(HBM, n=2048))
+        cap = eng.capture_latency_list(depth=100, counter_bits=16)
+        assert len(cap) == 100
+        assert cap.dtype == np.uint16
+
+    def test_capture_rejects_duplex(self):
+        eng = Engine(channel=0, spec=HBM)
+        eng.configure_read(_hit_params(HBM))
+        with pytest.raises(ValueError, match="serial"):
+            eng.capture_latency_list(op="duplex")

@@ -60,7 +60,7 @@ class TestLatencyModule:
 
     def test_classify_counts(self):
         cap = LatencyModule().capture(self._trace(1024))
-        counts = LatencyModule.classify(cap, HBM)
+        counts = LatencyModule().classify(cap, HBM)
         assert counts["hit"] > counts["miss"]
         assert sum(counts.values()) == len(cap)
 

@@ -162,6 +162,6 @@ class TestLatencyDisabledVsEnabled:
         eng.configure_read(RSTParams(n=512, b=32, s=128, w=0x1000000))
         off = LatencyModule().capture(eng.read_latency(switch_enabled=False))
         on = LatencyModule().capture(eng.read_latency(switch_enabled=True))
-        cats_off = LatencyModule.category_latencies(off, HBM)
-        cats_on = LatencyModule.category_latencies(on, HBM, extra_cycles=7)
+        cats_off = LatencyModule().category_latencies(off, HBM)
+        cats_on = LatencyModule().category_latencies(on, HBM, extra_cycles=7)
         assert cats_on["hit"] == cats_off["hit"] + 7

@@ -47,14 +47,14 @@ class TestIdleLatency:
         p = RSTParams(n=1024, b=spec.min_burst, s=128, w=0x1000000)
         trace = serial_read_latencies(p, get_mapping(spec), spec)
         cap = LatencyModule().capture(trace)
-        cats = LatencyModule.category_latencies(cap, spec)
+        cats = LatencyModule().category_latencies(cap, spec)
         assert cats["hit"] == hit
         assert cats["closed"] == closed
         # S=128K probe: every transaction misses.
         p = RSTParams(n=1024, b=spec.min_burst, s=128 * 1024, w=0x1000000)
         trace = serial_read_latencies(p, get_mapping(spec), spec)
         cap = LatencyModule().capture(trace)
-        cats = LatencyModule.category_latencies(cap, spec)
+        cats = LatencyModule().category_latencies(cap, spec)
         assert cats["miss"] == miss
 
     def test_hbm_latency_exceeds_ddr4_by_about_30ns(self):
@@ -205,7 +205,7 @@ class TestSerialWriteLatency:
         p = RSTParams(n=512, b=32, s=128, w=0x1000000)
         wr = serial_latencies(p, get_mapping(HBM), HBM, op="write")
         cap = LatencyModule().capture(wr)
-        cats = LatencyModule.category_latencies(cap, HBM)
+        cats = LatencyModule().category_latencies(cap, HBM)
         assert cats["hit"] == HBM.lat_page_hit
         assert cats["closed"] == HBM.lat_page_closed
 

@@ -119,6 +119,67 @@ def test_throughput_parity(spec, policy, kw, op):
                                                   rel=1e-9), bound
 
 
+CONTENTION_CASES = [
+    # (id, spec, policy, params kwargs)
+    ("hbm_seq_shared_port", HBM, None, dict(n=2048, b=32, s=32, w=0x1000000)),
+    ("hbm_strided", HBM, None, dict(n=2048, b=32, s=1024, w=0x1000000)),
+    ("hbm_rbc_runs", HBM, "RBC", dict(n=2048, b=32, s=2048, w=0x1000000)),
+    ("ddr4_seq", DDR4, None, dict(n=2048, b=64, s=64, w=0x1000000)),
+    ("ddr4_far_stride", DDR4, None, dict(n=2048, b=64, s=4096, w=0x1000000)),
+    ("hbm_multi_cmd_burst", HBM, None, dict(n=1024, b=256, s=2048,
+                                            w=0x1000000)),
+]
+
+
+@pytest.mark.parametrize("num_engines", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("spec,policy,kw",
+                         [c[1:] for c in CONTENTION_CASES],
+                         ids=[c[0] for c in CONTENTION_CASES])
+def test_contended_throughput_parity(spec, policy, kw, num_engines):
+    """The vectorized contention model matches the loop oracle's explicit
+    round-robin interleave + per-window dict loops at every engine count."""
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    got = vec.contended_throughput(p, m, spec, num_engines=num_engines)
+    want = ref.contended_throughput(p, m, spec, num_engines=num_engines)
+    assert got.aggregate_gbps == pytest.approx(want.aggregate_gbps, rel=1e-9)
+    assert got.bound == want.bound
+    assert got.queueing_delay_cycles == pytest.approx(
+        want.queueing_delay_cycles, rel=1e-9)
+    assert got.detail["total_acts"] == want.detail["total_acts"]
+    assert got.detail["txns"] == want.detail["txns"]
+    for bound in ("bus/ccd", "bank", "faw"):
+        assert got.detail[bound] == pytest.approx(want.detail[bound],
+                                                  rel=1e-9), bound
+
+
+@pytest.mark.parametrize("op", ["read", "write", "duplex"])
+@pytest.mark.parametrize("spec,policy,kw",
+                         [c[1:] for c in CONTENTION_CASES],
+                         ids=[c[0] for c in CONTENTION_CASES])
+def test_contention_n1_bit_identical_to_single_engine(spec, policy, kw, op):
+    """The ISSUE acceptance bar: with one engine the contention path is the
+    single-engine path — bit-identical gbps, same bound, zero queueing."""
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    single = vec.throughput(p, m, spec, op=op)
+    cont = vec.contended_throughput(p, m, spec, num_engines=1, op=op)
+    assert cont.aggregate_gbps == single.gbps          # bit-exact, not approx
+    assert cont.per_engine_gbps == single.gbps
+    assert cont.bound == single.bound
+    assert cont.queueing_delay_cycles == 0.0
+    for bound in ("bus/ccd", "bank", "faw"):
+        assert cont.detail[bound] == single.detail[bound]
+
+
+def test_contended_rejects_bad_engine_count():
+    p = RSTParams(n=64, b=32, s=32, w=0x100000)
+    with pytest.raises(ValueError, match="num_engines"):
+        vec.contended_throughput(p, get_mapping(HBM), HBM, num_engines=0)
+    with pytest.raises(ValueError, match="num_engines"):
+        ref.contended_throughput(p, get_mapping(HBM), HBM, num_engines=0)
+
+
 def test_derived_quantities_within_one_percent():
     """The ISSUE acceptance bar: headline derived numbers within 1% of the
     reference across the Table IV/V and Fig. 6/7 operating points."""

@@ -197,3 +197,57 @@ class TestOpsWrappers:
         assert ops.tile_bytes(jnp.float32) == 4096
         assert ops.tile_bytes(jnp.bfloat16) == 2048
         assert ops.tile_bytes(jnp.int8, burst_rows=16) == 2048
+
+
+class TestContendedKernel:
+    """Concurrent-access engines (rst_contend.py) vs a numpy replay."""
+
+    def _oracle(self, buf, stride, wset, n, num_engines, burst_rows=8):
+        expect = np.zeros((burst_rows, LANE), dtype=np.float64)
+        b = np.asarray(buf, dtype=np.float64)
+        for k in range(num_engines):
+            for t in range(n):
+                blk = k * wset + (t * stride) % wset
+                expect += b[blk * burst_rows:(blk + 1) * burst_rows, :]
+        return expect.astype(np.float32)
+
+    @pytest.mark.parametrize("num_engines", [1, 2, 3, 4])
+    def test_checksum_vs_oracle(self, num_engines):
+        stride, wset, n = 2, 8, 12
+        buf = _mk(num_engines * wset * 8, jnp.float32, seed=3)
+        p = RSTParams(n=n, b=4096, s=stride * 4096, w=wset * 4096)
+        s = ops.measure_contended_bandwidth(p, num_engines=num_engines,
+                                            grid_txns=16)
+        np.testing.assert_allclose(
+            s.checksum,
+            self._oracle(ops.make_working_buffer(
+                p, jnp.float32, num_engines=num_engines),
+                stride, wset, n, num_engines),
+            rtol=1e-5)
+        assert s.bytes_moved == num_engines * n * 4096
+
+    def test_single_engine_matches_read_kernel(self):
+        # N=1 must degenerate to the plain read engine's checksum.
+        p = RSTParams(n=9, b=4096, s=8192, w=16 * 4096)
+        cont = ops.measure_contended_bandwidth(p, num_engines=1)
+        read = ops.measure_read_bandwidth(p)
+        np.testing.assert_allclose(cont.checksum, read.checksum, rtol=1e-6)
+        assert cont.bytes_moved == read.bytes_moved
+
+    def test_wired_into_pallas_backend(self):
+        from repro.core import HBM, get_backend, get_mapping
+        p = RSTParams(n=8, b=4096, s=4096, w=16 * 4096)
+        res = get_backend("pallas").contended_throughput(
+            HBM, p, get_mapping(HBM), num_engines=2)
+        assert res.num_engines == 2
+        assert res.bound == "measured"
+        assert res.detail["bytes"] == 2 * 8 * 4096
+        assert np.isnan(res.queueing_delay_cycles)
+        with pytest.raises(ValueError, match="read"):
+            get_backend("pallas").contended_throughput(
+                HBM, p, get_mapping(HBM), num_engines=2, op="write")
+
+    def test_rejects_bad_engine_count(self):
+        p = RSTParams(n=8, b=4096, s=4096, w=16 * 4096)
+        with pytest.raises(ValueError, match="num_engines"):
+            ops.measure_contended_bandwidth(p, num_engines=0)
