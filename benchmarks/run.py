@@ -15,12 +15,17 @@ sim-backend speedup (CI writes ``BENCH_ci.json`` on every push).
 ``--experiments name1,name2`` restricts the registry suite (unknown names
 fail with the registered list).  ``--engines N`` replaces the contention
 experiments' engine-count ladder with powers of two up to N.
+``--arbitration POLICY`` / ``--burst B`` select the shared-port grant
+granularity (round_robin / burst / exclusive, DESIGN.md §9) for every
+experiment that exposes the axis (CI runs one burst-grant ladder —
+``--engines 4 --arbitration burst --burst 8`` — on every push).
 ``--catalog [PATH]`` emits the registry-generated experiment-catalog
 table instead of benchmarking — to stdout, or spliced into README.md's
 catalog markers.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
-         [--experiments NAMES] [--engines N] [--catalog [PATH]]
+         [--experiments NAMES] [--engines N]
+         [--arbitration POLICY] [--burst B] [--catalog [PATH]]
 """
 from __future__ import annotations
 
@@ -78,7 +83,8 @@ def engine_ladder(max_engines):
     return tuple(ladder)
 
 
-def bench_experiments(quick=False, experiments=None, engines=None):
+def bench_experiments(quick=False, experiments=None, engines=None,
+                      arbitration=None, burst=None):
     """One row per (registered experiment, applicable spec).
 
     All grid/derive/summary logic lives on the Experiment objects
@@ -87,7 +93,9 @@ def bench_experiments(quick=False, experiments=None, engines=None):
     multi-spec ones are suffixed with the spec, matching the historical
     row names so BENCH_*.json trajectories stay comparable.  `engines`
     (the --engines flag) replaces the engine-count ladder of the
-    contention experiments — every experiment with an "engines" option.
+    contention experiments — every experiment with an "engines" option;
+    `arbitration`/`burst` (--arbitration/--burst) select the shared-port
+    grant granularity for every experiment exposing that axis.
     """
     from repro.core import spec_by_name
     from repro.core.experiments import run_experiment
@@ -101,6 +109,15 @@ def bench_experiments(quick=False, experiments=None, engines=None):
         overrides = ({"engines": engine_ladder(engines)}
                      if engines is not None and "engines" in exp.defaults
                      else {})
+        if arbitration is not None and "arbitration" in exp.defaults:
+            overrides["arbitration"] = arbitration
+            if arbitration != "burst" and "burst_beats" in exp.defaults:
+                # round_robin/exclusive fix the grant size; leaving an
+                # experiment's default burst_beats (e.g. the contended-
+                # latency classes' 8) in place would fail validation.
+                overrides["burst_beats"] = 1
+        if burst is not None and "burst_beats" in exp.defaults:
+            overrides["burst_beats"] = burst
         for spec in available:
             res, dt = _timed(lambda: run_experiment(
                 exp, spec, quick=quick, bench=True, **overrides))
@@ -225,6 +242,14 @@ def main() -> None:
                     help="override the engine-count ladder of the "
                          "contention experiments with powers of two up to "
                          "N (e.g. 16 -> 1,2,4,8,16)")
+    ap.add_argument("--arbitration", metavar="POLICY", default=None,
+                    choices=("round_robin", "burst", "exclusive"),
+                    help="shared-port arbitration granularity for every "
+                         "experiment exposing the axis (DESIGN.md §9): "
+                         "round_robin, burst, or exclusive")
+    ap.add_argument("--burst", type=int, metavar="B", default=None,
+                    help="beats per arbitration grant (with "
+                         "--arbitration burst)")
     ap.add_argument("--catalog", metavar="PATH", nargs="?", const="-",
                     default=None,
                     help="emit the registry-generated experiment catalog "
@@ -233,6 +258,11 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     if args.engines is not None:
         engine_ladder(args.engines)   # validate up front, not per suite
+    if args.burst is not None and args.burst < 1:
+        ap.error(f"--burst must be >= 1, got {args.burst}")
+    if args.burst is not None and args.arbitration != "burst":
+        ap.error("--burst only applies with --arbitration burst "
+                 "(round_robin and exclusive fix the grant size)")
     if args.catalog is not None:
         emit_catalog(args.catalog)
         return
@@ -250,7 +280,8 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     suites = [
-        lambda: bench_experiments(q, args.experiments, args.engines),
+        lambda: bench_experiments(q, args.experiments, args.engines,
+                                  args.arbitration, args.burst),
         lambda: bench_sweep_grid(q),
         bench_table3_resources,
         lambda: bench_tpu_rst_kernel(q),

@@ -7,8 +7,12 @@ Public surface:
                                       register_policies)
   serial_read_latencies, throughput — the calibrated timing model
   contended_throughput              — N engines sharing one channel port
+                                      (ARBITRATION_POLICIES grant axis)
   Engine, Backend                   — engines + pluggable measurement
-                                      backends (register_backend)
+                                      backends (register_backend);
+                                      PLACEMENTS routes cross-channel
+                                      contention, UnsupportedCapability
+                                      marks missing backend abilities
   MemorySpec, register_spec         — registrable memory systems; HBM/DDR4
                                       (measured) + HBM3/DDR3 (modeled)
   Experiment, run_experiment        — declarative paper-artifact registry
@@ -29,8 +33,9 @@ from repro.core.channels import (CrossingLatencyTable, DDR4Topology,
                                  HBMTopology, SwitchTopology,
                                  available_topologies, flat_topology,
                                  register_topology, topology_for)
-from repro.core.engine import (Backend, Engine, available_backends,
-                               get_backend, register_backend)
+from repro.core.engine import (Backend, Engine, UnsupportedCapability,
+                               available_backends, get_backend,
+                               register_backend)
 from repro.core.experiments import (Experiment, all_experiments,
                                     experiments_for, get_experiment,
                                     register_experiment, run_experiment)
@@ -42,9 +47,10 @@ from repro.core.oracle import AccessPattern, MemoryOracle
 from repro.core.params import EngineRegisters, RSTParams
 from repro.core.rst import addresses_jnp, addresses_np, block_params
 from repro.core.sweep import Sweep, SweepPoint, SweepResult
-from repro.core.switch import SwitchModel
-from repro.core.timing_model import (ContentionResult, LatencyTrace,
-                                     ThroughputResult, contended_throughput,
+from repro.core.switch import PLACEMENTS, SwitchModel
+from repro.core.timing_model import (ARBITRATION_POLICIES, ContentionResult,
+                                     LatencyTrace, ThroughputResult,
+                                     contended_throughput,
                                      refresh_interval_estimate,
                                      serial_latencies, serial_read_latencies,
                                      throughput)
@@ -56,8 +62,8 @@ __all__ = [
     "CrossingLatencyTable", "DDR4Topology", "HBMTopology", "SwitchTopology",
     "available_topologies", "flat_topology", "register_topology",
     "topology_for",
-    "Backend", "Engine", "available_backends", "get_backend",
-    "register_backend",
+    "Backend", "Engine", "UnsupportedCapability", "available_backends",
+    "get_backend", "register_backend",
     "Experiment", "all_experiments", "experiments_for", "get_experiment",
     "register_experiment", "run_experiment",
     "DDR3", "DDR4", "HBM", "HBM3", "TPU_V5E", "ChipSpec", "MemorySpec",
@@ -67,6 +73,7 @@ __all__ = [
     "addresses_jnp", "addresses_np", "block_params",
     "Sweep", "SweepPoint", "SweepResult",
     "SwitchModel", "LatencyTrace", "ThroughputResult", "ContentionResult",
+    "ARBITRATION_POLICIES", "PLACEMENTS",
     "contended_throughput", "refresh_interval_estimate", "serial_latencies",
     "serial_read_latencies", "throughput",
 ]

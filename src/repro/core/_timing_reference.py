@@ -14,6 +14,14 @@ takes the direction overheads (per-window turnaround, per-activation tWR)
 from the shared `_direction_overheads` table and applies them inside the
 per-window loops.
 
+The arbitration axis (DESIGN.md §9) extends `contended_throughput` the
+same way: the grant-interleaved stream is built with explicit per-grant /
+per-engine / per-beat Python loops (grant size from the shared
+`_grant_beats` table: 1 for round robin, `burst_beats` for burst grants,
+the whole stream for exclusive), and `serial_contended_latencies` applies
+the per-transaction queueing-delay feedback with an explicit per-
+transaction loop.
+
 Do not optimize this module: its value is being slow and obviously correct.
 """
 from __future__ import annotations
@@ -29,7 +37,7 @@ from repro.core.timing_model import (_MAX_EXPAND, _REORDER_WINDOW,
                                      PAGE_CLOSED, PAGE_HIT, PAGE_MISS,
                                      ContentionResult, LatencyTrace,
                                      ThroughputResult, _direction_overheads,
-                                     _expand_addresses)
+                                     _expand_addresses, _grant_beats)
 
 
 def serial_read_latencies(
@@ -235,16 +243,20 @@ def contended_throughput(
     *,
     num_engines: int = 1,
     op: str = "read",
+    arbitration: str = "round_robin",
+    burst_beats: int = 1,
 ) -> ContentionResult:
-    """Reference contention model: explicit per-engine/per-round loops.
+    """Reference contention model: explicit per-grant/per-engine loops.
 
-    Builds the round-robin interleaved command stream one transaction at
-    a time (engine k's t-th transaction lands at position t*N + k, over
-    its own W-byte window at A + k*W), then replays the per-window dict
-    loops of :func:`throughput` over the shared stream.  The vectorized
-    `timing_model.contended_throughput` must match this to float-
-    associativity tolerance, and must be bit-identical to the
-    single-engine read path when num_engines == 1.
+    Builds the grant-interleaved command stream one transaction at a time
+    — grant round by grant round, each engine issuing its grant's beats
+    consecutively over its own W-byte window at A + k*W (round robin is
+    the one-beat grant, exclusive the whole-stream grant) — then replays
+    the per-window dict loops of :func:`throughput` over the shared
+    stream.  The vectorized `timing_model.contended_throughput` must
+    match this to float-associativity tolerance at every (policy,
+    burst_beats, N), and must be bit-identical to the single-engine read
+    path when num_engines == 1.
     """
     if num_engines < 1:
         raise ValueError(f"num_engines must be >= 1, got {num_engines}")
@@ -255,12 +267,17 @@ def contended_throughput(
     max_txns = max(16, (_MAX_EXPAND // cmds_per_txn) // num_engines)
     if len(txn) > max_txns:
         txn = txn[:max_txns]
+    bb = _grant_beats(arbitration, burst_beats, len(txn))
     addr_list = []
-    for t in range(len(txn)):                 # round-robin arbitration
-        for k in range(num_engines):          # one txn per engine per round
-            base = int(txn[t]) + k * p.w
-            for c in range(cmds_per_txn):     # burst -> column commands
-                addr_list.append(base + c * spec.bus_bytes_per_cycle)
+    pos = 0
+    while pos < len(txn):                     # one arbitration grant round
+        hi = min(pos + bb, len(txn))
+        for k in range(num_engines):          # rotate the grant over engines
+            for t in range(pos, hi):          # bb consecutive beats
+                base = int(txn[t]) + k * p.w
+                for c in range(cmds_per_txn):  # burst -> column commands
+                    addr_list.append(base + c * spec.bus_bytes_per_cycle)
+        pos = hi
     addrs = np.asarray(addr_list, dtype=np.int64)
     n = len(addrs)
     dec = mapping.decode(addrs)
@@ -316,7 +333,16 @@ def contended_throughput(
     gbps = min(gbps, spec.peak_channel_gbps)
 
     mean_service = steady_cycles / total_txns if total_txns else 0.0
-    queueing = (num_engines - 1) * mean_service
+    # Per-policy queueing, spelled out (mirrors timing_model._queueing_terms):
+    # round robin / burst share the per-rotation mean, burst concentrates it
+    # onto grant heads; exclusive pays half the whole-stream rotation.
+    if arbitration == "exclusive":
+        stream = len(txn) * mean_service
+        queueing = 0.5 * (num_engines - 1) * stream
+        head_wait = (num_engines - 1) * stream
+    else:
+        queueing = (num_engines - 1) * mean_service
+        head_wait = (num_engines - 1) * bb * mean_service
 
     return ContentionResult(
         num_engines=num_engines,
@@ -328,5 +354,52 @@ def contended_throughput(
                 "txns_per_engine": float(len(txn)),
                 "total_acts": float(total_acts),
                 "mean_service_cycles": mean_service,
+                "grant_head_wait_cycles": head_wait,
+                "grant_beats": float(bb),
                 "efficiency": eff},
+        arbitration=arbitration,
+        burst_beats=burst_beats,
     )
+
+
+def serial_contended_latencies(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    num_engines: int,
+    arbitration: str = "round_robin",
+    burst_beats: int = 1,
+    op: str = "read",
+    switch_enabled: bool = False,
+    switch_extra_cycles: int = 0,
+) -> LatencyTrace:
+    """Reference contended serial latencies: per-transaction delay loop.
+
+    Runs the uncontended reference loop for `op`, then walks the trace one
+    transaction at a time adding the queueing-delay feedback (DESIGN.md
+    §9): every transaction under round robin, each grant-head transaction
+    under burst grants, one up-front whole-stream wait under exclusive
+    grants.  `timing_model.serial_latencies(num_engines=N, ...)` must be
+    bit-exact against this at every (policy, burst_beats, N).
+    """
+    base_fn = (serial_write_latencies if op == "write"
+               else serial_read_latencies)
+    base = base_fn(p, mapping, spec, switch_enabled=switch_enabled,
+                   switch_extra_cycles=switch_extra_cycles)
+    n = len(base.cycles)
+    bb = _grant_beats(arbitration, burst_beats, n)
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    if num_engines == 1 or n == 0:
+        return base
+    lat = base.cycles.copy()
+    if arbitration == "exclusive":
+        lat[0] = lat[0] + 0.5 * (num_engines - 1) * float(np.sum(base.cycles))
+    else:
+        mean_service = float(np.mean(base.cycles))
+        for i in range(n):
+            if i % bb == 0:                   # grant-head transaction
+                lat[i] = lat[i] + (num_engines - 1) * bb * mean_service
+    return LatencyTrace(cycles=lat, states=base.states,
+                        refresh_hits=base.refresh_hits)

@@ -12,6 +12,14 @@ so the fabric is a *parameter* here, not a constant:
   and computes Table-VI-style distance latencies for it.
 * :class:`CrossingLatencyTable` holds the measured/modeled extra cycles for
   crossing mini-switches (same-stack table + cross-stack base/step).
+* Two *capacity* terms bound multi-engine aggregates (DESIGN.md §9):
+  ``switch_agg_gbps`` is the mini-switch's internal aggregate datapath
+  (a full crossbar on the U280 — present but non-binding, matching the
+  non-blocking single-requester datapath of Fig. 8), and ``lateral_gbps``
+  is the bridge between adjacent mini-switches that cross-switch traffic
+  serializes on — the term that collapses cross-switch multi-engine
+  layouts to a fraction of nominal (Choi et al. 2020).  ``None`` means
+  unconstrained (flat DDR fabrics have neither).
 * A registry attaches one topology to each registered
   :class:`~repro.core.hwspec.MemorySpec` by name
   (:func:`register_topology` / :func:`topology_for`), mirroring the spec and
@@ -26,7 +34,7 @@ the DDR4/DDR3 controllers (no switch: every engine owns its channel).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.hwspec import HBM, MemorySpec
 
@@ -76,6 +84,16 @@ class SwitchTopology:
     fully implemented (all of its AXI channels see identical latency, paper
     observation 2), and the AXI-facing view is 1:1 — AXI channel *i* owns
     pseudo channel *i* when the switch is off (Sec. II).
+
+    ``switch_agg_gbps`` / ``lateral_gbps`` are the fabric's two capacity
+    terms (DESIGN.md §9): the per-mini-switch aggregate datapath
+    bandwidth, and the bandwidth of the lateral bridge cross-switch
+    traffic takes to the neighbouring mini-switch.  ``None`` leaves a
+    term unconstrained (flat fabrics; or a fabric whose crossbar is
+    provably never the bottleneck).  Single-requester throughput is never
+    capped by either (Fig. 8's non-blocking datapath) — the terms only
+    bound *multi-engine aggregates* in
+    ``Engine.evaluate_contention(placement=...)``.
     """
 
     name: str
@@ -84,6 +102,8 @@ class SwitchTopology:
     axi_per_switch: int
     crossing: CrossingLatencyTable
     capacity_bytes: int = 8 * 1024**3
+    switch_agg_gbps: Optional[float] = None
+    lateral_gbps: Optional[float] = None
 
     def __post_init__(self):
         if self.num_stacks <= 0 or self.mini_switches <= 0 \
@@ -102,6 +122,18 @@ class SwitchTopology:
                 f"{self.switches_per_stack} mini-switches")
         if self.capacity_bytes <= 0:
             raise ValueError(f"{self.name}: capacity_bytes must be positive")
+        for field in ("switch_agg_gbps", "lateral_gbps"):
+            cap = getattr(self, field)
+            if cap is not None and cap <= 0:
+                raise ValueError(
+                    f"{self.name}: {field} must be positive when set, "
+                    f"got {cap}")
+        if (self.switch_agg_gbps is not None and self.lateral_gbps is not None
+                and self.lateral_gbps > self.switch_agg_gbps):
+            raise ValueError(
+                f"{self.name}: the lateral bridge ({self.lateral_gbps} GB/s) "
+                f"cannot outrun the mini-switch aggregate "
+                f"({self.switch_agg_gbps} GB/s) it feeds")
 
     # -- geometry ------------------------------------------------------------
     @property
@@ -228,7 +260,12 @@ def topology_for(spec: MemorySpec) -> SwitchTopology:
 
 
 # The U280's measured crossbar (paper Sec. II / Table VI): 2 HBM2 stacks,
-# 8 mini-switches x 4 AXI channels, 8 GB total.
+# 8 mini-switches x 4 AXI channels, 8 GB total.  Capacity terms: each
+# mini-switch is a full 4x4 crossbar (4 x 14.4 GB/s wire rate — present
+# but non-binding for any legal traffic, matching Fig. 8's non-blocking
+# datapath), while the lateral bridge to the adjacent mini-switch is one
+# channel-width link (14.4 GB/s) that all cross-switch masters share —
+# the collapse Choi et al. 2020 measure for switch-crossing placements.
 U280_CROSSBAR = register_topology("hbm", SwitchTopology(
     name="u280_8x4_crossbar",
     num_stacks=2,
@@ -237,6 +274,8 @@ U280_CROSSBAR = register_topology("hbm", SwitchTopology(
     crossing=CrossingLatencyTable(same_stack=(0, 1, 3, 5),
                                   cross_stack_base=16, cross_stack_step=2),
     capacity_bytes=8 * 1024**3,
+    switch_agg_gbps=57.6,     # 4 AXI x 14.4 GB/s: full crossbar
+    lateral_gbps=14.4,        # one channel-width bridge per neighbour
 ))
 
 # Modeled HBM3-class fabric (Sec. VII generalization target): an HBM3 stack
@@ -246,6 +285,11 @@ U280_CROSSBAR = register_topology("hbm", SwitchTopology(
 # the higher controller clock): a linear same-stack ladder and a smaller
 # stack-crossing base than the U280's.  Modeled, not measured — like the
 # HBM3 MemorySpec it attaches to.
+# Capacity terms (modeled): the finer 2-channel mini-switches share one
+# internal datapath at 1.5x channel rate — 38.4 GB/s, *below* the 51.2
+# GB/s two saturated ports would need, so the same-switch aggregate term
+# binds on this fabric (unlike the U280's full crossbar) — and the
+# narrower lateral bridges carry half a channel (12.8 GB/s).
 HBM3_FABRIC = register_topology("hbm3", SwitchTopology(
     name="hbm3_2x8_fabric",
     num_stacks=2,
@@ -254,6 +298,8 @@ HBM3_FABRIC = register_topology("hbm3", SwitchTopology(
     crossing=CrossingLatencyTable(same_stack=(0, 1, 2, 3, 4, 5, 6, 7),
                                   cross_stack_base=12, cross_stack_step=1),
     capacity_bytes=32 * 1024**3,
+    switch_agg_gbps=38.4,     # shared internal datapath, 1.5x channel rate
+    lateral_gbps=12.8,        # half-channel bridges between fine switches
 ))
 
 # Flat DDR-style fabrics: the U280 DDR4 controller and the VCU709-class

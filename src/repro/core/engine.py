@@ -34,7 +34,38 @@ from repro.core.hwspec import HBM, MemorySpec
 from repro.core.latency import (DEFAULT_COUNTER_BITS, DEFAULT_DEPTH,
                                 LatencyModule)
 from repro.core.params import EngineRegisters, RSTParams
-from repro.core.switch import SwitchModel
+from repro.core.switch import PLACEMENTS, SwitchModel
+
+
+class UnsupportedCapability(NotImplementedError):
+    """A backend lacks the capability a measurement needs.
+
+    Raised (with the backend name and the requested op in the message)
+    instead of silently substituting a different measurement — e.g. a
+    serial *write*-latency capture on a backend without per-transaction
+    timers must not quietly return read anchors.  Subclasses
+    NotImplementedError so pre-existing handlers keep working.
+    """
+
+
+def _contention_kwargs(num_engines: int, arbitration: str,
+                       burst_beats: int) -> dict:
+    """The arbitration-axis kwargs, only when they deviate from the
+    pre-§9 defaults — so backends registered against the older protocol
+    signature keep working until a caller actually engages the axes."""
+    if (num_engines, arbitration, burst_beats) == (1, "round_robin", 1):
+        return {}
+    return {"num_engines": num_engines, "arbitration": arbitration,
+            "burst_beats": burst_beats}
+
+
+def _arbitration_kwargs(arbitration: str, burst_beats: int) -> dict:
+    """Like `_contention_kwargs` for `Backend.contended_throughput`, whose
+    pre-§9 protocol already took num_engines — only the grant axes are
+    conditionally forwarded."""
+    if (arbitration, burst_beats) == ("round_robin", 1):
+        return {}
+    return {"arbitration": arbitration, "burst_beats": burst_beats}
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +85,13 @@ class Backend:
     knows channel positions.  `deterministic` declares that results are a
     pure function of (spec, params, policy, op); the sweep layer memoizes
     and channel-broadcasts only deterministic backends.
+
+    The §9 contention axes (`num_engines`/`arbitration`/`burst_beats` on
+    `latency`, `arbitration`/`burst_beats` on `contended_throughput`) are
+    forwarded by the Engine only when they deviate from their defaults, so
+    a backend registered against the pre-§9 signatures keeps serving
+    uncontended measurements and fails with a plain TypeError only when a
+    caller actually engages the new axes.
     """
 
     name: str = ""
@@ -68,17 +106,21 @@ class Backend:
 
     def latency(self, spec: MemorySpec, p: RSTParams,
                 mapping: AddressMapping, *, switch_enabled: bool,
-                switch_extra_cycles: int,
-                op: str = "read") -> timing_model.LatencyTrace:
-        raise NotImplementedError(
-            f"backend {self.name!r} has no per-transaction timers; use the "
-            "sim backend for latency experiments (DESIGN.md §2)")
+                switch_extra_cycles: int, op: str = "read",
+                num_engines: int = 1, arbitration: str = "round_robin",
+                burst_beats: int = 1) -> timing_model.LatencyTrace:
+        raise UnsupportedCapability(
+            f"backend {self.name!r} has no per-transaction timers "
+            f"(supports_latency=False); cannot measure serial {op!r} "
+            f"latencies — use the sim backend (DESIGN.md §2)")
 
     def contended_throughput(self, spec: MemorySpec, p: RSTParams,
                              mapping: AddressMapping, *, num_engines: int,
-                             op: str = "read"
+                             op: str = "read",
+                             arbitration: str = "round_robin",
+                             burst_beats: int = 1
                              ) -> timing_model.ContentionResult:
-        raise NotImplementedError(
+        raise UnsupportedCapability(
             f"backend {self.name!r} has no multi-engine contention path "
             f"(supports_contention=False); use the sim backend or the "
             f"pallas concurrent-access kernel (DESIGN.md §8)")
@@ -96,15 +138,20 @@ class SimBackend(Backend):
         return timing_model.throughput(p, mapping, spec, op=op)
 
     def latency(self, spec, p, mapping, *, switch_enabled,
-                switch_extra_cycles, op="read"):
+                switch_extra_cycles, op="read", num_engines=1,
+                arbitration="round_robin", burst_beats=1):
         return timing_model.serial_latencies(
             p, mapping, spec, op=op, switch_enabled=switch_enabled,
-            switch_extra_cycles=switch_extra_cycles)
+            switch_extra_cycles=switch_extra_cycles,
+            num_engines=num_engines, arbitration=arbitration,
+            burst_beats=burst_beats)
 
     def contended_throughput(self, spec, p, mapping, *, num_engines,
-                             op="read"):
+                             op="read", arbitration="round_robin",
+                             burst_beats=1):
         return timing_model.contended_throughput(
-            p, mapping, spec, num_engines=num_engines, op=op)
+            p, mapping, spec, num_engines=num_engines, op=op,
+            arbitration=arbitration, burst_beats=burst_beats)
 
 
 class PallasBackend(Backend):
@@ -141,14 +188,17 @@ class PallasBackend(Backend):
                     "bytes": float(sample.bytes_moved)})
 
     def latency(self, spec, p, mapping, *, switch_enabled,
-                switch_extra_cycles, op="read"):
-        raise NotImplementedError(
-            "per-transaction latency needs on-chip timers; on TPU use "
-            "ops.measure_read_bandwidth with N=1 as a coarse probe, or "
-            "the sim backend (DESIGN.md §2)")
+                switch_extra_cycles, op="read", num_engines=1,
+                arbitration="round_robin", burst_beats=1):
+        raise UnsupportedCapability(
+            f"backend 'pallas' has no per-transaction timers; cannot "
+            f"measure serial {op!r} latencies — on TPU use "
+            f"ops.measure_read_bandwidth with N=1 as a coarse probe, or "
+            f"the sim backend (DESIGN.md §2)")
 
     def contended_throughput(self, spec, p, mapping, *, num_engines,
-                             op="read"):
+                             op="read", arbitration="round_robin",
+                             burst_beats=1):
         del spec, mapping  # the device's controller, not the model's
         if op != "read":
             raise ValueError(
@@ -156,7 +206,9 @@ class PallasBackend(Backend):
                 f"traffic only, got op={op!r}; use the sim backend for "
                 f"write/duplex contention (DESIGN.md §8)")
         from repro.kernels import ops  # deferred: keeps sim path jax-free
-        sample = ops.measure_contended_bandwidth(p, num_engines=num_engines)
+        sample = ops.measure_contended_bandwidth(
+            p, num_engines=num_engines, arbitration=arbitration,
+            burst_beats=burst_beats)
         return timing_model.ContentionResult(
             num_engines=num_engines,
             aggregate_gbps=sample.gbps,
@@ -165,7 +217,9 @@ class PallasBackend(Backend):
             # service time; NaN marks "not measured", not zero.
             queueing_delay_cycles=float("nan"),
             detail={"seconds": sample.seconds,
-                    "bytes": float(sample.bytes_moved)})
+                    "bytes": float(sample.bytes_moved)},
+            arbitration=arbitration,
+            burst_beats=burst_beats)
 
 
 _BACKEND_REGISTRY: Dict[str, Backend] = {}
@@ -225,6 +279,11 @@ class Engine:
 
     def __post_init__(self):
         self.backend_impl: Backend = get_backend(self.backend)
+        # Per-port contended results shared across placements/ladder rungs
+        # (deterministic backends only): the cross-channel placements
+        # decompose into the same (count, grant) DRAM-side evaluations
+        # over and over — e.g. every placement's N=1 port is the same run.
+        self._port_cache: Dict[Tuple, timing_model.ContentionResult] = {}
         if self.switch is None and self.spec.has_switch:
             # Resolve the spec's registered fabric (core/channels.py); an
             # unregistered or mismatched topology fails here, not deep in
@@ -292,26 +351,138 @@ class Engine:
                          policy: Optional[str] = None,
                          dst_channel: Optional[int] = None,
                          switch_enabled: Optional[bool] = None,
-                         op: str = "read") -> timing_model.LatencyTrace:
-        """Evaluate one serial-latency point without the register file."""
+                         op: str = "read",
+                         num_engines: int = 1,
+                         arbitration: str = "round_robin",
+                         burst_beats: int = 1) -> timing_model.LatencyTrace:
+        """Evaluate one serial-latency point without the register file.
+
+        ``num_engines > 1`` yields a *contended* trace: the shared port's
+        queueing delay is fed back into the per-transaction latencies at
+        the requested arbitration granularity (DESIGN.md §9)."""
         p = p.validate(self.spec)
         enabled, extra = self.latency_config(dst_channel, switch_enabled)
+        # Forward the contention axes only when engaged: a third-party
+        # backend implementing the pre-§9 protocol signature keeps
+        # serving uncontended captures unchanged, and fails with a clear
+        # TypeError only when actually asked for the new axes.
+        contended_kw = _contention_kwargs(num_engines, arbitration,
+                                          burst_beats)
         return self.backend_impl.latency(
             self.spec, p, self._mapping(policy),
-            switch_enabled=enabled, switch_extra_cycles=extra, op=op)
+            switch_enabled=enabled, switch_extra_cycles=extra, op=op,
+            **contended_kw)
+
+    def _switch_model(self) -> SwitchModel:
+        """The fabric the contention placements consult: the engine's own
+        switch on switched specs, the spec's registered (flat) topology
+        otherwise."""
+        if self.switch is not None:
+            return self.switch
+        return SwitchModel(topology_for(self.spec), enabled=True)
+
+    def _port_contended(self, p: RSTParams, *, num_engines: int,
+                        policy: Optional[str], op: str, arbitration: str,
+                        burst_beats: int) -> timing_model.ContentionResult:
+        """One shared-port DRAM-side contention result, memoized per engine
+        on deterministic backends (the placement decomposition re-asks for
+        the same (count, grant) evaluation across placements and ladder
+        rungs).  The arbitration axes are forwarded only when engaged —
+        see `_contention_kwargs` / `_arbitration_kwargs`."""
+        kwargs = _arbitration_kwargs(arbitration, burst_beats)
+        if not self.backend_impl.deterministic:
+            return self.backend_impl.contended_throughput(
+                self.spec, p, self._mapping(policy),
+                num_engines=num_engines, op=op, **kwargs)
+        key = (p, policy, op, num_engines, arbitration, burst_beats)
+        res = self._port_cache.get(key)
+        if res is None:
+            res = self.backend_impl.contended_throughput(
+                self.spec, p, self._mapping(policy),
+                num_engines=num_engines, op=op, **kwargs)
+            self._port_cache[key] = res
+        return res
+
+    def _contention_unscaled(self, p: RSTParams, *, num_engines: int,
+                             policy: Optional[str], op: str,
+                             arbitration: str, burst_beats: int,
+                             placement: str
+                             ) -> timing_model.ContentionResult:
+        """Placement-routed contention result, before the switch scale.
+
+        ``same_channel`` is the DRAM-side model: N engines multiplexed
+        onto one channel port.  The cross-channel placements (DESIGN.md
+        §9) spread the engines over the mini-switch's ports — each port's
+        engines run through the same DRAM-side model — and cap the summed
+        aggregate with the fabric's capacity terms: the mini-switch
+        aggregate datapath for ``same_switch``, additionally the lateral
+        bridge for ``cross_switch``.  On a single-switch (flat) fabric
+        ``cross_switch`` degrades to ``same_switch`` (there is no switch
+        to cross; ``detail["placement_degraded"]`` records it).
+        """
+        if placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {placement!r}; valid: {PLACEMENTS}")
+        if placement == "same_channel":
+            return self._port_contended(
+                p, num_engines=num_engines, policy=policy, op=op,
+                arbitration=arbitration, burst_beats=burst_beats)
+        sw = self._switch_model()
+        topo = sw.topology
+        effective = placement
+        if placement == "cross_switch" and not sw.can_cross_switch():
+            effective = "same_switch"
+        ports = min(num_engines, topo.axi_per_switch)
+        counts = [num_engines // ports + (1 if i < num_engines % ports else 0)
+                  for i in range(ports)]
+        per_count = {
+            c: self._port_contended(
+                p, num_engines=c, policy=policy, op=op,
+                arbitration=arbitration, burst_beats=burst_beats)
+            for c in set(counts)}
+        raw_aggregate = sum(per_count[c].aggregate_gbps for c in counts)
+        queueing = sum(c * per_count[c].queueing_delay_cycles
+                       for c in counts) / num_engines
+        dominant = per_count[max(counts)]
+        aggregate, bound = raw_aggregate, dominant.bound
+        cap = sw.capacity_cap_gbps(effective)
+        if cap is not None and raw_aggregate > cap:
+            aggregate = cap
+            lateral = topo.lateral_gbps
+            bound = ("lateral"
+                     if effective == "cross_switch" and lateral is not None
+                     and cap == lateral else "switch")
+        detail = {**dominant.detail,
+                  "ports": float(ports),
+                  "engines_per_port_max": float(max(counts)),
+                  "uncapped_aggregate_gbps": raw_aggregate,
+                  "capacity_cap_gbps":
+                      cap if cap is not None else float("inf"),
+                  "placement_degraded":
+                      1.0 if effective != placement else 0.0}
+        return timing_model.ContentionResult(
+            num_engines=num_engines, aggregate_gbps=aggregate, bound=bound,
+            queueing_delay_cycles=queueing, detail=detail,
+            arbitration=arbitration, burst_beats=burst_beats,
+            placement=placement)
 
     def evaluate_contention(self, p: RSTParams, *,
                             num_engines: int = 1,
                             policy: Optional[str] = None,
                             dst_channel: Optional[int] = None,
-                            op: str = "read"
+                            op: str = "read",
+                            arbitration: str = "round_robin",
+                            burst_beats: int = 1,
+                            placement: str = "same_channel"
                             ) -> timing_model.ContentionResult:
-        """N engines' streams multiplexed onto this engine's channel port
-        (the Choi et al. 2020 multi-PE scenario; DESIGN.md §8)."""
+        """N engines' streams through the selected arbitration granularity
+        and fabric placement (the Choi et al. 2020 multi-PE scenarios;
+        DESIGN.md §8/§9)."""
         p = p.validate(self.spec)
-        res = self.backend_impl.contended_throughput(
-            self.spec, p, self._mapping(policy),
-            num_engines=num_engines, op=op)
+        res = self._contention_unscaled(
+            p, num_engines=num_engines, policy=policy, op=op,
+            arbitration=arbitration, burst_beats=burst_beats,
+            placement=placement)
         if self.backend_impl.deterministic:
             scale = self.throughput_scale(dst_channel)
             if scale != 1.0:
@@ -373,8 +544,10 @@ class Engine:
                              counter_bits: int = DEFAULT_COUNTER_BITS,
                              policy: Optional[str] = None,
                              dst_channel: Optional[int] = None,
-                             switch_enabled: Optional[bool] = None
-                             ) -> np.ndarray:
+                             switch_enabled: Optional[bool] = None,
+                             num_engines: int = 1,
+                             arbitration: str = "round_robin",
+                             burst_beats: int = 1) -> np.ndarray:
         """Capture up to `depth` serial latencies from the selected module.
 
         `op` picks the engine module whose register params drive the run
@@ -384,16 +557,35 @@ class Engine:
         — the old capture path hard-wired ``read_latency`` and silently
         returned read latencies for every module.  `depth`/`counter_bits`
         are the capture list's synthesis parameters (DESIGN.md §8).
+
+        ``num_engines > 1`` captures a *contended* list: the shared
+        port's queueing delay at the requested arbitration granularity is
+        fed back into the trace (every sample shifted under round robin,
+        grant heads only under burst grants — the bimodal distribution
+        ``LatencyModule.classify_contended`` separates; DESIGN.md §9).
+
+        Backends without per-transaction timers cannot serve *any*
+        serial capture; this raises :class:`UnsupportedCapability` (with
+        the backend name and op) up front rather than falling through to
+        a read-shaped substitute.
         """
         if op not in timing_model.SERIAL_OPS:
             raise ValueError(
                 f"the capture list holds serial latencies; op must be one "
                 f"of {timing_model.SERIAL_OPS}, got {op!r}")
+        if not self.backend_impl.supports_latency:
+            raise UnsupportedCapability(
+                f"backend {self.backend!r} has no per-transaction timers "
+                f"(supports_latency=False); cannot capture serial {op!r} "
+                f"latencies — use the sim backend (DESIGN.md §2)")
         regs = (self.registers.read_params if op == "read"
                 else self.registers.write_params)
         p = regs.validate(self.spec)
         trace = self.evaluate_latency(p, policy=policy,
                                       dst_channel=dst_channel,
-                                      switch_enabled=switch_enabled, op=op)
+                                      switch_enabled=switch_enabled, op=op,
+                                      num_engines=num_engines,
+                                      arbitration=arbitration,
+                                      burst_beats=burst_beats)
         return LatencyModule(depth=depth, counter_bits=counter_bits,
                              op=op).capture(trace)

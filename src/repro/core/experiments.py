@@ -50,8 +50,9 @@ from repro.core.params import RSTParams
 from repro.core.engine import get_backend
 from repro.core.sweep import (KIND_CONTENTION, KIND_LATENCY,
                               KIND_THROUGHPUT, Sweep, SweepPoint)
-from repro.core.switch import SwitchModel
-from repro.core.timing_model import refresh_interval_estimate
+from repro.core.switch import PLACEMENTS, SwitchModel
+from repro.core.timing_model import (_contended_latency_delay,
+                                     refresh_interval_estimate)
 
 MB = 1024**2
 
@@ -208,15 +209,19 @@ def _tp_point(p: RSTParams, policy=None, channel=0, dst_channel=None,
 
 
 def _lat_point(p: RSTParams, channel=0, dst_channel=None,
-               switch_enabled=None, op="read") -> SweepPoint:
+               switch_enabled=None, op="read", num_engines=1,
+               arbitration="round_robin", burst_beats=1) -> SweepPoint:
     return SweepPoint(p, None, channel, dst_channel, op, KIND_LATENCY,
-                      switch_enabled)
+                      switch_enabled, num_engines=num_engines,
+                      arbitration=arbitration, burst_beats=burst_beats)
 
 
 def _cont_point(p: RSTParams, num_engines, policy=None, channel=0,
-                dst_channel=None, op="read") -> SweepPoint:
+                dst_channel=None, op="read", arbitration="round_robin",
+                burst_beats=1, placement="same_channel") -> SweepPoint:
     return SweepPoint(p, policy, channel, dst_channel, op, KIND_CONTENTION,
-                      num_engines=num_engines)
+                      num_engines=num_engines, arbitration=arbitration,
+                      burst_beats=burst_beats, placement=placement)
 
 
 def _bursts(spec: MemorySpec, bursts) -> Tuple[int, ...]:
@@ -721,8 +726,12 @@ register_experiment(Experiment(
 def _fig9_plan(spec, o):
     # One sequential-stream engine ladder on one shared channel port —
     # the Fig. 9-style scaling curve of a multi-PE design (Choi et al.).
+    # `arbitration`/`burst_beats` select the grant granularity (§9);
+    # `benchmarks.run --arbitration POLICY --burst B` overrides them.
     p = RSTParams(n=o["n"], b=spec.min_burst, s=spec.min_burst, w=o["w"])
-    return [(n_eng, _cont_point(p, n_eng, op=o["op"]))
+    return [(n_eng, _cont_point(p, n_eng, op=o["op"],
+                                arbitration=o["arbitration"],
+                                burst_beats=o["burst_beats"]))
             for n_eng in o["engines"]]
 
 
@@ -755,7 +764,7 @@ register_experiment(Experiment(
     plan=_fig9_plan,
     derive=_fig9_derive,
     defaults={"engines": (1, 2, 4, 8), "n": 4096, "w": 0x1000000,
-              "op": "read"},
+              "op": "read", "arbitration": "round_robin", "burst_beats": 1},
     quick={"engines": (1, 4), "n": 1024},
     bench_specs=_ALL_BUILTIN_SPECS,
     summarize=_fig9_summarize,
@@ -772,7 +781,10 @@ def _cont_sweep_plan(spec, o):
             if s < spec.min_burst:
                 continue
             p = RSTParams(n=o["n"], b=spec.min_burst, s=s, w=o["w"])
-            out.append(((n_eng, s), _cont_point(p, n_eng, op=o["op"])))
+            out.append(((n_eng, s),
+                        _cont_point(p, n_eng, op=o["op"],
+                                    arbitration=o["arbitration"],
+                                    burst_beats=o["burst_beats"])))
     return out
 
 
@@ -807,13 +819,224 @@ register_experiment(Experiment(
     plan=_cont_sweep_plan,
     derive=_cont_sweep_derive,
     defaults={"engines": (1, 2, 4, 8), "strides": (64, 1024, 4096),
-              "w": 0x1000000, "n": 4096, "op": "read"},
+              "w": 0x1000000, "n": 4096, "op": "read",
+              "arbitration": "round_robin", "burst_beats": 1},
     quick={"engines": (1, 4), "strides": (64, 1024), "n": 1024},
     bench_specs=_ALL_BUILTIN_SPECS,
     summarize=_cont_sweep_summarize,
     flatten=lambda spec, r: [
         (f"N{n_eng}_S{s}", f"{gbps:.2f}")
         for n_eng, per_s in r["gbps"].items() for s, gbps in per_s.items()],
+))
+
+
+# ---------------------------------------------------------------------------
+# Arbitration-aware contention family (DESIGN.md §9): grant-granularity
+# ladders, the cross-channel placement split of Fig. 9, and the contended
+# latency classes the doubled-anchor classifier separates.  All three run
+# on every registered memory system and are benchmarked on all four
+# built-ins.
+# ---------------------------------------------------------------------------
+
+
+def _arb_ladder(o) -> List[Tuple[str, int]]:
+    """(policy, burst_beats) rungs: round robin, the burst ladder, and the
+    exclusive serialized bound — ordered by grant size."""
+    return ([("round_robin", 1)]
+            + [("burst", bb) for bb in o["burst_ladder"]]
+            + [("exclusive", 1)])
+
+
+def _arb_sweep_plan(spec, o):
+    p = RSTParams(n=o["n"], b=spec.min_burst, s=spec.min_burst, w=o["w"])
+    out = []
+    for n_eng in o["engines"]:
+        for policy, bb in _arb_ladder(o):
+            out.append(((n_eng, policy, bb),
+                        _cont_point(p, n_eng, op=o["op"], arbitration=policy,
+                                    burst_beats=bb)))
+    return out
+
+
+def _arb_sweep_derive(spec, keyed, o):
+    out: Dict[int, Dict] = {}
+    for (n_eng, policy, bb), r in keyed:
+        per = out.setdefault(n_eng, {"burst": {}})
+        entry = {
+            "aggregate_gbps": r.aggregate_gbps,
+            "queueing_delay_cycles": r.queueing_delay_cycles,
+            # Measuring backends put no such key in detail (the Backend
+            # protocol doesn't require it); NaN marks "not modeled".
+            "grant_head_wait_cycles":
+                r.detail.get("grant_head_wait_cycles", float("nan")),
+            "bound": r.bound,
+        }
+        if policy == "burst":
+            per["burst"][bb] = entry
+        else:
+            per[policy] = entry
+    return out
+
+
+def _arb_sweep_summarize(spec, r):
+    nmax = max(r)
+    per = r[nmax]
+    bb_max = max(per["burst"])
+    rr, ex = per["round_robin"], per["exclusive"]
+    burst = per["burst"][bb_max]
+    # How much of the round-robin collapse does the largest burst grant
+    # claw back, relative to the serialized (exclusive) bound?
+    span = ex["aggregate_gbps"] - rr["aggregate_gbps"]
+    recovered = ((burst["aggregate_gbps"] - rr["aggregate_gbps"]) / span
+                 if span else 1.0)
+    return (f"rr_x{nmax}={rr['aggregate_gbps']:.2f};"
+            f"burst{bb_max}_x{nmax}={burst['aggregate_gbps']:.2f};"
+            f"exclusive_x{nmax}={ex['aggregate_gbps']:.2f};"
+            f"recovered={recovered:.2f}")
+
+
+register_experiment(Experiment(
+    name="arbitration_granularity_sweep",
+    artifact="contention (arbitration)",
+    title="Grant-granularity ladder: round robin -> burst grants -> exclusive",
+    plan=_arb_sweep_plan,
+    derive=_arb_sweep_derive,
+    defaults={"engines": (2, 4), "burst_ladder": (4, 16, 64),
+              "n": 4096, "w": 0x1000000, "op": "read"},
+    quick={"engines": (4,), "burst_ladder": (16,), "n": 1024},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_arb_sweep_summarize,
+    flatten=lambda spec, r: [
+        (f"N{n_eng}_{policy if policy != 'burst' else f'burst{bb}'}",
+         f"{entry['aggregate_gbps']:.2f}")
+        for n_eng, per in r.items()
+        for policy, bb, entry in (
+            [("round_robin", 1, per["round_robin"])]
+            + [("burst", bb, e) for bb, e in per["burst"].items()]
+            + [("exclusive", 1, per["exclusive"])])],
+))
+
+
+def _fig9x_plan(spec, o):
+    # The Fig. 9 engine ladder split by fabric placement: one shared port
+    # (the PR 4 worst case), different channels of one mini-switch (the
+    # switch-aggregate term), and channels across the lateral bridge (the
+    # cross-switch collapse).  Flat fabrics degrade cross_switch to
+    # same_switch inside the engine (detail["placement_degraded"]).
+    p = RSTParams(n=o["n"], b=spec.min_burst, s=spec.min_burst, w=o["w"])
+    out = []
+    for placement in o["placements"]:
+        for n_eng in o["engines"]:
+            out.append(((placement, n_eng),
+                        _cont_point(p, n_eng, op=o["op"],
+                                    arbitration=o["arbitration"],
+                                    burst_beats=o["burst_beats"],
+                                    placement=placement)))
+    return out
+
+
+def _fig9x_derive(spec, keyed, o):
+    out: Dict[str, Dict[int, Dict]] = {}
+    for (placement, n_eng), r in keyed:
+        out.setdefault(placement, {})[n_eng] = {
+            "aggregate_gbps": r.aggregate_gbps,
+            "per_engine_gbps": r.per_engine_gbps,
+            "bound": r.bound,
+            "degraded": bool(r.detail.get("placement_degraded", 0.0)),
+        }
+    return out
+
+
+def _fig9x_summarize(spec, r):
+    nmax = max(next(iter(r.values())))
+    parts = [f"{plc}_x{nmax}={per[nmax]['aggregate_gbps']:.2f}"
+             for plc, per in r.items()]
+    same = r.get("same_switch", {}).get(nmax)
+    cross = r.get("cross_switch", {}).get(nmax)
+    if same and cross and same["aggregate_gbps"]:
+        parts.append(
+            f"cross_ratio={cross['aggregate_gbps'] / same['aggregate_gbps']:.2f}")
+    return ";".join(parts)
+
+
+register_experiment(Experiment(
+    name="fig9_cross_switch_contention",
+    artifact="Fig. 9 (placement)",
+    title="Engine ladder split by placement: same channel/switch/cross-switch",
+    plan=_fig9x_plan,
+    derive=_fig9x_derive,
+    defaults={"engines": (1, 2, 4), "placements": PLACEMENTS,
+              "n": 4096, "w": 0x1000000, "op": "read",
+              "arbitration": "round_robin", "burst_beats": 1},
+    quick={"engines": (1, 4), "n": 1024},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_fig9x_summarize,
+    flatten=lambda spec, r: [
+        (f"{plc}_N{n_eng}", f"{per['aggregate_gbps']:.2f}")
+        for plc, per_n in r.items() for n_eng, per in per_n.items()],
+))
+
+
+def _cont_lat_plan(spec, o):
+    # A hit-regime stream captured under contention: grant heads carry the
+    # arbitration rotation's wait, grant riders post at the uncontended
+    # anchors — the bimodal distribution classify_contended separates.
+    # N=1 is always planned: it is the baseline the queueing shift is
+    # derived from (the shift the contended capture sees is (N-1)*B*mean
+    # of the uncontended trace, DESIGN.md §9).
+    p = RSTParams(n=o["n"], b=spec.min_burst, s=128, w=0x1000000)
+    engines = dict.fromkeys((1,) + tuple(o["engines"]))
+    return [(n_eng, _lat_point(p, op=o["op"], num_engines=n_eng,
+                               arbitration=o["arbitration"],
+                               burst_beats=o["burst_beats"]))
+            for n_eng in engines]
+
+
+def _cont_lat_derive(spec, keyed, o):
+    traces = dict(keyed)
+    base = traces[1]
+    module = LatencyModule(op=o["op"], counter_bits=o["counter_bits"])
+    out = {}
+    for n_eng, trace in traces.items():
+        # The shift the trace actually carries is the timing model's own
+        # delay vector (grant heads pay the rotation; sample 0 is always
+        # a head), so the classifier anchors can never drift from the
+        # model's queueing formula.
+        delay = _contended_latency_delay(base.cycles, n_eng,
+                                         o["arbitration"], o["burst_beats"])
+        head_wait = float(delay[0]) if len(delay) else 0.0
+        counts = module.classify_contended(module.capture(trace), spec,
+                                           head_wait)
+        out[n_eng] = {"counts": counts,
+                      "grant_head_wait_cycles": head_wait,
+                      "mean_cycles": float(np.mean(trace.cycles))}
+    return out
+
+
+def _cont_lat_summarize(spec, r):
+    nmax = max(r)
+    c = r[nmax]["counts"]
+    queued = sum(v for k, v in c.items() if k.endswith("_queued"))
+    unqueued = sum(v for k, v in c.items()
+                   if not k.endswith("_queued") and k != "refresh")
+    return (f"x{nmax}_queued={queued};x{nmax}_unqueued={unqueued};"
+            f"head_wait_x{nmax}={r[nmax]['grant_head_wait_cycles']:.1f}cyc;"
+            f"mean_x{nmax}={r[nmax]['mean_cycles']:.1f}cyc")
+
+
+register_experiment(Experiment(
+    name="contended_latency_classes",
+    artifact="Table IV (contended)",
+    title="Contended serial-latency classes under burst-grant arbitration",
+    plan=_cont_lat_plan,
+    derive=_cont_lat_derive,
+    defaults={"engines": (4,), "arbitration": "burst", "burst_beats": 8,
+              "n": 1024, "op": "read", "counter_bits": 16},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_cont_lat_summarize,
+    flatten=lambda spec, r: [
+        (f"N{n_eng}_{cls}", str(cnt))
+        for n_eng, per in r.items() for cls, cnt in per["counts"].items()],
 ))
 
 

@@ -28,6 +28,17 @@ The module is *per-transaction instrumentation*, not a read-only probe:
   threshold unreachable, refresh counts collapsed to 0, and every
   saturated sample mis-binned as "miss".  Widening ``counter_bits``
   removes the saturation entirely (a 16-bit build of the RTL register).
+* **contention-aware** — a contended capture (``num_engines > 1`` on the
+  engine, DESIGN.md §9) is *bimodal* under burst-grant arbitration: the
+  grant-head transactions carry the arbitration rotation's queueing
+  delay while the beats riding a grant post at the uncontended anchors.
+  :meth:`LatencyModule.classify_contended` therefore classifies against
+  *doubled* anchor ladders — the base ``hit/closed/miss`` plus
+  ``hit_queued/closed_queued/miss_queued`` shifted by the grant-head
+  wait — so a contended capture splits into its two populations instead
+  of smearing between anchors.  With a zero queueing shift the queued
+  ladder collapses onto the base one and the counts reduce exactly to
+  :meth:`LatencyModule.classify`.
 """
 from __future__ import annotations
 
@@ -45,6 +56,13 @@ DEFAULT_COUNTER_BITS = 8   # the paper's 8-bit saturating registers
 # Traffic directions the capture list can hold, mirroring the timing
 # model's ops: the miss anchor shifts by tWR for writes, tWR/2 for duplex.
 CAPTURE_OPS = ("read", "write", "duplex")
+
+# Anchor classes of a contended capture (DESIGN.md §9): the base ladder
+# plus its queueing-shifted twin.  Order matters — argmin takes the first
+# minimum, so base classes win ties when the queueing shift is zero and
+# classify_contended reduces exactly to classify.
+CONTENDED_STATES = ("hit", "closed", "miss",
+                    "hit_queued", "closed_queued", "miss_queued")
 
 # Narrowest unsigned dtype covering each legal counter width.
 _WIDTH_DTYPES = ((8, np.uint8), (16, np.uint16), (32, np.uint32))
@@ -139,6 +157,57 @@ class LatencyModule:
             captured, self.anchors(spec, extra_cycles))
         counts = {name: int(np.count_nonzero(~refresh & (nearest == k)))
                   for k, name in enumerate(("hit", "closed", "miss"))}
+        counts["refresh"] = int(np.count_nonzero(refresh))
+        return counts
+
+    def contended_anchors(self, spec: MemorySpec, queueing_cycles: float,
+                          extra_cycles: int = 0) -> Dict[str, int]:
+        """The doubled anchor ladder of a contended capture (DESIGN.md §9).
+
+        `queueing_cycles` is the grant-head arbitration wait the contended
+        trace's shifted population carries
+        (``ContentionResult.detail["grant_head_wait_cycles"]``, or the
+        round-robin mean when every transaction pays it).  The queued
+        ladder clamps to the counter's saturation point exactly like the
+        base one — a large rotation wait is precisely what pushes an
+        8-bit capture into saturation.
+        """
+        out = dict(self.anchors(spec, extra_cycles))
+        for name in ("hit", "closed", "miss"):
+            out[f"{name}_queued"] = min(
+                int(round(out[name] + queueing_cycles)), self.saturate)
+        return out
+
+    def classify_contended(self, captured: np.ndarray, spec: MemorySpec,
+                           queueing_cycles: float,
+                           extra_cycles: int = 0) -> Dict[str, int]:
+        """Count the six contended classes plus refresh.
+
+        A burst-grant contended capture is bimodal — grant heads pay the
+        rotation wait, riders post at the uncontended anchors — so the
+        classifier matches against both ladders at once, and *each
+        population keeps its own refresh threshold*: a rider that
+        stalled behind a refresh sits 8+ cycles above the base miss
+        anchor (far below the queued ladder — a single shared threshold
+        above ``miss_queued`` would silently rebin every rider refresh
+        spike as miss), while a refresh-stalled grant head sits above
+        ``miss_queued + 8``.  Both thresholds clamp to the saturation
+        point like :meth:`_refresh_threshold`.  With
+        ``queueing_cycles=0`` the queued ladder collapses onto the base
+        one and the counts reduce exactly to :meth:`classify` (all
+        ``*_queued`` counts zero).
+        """
+        anchors = self.contended_anchors(spec, queueing_cycles, extra_cycles)
+        c = np.asarray(captured, dtype=np.int64)
+        vals = np.array([anchors[k] for k in CONTENDED_STATES],
+                        dtype=np.int64)
+        nearest = np.argmin(np.abs(c[:, None] - vals[None, :]), axis=1)
+        base_thresh = self._refresh_threshold(anchors)
+        queued_thresh = max(min(anchors["miss_queued"] + 8,
+                                self.saturate - 1), anchors["miss_queued"])
+        refresh = np.where(nearest < 3, c > base_thresh, c > queued_thresh)
+        counts = {name: int(np.count_nonzero(~refresh & (nearest == k)))
+                  for k, name in enumerate(CONTENDED_STATES)}
         counts["refresh"] = int(np.count_nonzero(refresh))
         return counts
 

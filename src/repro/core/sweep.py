@@ -45,7 +45,10 @@ class SweepPoint:
     op: str = "read"
     kind: str = KIND_THROUGHPUT
     switch_enabled: Optional[bool] = None   # latency runs only
-    num_engines: int = 1                    # contention runs only
+    num_engines: int = 1                    # contention + contended latency
+    arbitration: str = "round_robin"        # shared-port grant policy (§9)
+    burst_beats: int = 1                    # beats per grant ("burst" only)
+    placement: str = "same_channel"         # contention runs only
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,8 +81,9 @@ class Sweep:
         self._points: List[SweepPoint] = []
         self._engines: Dict[int, Engine] = {}
         # Unscaled throughput results keyed by (params, policy, op); latency
-        # traces keyed by (params, policy, enabled, extra_cycles); contention
-        # results keyed by (params, policy, op, num_engines).  sim only.
+        # traces keyed by (params, policy, enabled, extra_cycles, op, N,
+        # arbitration, burst_beats); contention results keyed by (params,
+        # policy, op, N, arbitration, burst_beats, placement).  sim only.
         self._tp_cache: Dict[Tuple, timing_model.ThroughputResult] = {}
         self._lat_cache: Dict[Tuple, timing_model.LatencyTrace] = {}
         self._cont_cache: Dict[Tuple, timing_model.ContentionResult] = {}
@@ -96,22 +100,35 @@ class Sweep:
     def add_latency(self, params: RSTParams, *, policy: Optional[str] = None,
                     channel: int = 0, dst_channel: Optional[int] = None,
                     switch_enabled: Optional[bool] = None,
-                    op: str = "read") -> "Sweep":
-        """Queue one serial-latency point (op: "read" or "write"); returns
-        self for chaining."""
+                    op: str = "read", num_engines: int = 1,
+                    arbitration: str = "round_robin",
+                    burst_beats: int = 1) -> "Sweep":
+        """Queue one serial-latency point (op: "read" or "write").
+        ``num_engines > 1`` makes it a *contended* trace at the given
+        arbitration granularity (DESIGN.md §9); returns self for
+        chaining."""
         self._points.append(SweepPoint(params, policy, channel, dst_channel,
-                                       op, KIND_LATENCY, switch_enabled))
+                                       op, KIND_LATENCY, switch_enabled,
+                                       num_engines=num_engines,
+                                       arbitration=arbitration,
+                                       burst_beats=burst_beats))
         return self
 
     def add_contention(self, params: RSTParams, *, num_engines: int,
                        policy: Optional[str] = None, channel: int = 0,
                        dst_channel: Optional[int] = None,
-                       op: str = "read") -> "Sweep":
-        """Queue one multi-engine contention point (N engines sharing the
-        channel port, DESIGN.md §8); returns self for chaining."""
+                       op: str = "read", arbitration: str = "round_robin",
+                       burst_beats: int = 1,
+                       placement: str = "same_channel") -> "Sweep":
+        """Queue one multi-engine contention point (N engines sharing a
+        channel port / mini-switch at the given arbitration granularity
+        and placement, DESIGN.md §8/§9); returns self for chaining."""
         self._points.append(SweepPoint(params, policy, channel, dst_channel,
                                        op, KIND_CONTENTION,
-                                       num_engines=num_engines))
+                                       num_engines=num_engines,
+                                       arbitration=arbitration,
+                                       burst_beats=burst_beats,
+                                       placement=placement))
         return self
 
     def add_point(self, pt: SweepPoint) -> "Sweep":
@@ -175,15 +192,19 @@ class Sweep:
             self.stats.evaluated += 1
             return eng.evaluate_contention(
                 pt.params, num_engines=pt.num_engines, policy=pt.policy,
-                dst_channel=pt.dst_channel, op=pt.op), False
-        key = (pt.params, pt.policy, pt.op, pt.num_engines)
+                dst_channel=pt.dst_channel, op=pt.op,
+                arbitration=pt.arbitration, burst_beats=pt.burst_beats,
+                placement=pt.placement), False
+        key = (pt.params, pt.policy, pt.op, pt.num_engines,
+               pt.arbitration, pt.burst_beats, pt.placement)
         base = self._cont_cache.get(key)
         cached = base is not None
         if base is None:
             p = pt.params.validate(self.spec)
-            base = self.backend_impl.contended_throughput(
-                self.spec, p, eng._mapping(pt.policy),
-                num_engines=pt.num_engines, op=pt.op)
+            base = eng._contention_unscaled(
+                p, num_engines=pt.num_engines, policy=pt.policy, op=pt.op,
+                arbitration=pt.arbitration, burst_beats=pt.burst_beats,
+                placement=pt.placement)
             self._cont_cache[key] = base
             self.stats.evaluated += 1
         # Channel broadcast, like throughput: location only enters through
@@ -200,15 +221,20 @@ class Sweep:
             self.stats.evaluated += 1
             return eng.evaluate_latency(
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
-                switch_enabled=pt.switch_enabled, op=pt.op), False
+                switch_enabled=pt.switch_enabled, op=pt.op,
+                num_engines=pt.num_engines, arbitration=pt.arbitration,
+                burst_beats=pt.burst_beats), False
         enabled, extra = eng.latency_config(pt.dst_channel, pt.switch_enabled)
-        key = (pt.params, pt.policy, enabled, extra, pt.op)
+        key = (pt.params, pt.policy, enabled, extra, pt.op,
+               pt.num_engines, pt.arbitration, pt.burst_beats)
         trace = self._lat_cache.get(key)
         cached = trace is not None
         if trace is None:
             trace = eng.evaluate_latency(
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
-                switch_enabled=pt.switch_enabled, op=pt.op)
+                switch_enabled=pt.switch_enabled, op=pt.op,
+                num_engines=pt.num_engines, arbitration=pt.arbitration,
+                burst_beats=pt.burst_beats)
             self._lat_cache[key] = trace
             self.stats.evaluated += 1
         return trace, cached

@@ -38,13 +38,37 @@ traffic as first-class workloads:
   direction overheads are exactly zero).
 
 * :func:`contended_throughput` — N engines sharing one channel /
-  mini-switch port (DESIGN.md §8): the engines' streams are round-robin
-  interleaved (engine k over its own W-byte window at ``A + k*W``) and the
-  shared stream runs through the same three bounds, so contention *emerges*
-  from interleaving — row thrash in shared banks, shortened bank-group
-  runs — rather than being asserted.  Reports the aggregate/per-engine
-  bandwidth split and a round-robin queueing-delay term; bit-identical to
-  :func:`throughput` at ``num_engines=1``.
+  mini-switch port (DESIGN.md §8/§9): the engines' streams are interleaved
+  (engine k over its own W-byte window at ``A + k*W``) and the shared
+  stream runs through the same three bounds, so contention *emerges* from
+  interleaving — row thrash in shared banks, shortened bank-group runs —
+  rather than being asserted.  The *arbitration granularity* is an axis
+  (``arbitration``, ``burst_beats``): ``"round_robin"`` alternates engines
+  every transaction (the worst case, and the bit-identical ``burst_beats=1``
+  special case of ``"burst"``), ``"burst"`` grants each engine
+  ``burst_beats`` consecutive transactions per rotation (preserving
+  row-buffer locality inside a grant — the lever Choi et al. 2020 show
+  moves multi-PE designs from ~30% to ~90% of nominal), and
+  ``"exclusive"`` serializes whole streams (each engine runs to completion
+  before the next — the upper grant-size bound that ``burst`` converges to
+  as ``burst_beats`` grows).  Reports the aggregate/per-engine bandwidth
+  split plus per-policy queueing-delay terms; bit-identical to
+  :func:`throughput` at ``num_engines=1`` under every policy.
+
+* contended *latency* — :func:`serial_latencies` accepts the same
+  ``num_engines`` / ``arbitration`` / ``burst_beats`` axes and feeds the
+  per-engine queueing delay back into the per-transaction trace:
+  round-robin shifts every transaction by the mean arbitration wait,
+  burst grants concentrate the same mean wait onto each grant-head
+  transaction (a bimodal contended distribution — the new latency classes
+  `core/latency.py` classifies), and exclusive grants pay one up-front
+  whole-stream wait.  ``num_engines=1`` is bit-identical to the
+  uncontended trace.
+
+Cross-channel contention — streams landing on *different* channels of the
+same (or a distant) mini-switch — is the switch fabric's business, not the
+DRAM's: see ``core/switch.py`` (per-mini-switch aggregate and lateral-link
+capacity terms) and ``Engine.evaluate_contention(placement=...)``.
 
 Both functions are NumPy array code end to end (DESIGN.md §3):
 
@@ -91,10 +115,46 @@ _REORDER_WINDOW = 64
 # Traffic directions of the engine module: its read module, its write
 # module, or both running concurrently over one channel (Sec. III-C-1).
 OPS = ("read", "write", "duplex")
+# Arbitration granularities of the shared channel port (DESIGN.md §9):
+# per-transaction round robin (the worst case), burst grants of
+# `burst_beats` consecutive transactions per engine per rotation, and
+# exclusive whole-stream grants (the serialized upper bound).
+ARBITRATION_POLICIES = ("round_robin", "burst", "exclusive")
 # Serial latency is one-transaction-at-a-time; a duplex direction has no
 # meaning there (there is never a second in-flight transaction to turn the
 # bus around for).
 SERIAL_OPS = ("read", "write")
+
+
+def _grant_beats(arbitration: str, burst_beats: int, txns: int) -> int:
+    """Transactions one engine issues per arbitration grant.
+
+    ``round_robin`` is defined as the one-beat grant (and rejects any other
+    ``burst_beats`` so a mismatched pair fails loudly instead of silently
+    meaning something else); ``burst`` grants ``burst_beats`` beats;
+    ``exclusive`` grants the whole stream — equivalently ``burst`` with
+    ``burst_beats >= txns``, which is exactly how ``burst`` converges to
+    the serialized bound as the grant grows.  Burst grants clamp to the
+    stream length: a grant cannot outlast the stream, and an unclamped
+    size would inflate the grant-head wait terms past the physical
+    maximum of the other engines' whole streams (the device-side kernel
+    clamps identically).
+    """
+    if arbitration not in ARBITRATION_POLICIES:
+        raise ValueError(f"unknown arbitration {arbitration!r}; valid: "
+                         f"{ARBITRATION_POLICIES}")
+    if burst_beats < 1:
+        raise ValueError(f"burst_beats must be >= 1, got {burst_beats}")
+    if arbitration != "burst" and burst_beats != 1:
+        raise ValueError(
+            f"burst_beats={burst_beats} only applies to the 'burst' policy; "
+            f"{arbitration!r} fixes the grant size (round_robin: 1 beat, "
+            f"exclusive: the whole stream)")
+    if arbitration == "round_robin":
+        return 1
+    if arbitration == "exclusive":
+        return max(1, txns)
+    return min(burst_beats, max(1, txns))
 
 
 def _direction_overheads(spec: MemorySpec, op: str) -> Tuple[float, float]:
@@ -178,6 +238,37 @@ def _prev_same_bank(bank: np.ndarray) -> np.ndarray:
     return prev
 
 
+def _contended_latency_delay(base_cycles: np.ndarray, num_engines: int,
+                             arbitration: str, burst_beats: int
+                             ) -> np.ndarray:
+    """Per-transaction queueing-delay addition (cycles) for a serial trace.
+
+    The shift a contended capture list sees (DESIGN.md §9), built from the
+    uncontended trace's own service times: under round robin every
+    transaction waits out one mean service from each of the other N-1
+    engines; under burst grants only each grant-head transaction pays the
+    rotation — (N-1)·B·mean — while the B-1 beats riding its grant pay
+    zero (same mean as round robin, bimodal distribution); under exclusive
+    grants the whole capture rides one grant and the first transaction
+    pays the engine-mean whole-stream wait, (N-1)/2 streams.
+
+    The delay is a post-hoc shift on the issue path: the refresh schedule
+    stays that of the engine's own service stream (each engine refreshes
+    its windows independently of who holds the arbitration grant).
+    """
+    n = len(base_cycles)
+    bb = _grant_beats(arbitration, burst_beats, n)
+    delay = np.zeros(n, dtype=np.float64)
+    if num_engines <= 1 or n == 0:
+        return delay
+    if arbitration == "exclusive":
+        delay[0] = 0.5 * (num_engines - 1) * float(np.sum(base_cycles))
+    else:
+        mean_service = float(np.mean(base_cycles))
+        delay[::bb] = (num_engines - 1) * bb * mean_service
+    return delay
+
+
 def serial_latencies(
     p: RSTParams,
     mapping: AddressMapping,
@@ -186,6 +277,9 @@ def serial_latencies(
     op: str = "read",
     switch_enabled: bool = False,
     switch_extra_cycles: int = 0,
+    num_engines: int = 1,
+    arbitration: str = "round_robin",
+    burst_beats: int = 1,
 ) -> LatencyTrace:
     """Simulate N serial transactions and return per-transaction latencies.
 
@@ -201,6 +295,16 @@ def serial_latencies(
     core/switch.py (Table VI); `switch_enabled` alone adds the flat
     7-cycle penalty (paper footnote 9).
 
+    `num_engines` > 1 produces a *contended* trace: the per-engine
+    queueing delay of the shared port (DESIGN.md §9) is fed back into the
+    per-transaction latencies via `_contended_latency_delay` — every
+    transaction under round robin, grant heads only under burst grants (a
+    bimodal distribution the contended classifier in core/latency.py
+    separates), one up-front stream wait under exclusive grants.  Page
+    states and refresh bookkeeping are those of the engine's own stream;
+    ``num_engines=1`` is bit-identical to the uncontended trace under
+    every policy.
+
     Vectorized over refresh epochs: between two refreshes no bank is ever
     closed by the controller, so the page state of every transaction in the
     epoch is a pure function of its previous same-bank access — closed if
@@ -212,6 +316,9 @@ def serial_latencies(
         raise ValueError(
             f"serial latency measures one outstanding transaction; op must "
             f"be one of {SERIAL_OPS}, got {op!r}")
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    _grant_beats(arbitration, burst_beats, 1)   # validate the pair eagerly
     p.validate(spec)
     addrs = _expand_addresses(p)
     dec = mapping.decode(addrs)
@@ -282,6 +389,9 @@ def serial_latencies(
             now_ns = float(starts[k])   # txn pos+k re-enters the refresh check
         pos += k
 
+    if num_engines > 1:
+        lat = lat + _contended_latency_delay(lat, num_engines, arbitration,
+                                             burst_beats)
     return LatencyTrace(cycles=lat, states=_STATE_NAMES[codes].tolist(),
                         refresh_hits=refresh_hits)
 
@@ -453,15 +563,24 @@ class ContentionResult:
     """N engines' streams multiplexed onto one shared channel port.
 
     `aggregate_gbps` is the shared port's total; `queueing_delay_cycles`
-    is the mean round-robin arbitration wait one transaction spends
-    behind the other N-1 engines' in-flight transactions.
+    is the *mean* arbitration wait one transaction spends behind the other
+    N-1 engines (per-beat wait under round robin; the same mean
+    concentrated onto grant heads under burst grants — the head's wait is
+    `detail["grant_head_wait_cycles"]`; half the whole-stream rotation
+    under exclusive grants).  `arbitration`/`burst_beats` record the
+    granularity the result was computed under; `placement` records which
+    fabric path the engines shared (``same_channel`` here — the
+    cross-channel placements are built by `Engine.evaluate_contention`).
     """
 
     num_engines: int
     aggregate_gbps: float
-    bound: str                    # "bus/ccd" | "bank" | "faw" | "measured"
+    bound: str          # "bus/ccd" | "bank" | "faw" | "switch" | "lateral"
     queueing_delay_cycles: float
     detail: Dict[str, float]
+    arbitration: str = "round_robin"
+    burst_beats: int = 1
+    placement: str = "same_channel"
 
     @property
     def per_engine_gbps(self) -> float:
@@ -471,19 +590,26 @@ class ContentionResult:
     def __repr__(self):
         return (f"ContentionResult(N={self.num_engines}, "
                 f"{self.aggregate_gbps:.2f} GB/s aggregate, "
-                f"bound={self.bound})")
+                f"bound={self.bound}, arbitration={self.arbitration})")
 
 
 def _contended_command_addresses(p: RSTParams, bus_bytes: int,
-                                 num_engines: int) -> Tuple[np.ndarray, int]:
-    """Round-robin interleaved column-command stream of N identical engines.
+                                 num_engines: int, *,
+                                 arbitration: str = "round_robin",
+                                 burst_beats: int = 1
+                                 ) -> Tuple[np.ndarray, int]:
+    """Grant-interleaved column-command stream of N identical engines.
 
     Engine k traverses its own W-byte window at base ``A + k*W`` (disjoint
     windows, the Choi et al. 2020 multi-PE layout), and the shared port
-    arbitrates one transaction per engine per round.  The total modeled
-    command budget is the single-engine `_MAX_EXPAND` cap, split across
-    engines, so contention analyses cost the same as single-engine ones.
-    For ``num_engines == 1`` the construction reduces exactly to
+    rotates grants of `_grant_beats` consecutive transactions per engine:
+    one beat under round robin (t0e0, t0e1, ..., t1e0), `burst_beats`
+    under burst grants (t0e0..t{B-1}e0, t0e1..), the whole stream under
+    exclusive grants (engine-major).  A trailing partial grant round
+    rotates the remainder the same way.  The total modeled command budget
+    is the single-engine `_MAX_EXPAND` cap, split across engines, so
+    contention analyses cost the same as single-engine ones.  For
+    ``num_engines == 1`` every policy reduces exactly to
     `_command_addresses` — the read path is bit-identical.
     """
     txn = _expand_addresses(p)
@@ -491,12 +617,43 @@ def _contended_command_addresses(p: RSTParams, bus_bytes: int,
     max_txns = max(16, (_MAX_EXPAND // cmds_per_txn) // num_engines)
     if len(txn) > max_txns:
         txn = txn[:max_txns]
+    bb = _grant_beats(arbitration, burst_beats, len(txn))
     engine_offs = np.arange(num_engines, dtype=np.int64) * p.w
-    # Row-major (txn, engine) flatten = round-robin: t0e0, t0e1, ..., t1e0.
-    inter = (txn[:, None] + engine_offs[None, :]).reshape(-1)
+    # Full grant rounds: (round, engine, beat) flatten rotates bb-beat
+    # grants across engines; bb=1 degenerates to the row-major (txn,
+    # engine) round-robin flatten, element for element.
+    nfull = (len(txn) // bb) * bb
+    full = txn[:nfull].reshape(-1, bb)
+    parts = [(full[:, None, :] + engine_offs[None, :, None]).reshape(-1)]
+    if nfull < len(txn):
+        rem = txn[nfull:]
+        parts.append((engine_offs[:, None] + rem[None, :]).reshape(-1))
+    inter = np.concatenate(parts) if len(parts) > 1 else parts[0]
     offs = np.arange(cmds_per_txn, dtype=np.int64) * bus_bytes
     addrs = (inter[:, None] + offs[None, :]).reshape(-1)
     return addrs, len(txn)
+
+
+def _queueing_terms(arbitration: str, grant_beats: int, num_engines: int,
+                    txns_per_engine: int, mean_service: float
+                    ) -> Tuple[float, float]:
+    """(mean queueing delay, grant-head wait) in cycles for one policy.
+
+    Round robin: every transaction waits out one transaction from each of
+    the other N-1 engines.  Burst grants concentrate the rotation onto the
+    grant-head transaction — the head waits out the other engines' whole
+    grants ((N-1)·B·service) while the B-1 beats riding its grant wait
+    zero — so the mean keeps the (N-1)·service form, evaluated at the
+    policy's *own* (usually much better) service time, while the
+    distribution turns bimodal.  Exclusive grants pay one whole-stream
+    rotation up front; engine k waits k streams, so the engine-mean is
+    (N-1)/2 streams and the head (the last engine) waits N-1.
+    """
+    if arbitration == "exclusive":
+        stream = txns_per_engine * mean_service
+        return 0.5 * (num_engines - 1) * stream, (num_engines - 1) * stream
+    head = (num_engines - 1) * grant_beats * mean_service
+    return (num_engines - 1) * mean_service, head
 
 
 def contended_throughput(
@@ -506,6 +663,8 @@ def contended_throughput(
     *,
     num_engines: int = 1,
     op: str = "read",
+    arbitration: str = "round_robin",
+    burst_beats: int = 1,
 ) -> ContentionResult:
     """Steady-state throughput of N engines sharing one channel port.
 
@@ -513,28 +672,42 @@ def contended_throughput(
     2019: several compute engines (PEs) multiplexed onto one HBM
     pseudo-channel through the mini-switch.  Each engine issues the same
     RST stream over its own W-byte window (base ``A + k*W``); the shared
-    port round-robins one transaction per engine per round, and the
-    interleaved stream runs through the same three resource bounds as a
-    single engine's (`_stream_bounds`) — interleaving is what creates the
+    port rotates arbitration grants across engines, and the interleaved
+    stream runs through the same three resource bounds as a single
+    engine's (`_stream_bounds`) — interleaving is what creates the
     contention: engines share banks but occupy different rows, so row
     locality that survives one engine's stride is destroyed by its
     neighbors' interleaved activations, while short bank-group runs can
     actually *improve* bus utilization (the same effect as Fig. 6's
     policy interleaving).
 
+    `arbitration` is the granularity of that rotation (DESIGN.md §9):
+
+    * ``"round_robin"`` — one transaction per engine per round, the
+      worst case (every beat lands between two other engines' row
+      activations) and the policy PR 4 shipped;
+    * ``"burst"`` — ``burst_beats`` consecutive transactions per grant,
+      so row-buffer locality survives *inside* a grant and only the
+      grant boundaries thrash — the knob real AXI interconnects expose;
+    * ``"exclusive"`` — each engine's whole stream runs to completion,
+      the serialized bound ``burst`` converges to as the grant grows
+      (``burst_beats >= txns`` is bit-identical to it).
+
     Two sharing terms come out:
 
     * **bandwidth sharing** — ``aggregate_gbps`` is clamped at the shared
       port's wire rate; ``per_engine_gbps = aggregate / N`` under fair
       arbitration.
-    * **queueing delay** — the mean arbitration wait of one transaction:
-      ``(N - 1) x`` the interleaved stream's mean per-transaction service
-      time (each of the other engines has one transaction in flight per
-      round-robin round).
+    * **queueing delay** — the mean arbitration wait of one transaction
+      (see `_queueing_terms`), plus the grant-head wait in
+      ``detail["grant_head_wait_cycles"]``: burst grants keep the mean of
+      round robin but concentrate it onto grant heads.
 
     For ``num_engines == 1`` the result is bit-identical to
     :func:`throughput` (same stream, same bounds, same float ops) with a
-    zero queueing term — pinned by the N=1 parity tests.
+    zero queueing term under every policy — pinned by the N=1 parity
+    tests; ``arbitration="round_robin"`` is bit-identical to the
+    pre-arbitration (PR 4) contended path.
     """
     if num_engines < 1:
         raise ValueError(f"num_engines must be >= 1, got {num_engines}")
@@ -542,7 +715,9 @@ def contended_throughput(
     p.validate(spec)
     cmds_per_txn = max(1, p.b // spec.bus_bytes_per_cycle)
     addrs, txns_per_engine = _contended_command_addresses(
-        p, spec.bus_bytes_per_cycle, num_engines)
+        p, spec.bus_bytes_per_cycle, num_engines,
+        arbitration=arbitration, burst_beats=burst_beats)
+    bb = _grant_beats(arbitration, burst_beats, txns_per_engine)
     dec = mapping.decode(addrs)
     bank = np.asarray(mapping.bank_id_from(dec))
     row = np.asarray(dec["R"])
@@ -562,7 +737,8 @@ def contended_throughput(
     gbps = min(gbps, spec.peak_channel_gbps)
 
     mean_service = steady_cycles / total_txns if total_txns else 0.0
-    queueing = (num_engines - 1) * mean_service
+    queueing, head_wait = _queueing_terms(
+        arbitration, bb, num_engines, txns_per_engine, mean_service)
 
     return ContentionResult(
         num_engines=num_engines,
@@ -574,7 +750,11 @@ def contended_throughput(
                 "txns_per_engine": float(txns_per_engine),
                 "total_acts": float(total_acts),
                 "mean_service_cycles": mean_service,
+                "grant_head_wait_cycles": head_wait,
+                "grant_beats": float(bb),
                 "efficiency": eff},
+        arbitration=arbitration,
+        burst_beats=burst_beats,
     )
 
 

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.params import RSTParams
 from repro.core.rst import block_params
+from repro.core.timing_model import _grant_beats
 from repro.kernels.rst_contend import rst_contend_read
 from repro.kernels.rst_read import LANE, SUBLANE, rst_read
 from repro.kernels.rst_write import rst_write
@@ -121,39 +122,56 @@ def measure_read_bandwidth(p: RSTParams, *, dtype=jnp.float32,
 
 def contended_params_operand(p: RSTParams, num_engines: int, dtype,
                              burst_rows: int = SUBLANE,
-                             grid_txns: int | None = None) -> jax.Array:
-    """Pack byte-level RST params + engine count into the int32[5] scalar
-    operand of the concurrent-access kernel."""
+                             grid_txns: int | None = None,
+                             burst_beats: int = 1) -> jax.Array:
+    """Pack byte-level RST params + engine count + grant size into the
+    int32[6] scalar operand of the concurrent-access kernel."""
     base = params_operand(p, dtype, burst_rows, grid_txns)
     return jnp.concatenate(
-        [base, jnp.array([num_engines], dtype=jnp.int32)])
+        [base, jnp.array([num_engines, burst_beats], dtype=jnp.int32)])
+
+
+def _resolve_grant_beats(arbitration: str, burst_beats: int,
+                         grid_txns: int) -> int:
+    """Map the arbitration-policy axis onto the kernel's grant size via
+    the timing model's shared `_grant_beats` table (one set of policy
+    names and validations), clamped to the per-engine grid: a grant
+    cannot exceed the stream, and an unclamped grant would pad the grid
+    with checksum-gated dummy steps that still occupy the pipeline and
+    bias the wall-clock bandwidth low."""
+    return min(_grant_beats(arbitration, burst_beats, grid_txns), grid_txns)
 
 
 def measure_contended_bandwidth(p: RSTParams, *, num_engines: int,
+                                arbitration: str = "round_robin",
+                                burst_beats: int = 1,
                                 dtype=jnp.float32,
                                 burst_rows: int = SUBLANE,
                                 grid_txns: int | None = None,
                                 interpret: bool = True) -> BandwidthSample:
-    """N read engines sharing one memory port (DESIGN.md §8): the
-    round-robin interleaved traversal of `timing_model.contended_throughput`
-    run on the device.  Each engine owns a disjoint W-byte window of one
-    shared buffer; bytes moved counts every engine (N·n·B over the wall
-    time), so `gbps` is the port's *aggregate* under contention."""
+    """N read engines sharing one memory port (DESIGN.md §8/§9): the
+    grant-interleaved traversal of `timing_model.contended_throughput`
+    run on the device, at the requested arbitration granularity
+    (round-robin beats, `burst_beats`-sized grants, or exclusive
+    whole-stream grants).  Each engine owns a disjoint W-byte window of
+    one shared buffer; bytes moved counts every engine (N·n·B over the
+    wall time), so `gbps` is the port's *aggregate* under contention."""
     if num_engines < 1:
         raise ValueError(f"num_engines must be >= 1, got {num_engines}")
     grid = grid_txns or default_grid(p.n, interpret)
+    bb = _resolve_grant_beats(arbitration, burst_beats, grid)
     operand = contended_params_operand(p, num_engines, dtype, burst_rows,
-                                       grid)
+                                       grid, bb)
     buf = make_working_buffer(p, dtype, num_engines=num_engines)
     # Warm-up compiles and (in interpret mode) validates tracing.
     out = rst_contend_read(operand, buf, grid_txns=grid,
-                           num_engines=num_engines, burst_rows=burst_rows,
-                           interpret=interpret)
+                           num_engines=num_engines, burst_beats=bb,
+                           burst_rows=burst_rows, interpret=interpret)
     out.block_until_ready()
     t0 = time.perf_counter()
     out = rst_contend_read(operand, buf, grid_txns=grid,
-                           num_engines=num_engines, burst_rows=burst_rows,
-                           interpret=interpret)
+                           num_engines=num_engines, burst_beats=bb,
+                           burst_rows=burst_rows, interpret=interpret)
     out.block_until_ready()
     dt = time.perf_counter() - t0
     return BandwidthSample(

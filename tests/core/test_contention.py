@@ -9,9 +9,10 @@ Backend / Engine / Sweep and the experiment registry.
 import numpy as np
 import pytest
 
-from repro.core import (DDR3, DDR4, HBM, HBM3, Backend, Engine, RSTParams,
-                        Sweep, contended_throughput, get_mapping,
-                        register_backend, throughput)
+from repro.core import (ARBITRATION_POLICIES, DDR3, DDR4, HBM, HBM3,
+                        PLACEMENTS, Backend, Engine, RSTParams, Sweep,
+                        contended_throughput, get_mapping, register_backend,
+                        throughput, topology_for)
 from repro.core import engine as engine_mod
 from repro.core.experiments import run_experiment
 
@@ -75,6 +76,161 @@ class TestContentionModel:
 
 
 # ---------------------------------------------------------------------------
+# Arbitration granularity (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class TestArbitrationGranularity:
+    def test_burst_grants_recover_the_collapse(self):
+        # The §9 handbook story: per-beat round robin collapses two
+        # sequential HBM streams to ~1.3 GB/s; 16-beat grants preserve
+        # enough row locality to recover most of it; exclusive grants
+        # restore the single-engine bus bound entirely.
+        m = get_mapping(HBM)
+        p = _seq(HBM)
+        rr = contended_throughput(p, m, HBM, num_engines=2)
+        b16 = contended_throughput(p, m, HBM, num_engines=2,
+                                   arbitration="burst", burst_beats=16)
+        ex = contended_throughput(p, m, HBM, num_engines=2,
+                                  arbitration="exclusive")
+        assert rr.aggregate_gbps < 0.2 * ex.aggregate_gbps
+        assert b16.aggregate_gbps > 5 * rr.aggregate_gbps
+        assert b16.aggregate_gbps < ex.aggregate_gbps
+        assert ex.bound == "bus/ccd"          # serialized = single-engine
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_ladder_monotone_in_grant_size(self, spec):
+        m = get_mapping(spec)
+        p = _seq(spec)
+        aggs = [contended_throughput(p, m, spec, num_engines=4,
+                                     arbitration="burst",
+                                     burst_beats=bb).aggregate_gbps
+                for bb in (1, 4, 16, 64)]
+        assert all(a <= b + 1e-9 for a, b in zip(aggs, aggs[1:]))
+
+    def test_grant_head_wait_concentrates_with_grant_size(self):
+        # Mean queueing stays in the (N-1)*service family, but the head of
+        # each grant absorbs the whole rotation — bb times the mean.
+        m = get_mapping(HBM)
+        r = contended_throughput(_seq(HBM), m, HBM, num_engines=4,
+                                 arbitration="burst", burst_beats=16)
+        assert r.detail["grant_head_wait_cycles"] == pytest.approx(
+            16 * r.queueing_delay_cycles)
+
+    def test_exclusive_queueing_is_half_the_rotation(self):
+        m = get_mapping(HBM)
+        r = contended_throughput(_seq(HBM), m, HBM, num_engines=4,
+                                 arbitration="exclusive")
+        stream = r.detail["txns_per_engine"] * r.detail["mean_service_cycles"]
+        assert r.queueing_delay_cycles == pytest.approx(0.5 * 3 * stream)
+        assert r.detail["grant_head_wait_cycles"] == pytest.approx(3 * stream)
+
+    def test_result_records_the_axis(self):
+        m = get_mapping(HBM)
+        r = contended_throughput(_seq(HBM), m, HBM, num_engines=2,
+                                 arbitration="burst", burst_beats=8)
+        assert (r.arbitration, r.burst_beats) == ("burst", 8)
+        assert r.placement == "same_channel"
+        assert ARBITRATION_POLICIES == ("round_robin", "burst", "exclusive")
+
+
+# ---------------------------------------------------------------------------
+# Cross-channel placements (switch capacity terms, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class TestCrossChannelPlacement:
+    def test_same_switch_scales_linearly_up_to_the_crossbar(self):
+        # Engines on *different* channels of one U280 mini-switch see no
+        # DRAM-side contention, and the full 4x4 crossbar never binds.
+        eng = Engine(channel=0, spec=HBM)
+        p = _seq(HBM)
+        single = eng.evaluate_contention(p, num_engines=1).aggregate_gbps
+        r4 = eng.evaluate_contention(p, num_engines=4,
+                                     placement="same_switch")
+        assert r4.aggregate_gbps == pytest.approx(4 * single)
+        assert r4.detail["capacity_cap_gbps"] == 57.6
+        # ... and beats the shared-port layout by an order of magnitude.
+        shared = eng.evaluate_contention(p, num_engines=4)
+        assert r4.aggregate_gbps > 10 * shared.aggregate_gbps
+
+    def test_cross_switch_serializes_on_the_lateral_bridge(self):
+        eng = Engine(channel=0, spec=HBM)
+        p = _seq(HBM)
+        r = eng.evaluate_contention(p, num_engines=4,
+                                    placement="cross_switch")
+        assert r.aggregate_gbps == pytest.approx(
+            topology_for(HBM).lateral_gbps)
+        assert r.bound == "lateral"
+        assert r.detail["uncapped_aggregate_gbps"] > r.aggregate_gbps
+
+    def test_hbm3_switch_aggregate_binds(self):
+        # The modeled HBM3 fabric's shared internal datapath (38.4 GB/s)
+        # sits below two saturated 25.6 GB/s ports — the same_switch
+        # capacity term binds, unlike the U280 full crossbar.
+        eng = Engine(channel=0, spec=HBM3)
+        p = _seq(HBM3)
+        r = eng.evaluate_contention(p, num_engines=2,
+                                    placement="same_switch")
+        assert r.aggregate_gbps == pytest.approx(
+            topology_for(HBM3).switch_agg_gbps)
+        assert r.bound == "switch"
+
+    def test_single_requester_location_independent_on_u280(self):
+        # Fig. 8 (measured): one U280 requester sees the same throughput
+        # on every placement — its lateral bridge is a full channel width,
+        # so no capacity term binds a single stream.
+        eng = Engine(channel=0, spec=HBM)
+        p = _seq(HBM)
+        single = eng.evaluate_contention(p, num_engines=1).aggregate_gbps
+        for placement in PLACEMENTS:
+            r = eng.evaluate_contention(p, num_engines=1,
+                                        placement=placement)
+            assert r.aggregate_gbps == pytest.approx(single)
+
+    def test_flat_fabric_degrades_cross_switch(self):
+        # DDR4 has one degenerate switch — nothing to cross; the result
+        # equals same_switch and records the degradation.
+        eng = Engine(channel=0, spec=DDR4)
+        p = _seq(DDR4)
+        same = eng.evaluate_contention(p, num_engines=2,
+                                       placement="same_switch")
+        cross = eng.evaluate_contention(p, num_engines=2,
+                                        placement="cross_switch")
+        assert cross.aggregate_gbps == same.aggregate_gbps
+        assert cross.detail["placement_degraded"] == 1.0
+        assert same.detail["placement_degraded"] == 0.0
+
+    def test_single_port_fabric_equals_same_channel(self):
+        # DDR3's flat fabric has one channel: every placement collapses
+        # onto the shared-port model.
+        eng = Engine(channel=0, spec=DDR3)
+        p = _seq(DDR3)
+        shared = eng.evaluate_contention(p, num_engines=2)
+        switch = eng.evaluate_contention(p, num_engines=2,
+                                         placement="same_switch")
+        assert switch.aggregate_gbps == shared.aggregate_gbps
+
+    def test_engines_overflow_ports(self):
+        # 8 engines over a 4-port mini-switch: 2 per port, each port pays
+        # the DRAM-side contention of its own pair.
+        eng = Engine(channel=0, spec=HBM)
+        p = _seq(HBM)
+        pair = eng.evaluate_contention(p, num_engines=2).aggregate_gbps
+        r = eng.evaluate_contention(p, num_engines=8,
+                                    placement="same_switch")
+        assert r.detail["ports"] == 4.0
+        assert r.detail["engines_per_port_max"] == 2.0
+        assert r.aggregate_gbps == pytest.approx(4 * pair)
+
+    def test_unknown_placement_rejected(self):
+        eng = Engine(channel=0, spec=HBM)
+        with pytest.raises(ValueError, match="placement"):
+            eng.evaluate_contention(_seq(HBM), num_engines=2,
+                                    placement="adjacent_rack")
+
+
+# ---------------------------------------------------------------------------
 # Engine + backend plumbing
 # ---------------------------------------------------------------------------
 
@@ -121,6 +277,60 @@ class TestEnginePlumbing:
         assert engine_mod.get_backend("pallas").supports_contention
 
 
+class _LegacySignatureBackend(Backend):
+    """A backend written against the pre-§9 protocol signatures."""
+
+    name = "testlegacy"
+    deterministic = True
+    supports_latency = True
+    supports_contention = True
+
+    def throughput(self, spec, p, mapping, *, op="read"):
+        return throughput(p, mapping, spec, op=op)
+
+    def latency(self, spec, p, mapping, *, switch_enabled,
+                switch_extra_cycles, op="read"):
+        from repro.core import serial_latencies
+        return serial_latencies(p, mapping, spec, op=op,
+                                switch_enabled=switch_enabled,
+                                switch_extra_cycles=switch_extra_cycles)
+
+    def contended_throughput(self, spec, p, mapping, *, num_engines,
+                             op="read"):
+        return contended_throughput(p, mapping, spec,
+                                    num_engines=num_engines, op=op)
+
+
+@pytest.fixture
+def legacy_backend():
+    bk = register_backend(_LegacySignatureBackend())
+    yield bk
+    engine_mod._BACKEND_REGISTRY.pop("testlegacy", None)
+
+
+class TestLegacyBackendCompat:
+    def test_default_paths_keep_working(self, legacy_backend):
+        # The §9 axes are forwarded only when engaged: a pre-§9 backend
+        # still serves uncontended captures and round-robin contention.
+        eng = Engine(channel=0, spec=HBM, backend="testlegacy")
+        p = RSTParams(n=256, b=32, s=128, w=0x1000000)
+        eng.configure_read(p)
+        cap = eng.capture_latency_list()
+        assert len(cap) == 256
+        res = eng.evaluate_contention(_seq(HBM), num_engines=2)
+        assert res.aggregate_gbps > 0
+
+    def test_engaging_new_axes_fails_loudly(self, legacy_backend):
+        eng = Engine(channel=0, spec=HBM, backend="testlegacy")
+        p = RSTParams(n=256, b=32, s=128, w=0x1000000)
+        eng.configure_read(p)
+        with pytest.raises(TypeError, match="arbitration|num_engines"):
+            eng.capture_latency_list(num_engines=4)
+        with pytest.raises(TypeError, match="arbitration|burst_beats"):
+            eng.evaluate_contention(_seq(HBM), num_engines=2,
+                                    arbitration="burst", burst_beats=8)
+
+
 class TestSweepPlumbing:
     def test_contention_points_memoized(self):
         sweep = Sweep(HBM)
@@ -150,6 +360,36 @@ class TestSweepPlumbing:
         assert sweep.stats.evaluated == 2
         # ... but N=1 contention agrees with the plain throughput point.
         assert results[1].value.aggregate_gbps == results[0].value.gbps
+
+    def test_arbitration_and_placement_are_part_of_the_key(self):
+        sweep = Sweep(HBM)
+        p = _seq(HBM, n=1024)
+        sweep.add_contention(p, num_engines=4)
+        sweep.add_contention(p, num_engines=4, arbitration="burst",
+                             burst_beats=8)
+        sweep.add_contention(p, num_engines=4, arbitration="burst",
+                             burst_beats=16)
+        sweep.add_contention(p, num_engines=4, placement="same_switch")
+        sweep.add_contention(p, num_engines=4)          # repeat -> cached
+        results = sweep.run()
+        assert sweep.stats.points == 5
+        assert sweep.stats.evaluated == 4
+        assert results[4].cached
+        aggs = [r.value.aggregate_gbps for r in results[:4]]
+        assert len(set(aggs)) == 4                      # all distinct
+
+    def test_contended_latency_points_keyed_on_engines(self):
+        sweep = Sweep(HBM)
+        p = RSTParams(n=512, b=32, s=128, w=0x1000000)
+        sweep.add_latency(p)
+        sweep.add_latency(p, num_engines=4, arbitration="burst",
+                          burst_beats=8)
+        sweep.add_latency(p, num_engines=4, arbitration="burst",
+                          burst_beats=8)                # repeat -> cached
+        results = sweep.run()
+        assert sweep.stats.evaluated == 2
+        assert results[2].cached
+        assert results[1].value.cycles.mean() > results[0].value.cycles.mean()
 
 
 # ---------------------------------------------------------------------------
@@ -183,3 +423,79 @@ class TestContentionExperiments:
                 round(spec.lat_page_miss + spec.ns_to_cycles(spec.t_wr_ns))
             ) - spec.lat_page_miss
             assert res["page_hit"]["cycles"] == spec.lat_page_hit
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_arbitration_granularity_sweep(self, spec):
+        res = run_experiment("arbitration_granularity_sweep", spec)
+        for n_eng, per in res.items():
+            rr = per["round_robin"]["aggregate_gbps"]
+            ex = per["exclusive"]["aggregate_gbps"]
+            assert rr <= ex + 1e-9
+            aggs = [rr] + [per["burst"][bb]["aggregate_gbps"]
+                           for bb in sorted(per["burst"])] + [ex]
+            assert all(a <= b + 1e-9 for a, b in zip(aggs, aggs[1:]))
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_fig9_cross_switch_contention(self, spec):
+        res = run_experiment("fig9_cross_switch_contention", spec)
+        assert set(res) == {"same_channel", "same_switch", "cross_switch"}
+        for per_n in res.values():
+            assert set(per_n) == {1, 2, 4}
+        # One requester is placement-independent up to the lateral bridge:
+        # same_channel and same_switch always agree; cross_switch matches
+        # unless the fabric's bridge is narrower than a channel (the
+        # modeled HBM3 instance), where it honestly caps a single stream.
+        singles = {plc: per_n[1]["aggregate_gbps"]
+                   for plc, per_n in res.items()}
+        assert singles["same_channel"] == pytest.approx(
+            singles["same_switch"])
+        lateral = topology_for(spec).lateral_gbps
+        expect_single = singles["same_channel"]
+        if lateral is not None:
+            expect_single = min(expect_single, lateral)
+        assert singles["cross_switch"] == pytest.approx(expect_single)
+        # Spreading engines over ports never loses to sharing one port.
+        for n_eng in (2, 4):
+            assert (res["same_switch"][n_eng]["aggregate_gbps"]
+                    >= res["same_channel"][n_eng]["aggregate_gbps"] - 1e-9)
+
+    def test_fig9_cross_switch_ordering_on_u280(self):
+        res = run_experiment("fig9_cross_switch_contention", HBM)
+        same_ch = res["same_channel"][4]["aggregate_gbps"]
+        same_sw = res["same_switch"][4]["aggregate_gbps"]
+        cross = res["cross_switch"][4]["aggregate_gbps"]
+        assert same_ch < cross < same_sw
+        assert res["cross_switch"][4]["bound"] == "lateral"
+        assert not res["cross_switch"][4]["degraded"]
+
+    def test_contended_latency_classes_exclusive_has_one_queued_head(self):
+        # Regression: under exclusive grants only sample 0 carries the
+        # (whole-stream) wait — the derive must not bin grant riders into
+        # phantom queued classes with a rotation-sized anchor.  Rider
+        # refresh spikes keep binning as refresh, exactly as in the
+        # uncontended (N=1) classification.
+        res = run_experiment("contended_latency_classes", HBM,
+                             arbitration="exclusive", burst_beats=1)
+        counts = res[4]["counts"]
+        queued = sum(v for k, v in counts.items() if k.endswith("_queued"))
+        assert queued == 1
+        assert counts["refresh"] == res[1]["counts"]["refresh"] > 10
+        assert res[4]["grant_head_wait_cycles"] > 1000
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_contended_latency_classes(self, spec):
+        res = run_experiment("contended_latency_classes", spec)
+        assert set(res) == {1, 4}
+        base, cont = res[1], res[4]
+        assert base["grant_head_wait_cycles"] == 0.0
+        assert cont["grant_head_wait_cycles"] > 0
+        # The uncontended capture has no queued samples at all ...
+        assert all(v == 0 for k, v in base["counts"].items()
+                   if k.endswith("_queued"))
+        # ... while the contended one splits ~1/8 of samples (the grant
+        # heads of 8-beat grants) into the queued classes.
+        queued = sum(v for k, v in cont["counts"].items()
+                     if k.endswith("_queued"))
+        total = sum(cont["counts"].values())
+        assert 0 < queued <= total // 4
+        assert cont["mean_cycles"] > base["mean_cycles"]

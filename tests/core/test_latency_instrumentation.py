@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.core import (DDR3, DDR4, HBM, HBM3, Engine, LatencyModule,
-                        RSTParams, get_mapping, serial_latencies)
+                        RSTParams, UnsupportedCapability, get_mapping,
+                        serial_latencies)
 
 ALL_SPECS = [HBM, DDR4, HBM3, DDR3]
 SPEC_IDS = [s.name for s in ALL_SPECS]
@@ -238,3 +239,110 @@ class TestEngineCaptureRouting:
         eng.configure_read(_hit_params(HBM))
         with pytest.raises(ValueError, match="serial"):
             eng.capture_latency_list(op="duplex")
+
+    @pytest.mark.parametrize("op", ["read", "write"])
+    def test_capture_without_timers_raises_unsupported(self, op):
+        # The ROADMAP gap: a serial capture on a backend without
+        # per-transaction timers must fail loudly — naming the backend
+        # and the op — not silently return read-shaped anchors.
+        eng = Engine(channel=0, spec=HBM, backend="pallas")
+        eng.configure_read(_hit_params(HBM))
+        eng.configure_write(_hit_params(HBM))
+        with pytest.raises(UnsupportedCapability) as exc:
+            eng.capture_latency_list(op=op)
+        assert "pallas" in str(exc.value)
+        assert repr(op) in str(exc.value)
+        # ... and stays catchable as the NotImplementedError it once was.
+        assert isinstance(exc.value, NotImplementedError)
+
+
+# ---------------------------------------------------------------------------
+# Contended captures: queueing feedback + the doubled-anchor classifier
+# ---------------------------------------------------------------------------
+
+
+class TestContendedCapture:
+    N_ENG, BB = 4, 8
+
+    def _contended_capture(self, spec, counter_bits=16):
+        eng = Engine(channel=0, spec=spec)
+        eng.configure_read(_hit_params(spec, n=1024))
+        base = eng.capture_latency_list(counter_bits=counter_bits)
+        cont = eng.capture_latency_list(counter_bits=counter_bits,
+                                        num_engines=self.N_ENG,
+                                        arbitration="burst",
+                                        burst_beats=self.BB)
+        return base, cont
+
+    def test_classify_contended_reduces_to_classify_at_zero_shift(self):
+        module = LatencyModule(counter_bits=16)
+        base, _ = self._contended_capture(HBM)
+        plain = module.classify(base, HBM)
+        doubled = module.classify_contended(base, HBM, 0.0)
+        for name, count in plain.items():
+            assert doubled[name] == count
+        assert all(doubled[f"{k}_queued"] == 0
+                   for k in ("hit", "closed", "miss"))
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=SPEC_IDS)
+    def test_contended_capture_is_bimodal(self, spec):
+        # Grant heads (1 in BB samples) carry the rotation wait; riders
+        # post at the uncontended anchors.  The doubled-anchor classifier
+        # separates the two populations.
+        base, cont = self._contended_capture(spec)
+        assert not np.array_equal(base, cont)
+        module = LatencyModule(counter_bits=16)
+        trace = serial_latencies(_hit_params(spec, n=1024),
+                                 get_mapping(spec), spec)
+        head_wait = (self.N_ENG - 1) * self.BB * float(np.mean(trace.cycles))
+        counts = module.classify_contended(cont, spec, head_wait)
+        queued = sum(v for k, v in counts.items() if k.endswith("_queued"))
+        unqueued = sum(v for k, v in counts.items()
+                       if not k.endswith("_queued") and k != "refresh")
+        assert queued == pytest.approx(len(cont) / self.BB, abs=8)
+        assert unqueued > (self.BB - 2) / self.BB * len(cont)
+        # The base classifier smears the heads into refresh/miss instead.
+        plain = module.classify(cont, spec)
+        assert plain["refresh"] >= queued - 8
+
+    def test_rider_refresh_spikes_survive_contended_classification(self):
+        # Regression: each population keeps its own refresh threshold — a
+        # rider stalled behind a refresh (8+ cycles above the *base* miss
+        # anchor, far below the queued ladder) must keep binning as
+        # refresh, not silently rebin as miss under a single threshold
+        # parked above miss_queued.
+        module = LatencyModule(counter_bits=16)
+        base, cont = self._contended_capture(HBM)
+        base_counts = module.classify(base, HBM)
+        assert base_counts["refresh"] > 10        # the trace spans refreshes
+        trace = serial_latencies(_hit_params(HBM, n=1024),
+                                 get_mapping(HBM), HBM)
+        head_wait = (self.N_ENG - 1) * self.BB * float(np.mean(trace.cycles))
+        counts = module.classify_contended(cont, HBM, head_wait)
+        # Every refresh spike survives: riders via the base threshold,
+        # refresh-stalled grant heads via the queued threshold (rounding
+        # of the shifted samples may move a boundary sample or two) —
+        # and none of them leak into the miss classes, whose combined
+        # count stays the base capture's genuine-miss count.
+        assert abs(counts["refresh"] - base_counts["refresh"]) <= 2
+        assert abs(counts["miss"] + counts["miss_queued"]
+                   - base_counts["miss"]) <= 2
+
+    def test_queued_anchors_clamp_to_saturation(self):
+        module = LatencyModule()            # 8-bit registers
+        anchors = module.contended_anchors(HBM, queueing_cycles=500.0)
+        for name in ("hit", "closed", "miss"):
+            assert anchors[f"{name}_queued"] == module.saturate
+        # An 8-bit contended capture saturates its heads; they still bin
+        # into the queued classes, not as phantom misses.
+        _, cont8 = self._contended_capture(HBM, counter_bits=8)
+        trace = serial_latencies(_hit_params(HBM, n=1024),
+                                 get_mapping(HBM), HBM)
+        head_wait = (self.N_ENG - 1) * self.BB * float(np.mean(trace.cycles))
+        counts = module.classify_contended(cont8, HBM, head_wait)
+        queued = sum(v for k, v in counts.items() if k.endswith("_queued"))
+        saturated = int(np.count_nonzero(cont8 == module.saturate))
+        assert saturated > 0
+        # Every saturated grant head bins into the queued ladder (whose
+        # anchors sit at the clamp), never back into the base miss class.
+        assert queued >= saturated

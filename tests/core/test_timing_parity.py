@@ -172,6 +172,208 @@ def test_contention_n1_bit_identical_to_single_engine(spec, policy, kw, op):
         assert cont.detail[bound] == single.detail[bound]
 
 
+# ---------------------------------------------------------------------------
+# Arbitration granularity (DESIGN.md §9): oracle parity + reductions
+# ---------------------------------------------------------------------------
+
+ARBITRATION_CASES = [
+    ("round_robin", 1), ("burst", 2), ("burst", 8), ("burst", 16),
+    ("exclusive", 1),
+]
+ARB_IDS = [f"{pol}{bb}" if pol == "burst" else pol
+           for pol, bb in ARBITRATION_CASES]
+
+
+@pytest.mark.parametrize("arbitration,burst_beats", ARBITRATION_CASES,
+                         ids=ARB_IDS)
+@pytest.mark.parametrize("num_engines", [1, 2, 3, 4])
+@pytest.mark.parametrize("spec,policy,kw",
+                         [c[1:] for c in CONTENTION_CASES],
+                         ids=[c[0] for c in CONTENTION_CASES])
+def test_arbitration_policy_parity(spec, policy, kw, num_engines,
+                                   arbitration, burst_beats):
+    """Every arbitration policy matches its explicit per-grant loop oracle
+    at every engine count (the ISSUE's 1e-9 acceptance bar)."""
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    got = vec.contended_throughput(p, m, spec, num_engines=num_engines,
+                                   arbitration=arbitration,
+                                   burst_beats=burst_beats)
+    want = ref.contended_throughput(p, m, spec, num_engines=num_engines,
+                                    arbitration=arbitration,
+                                    burst_beats=burst_beats)
+    assert got.aggregate_gbps == pytest.approx(want.aggregate_gbps, rel=1e-9)
+    assert got.bound == want.bound
+    assert got.queueing_delay_cycles == pytest.approx(
+        want.queueing_delay_cycles, rel=1e-9)
+    assert got.detail["grant_head_wait_cycles"] == pytest.approx(
+        want.detail["grant_head_wait_cycles"], rel=1e-9)
+    assert got.detail["total_acts"] == want.detail["total_acts"]
+    for bound in ("bus/ccd", "bank", "faw"):
+        assert got.detail[bound] == pytest.approx(want.detail[bound],
+                                                  rel=1e-9), bound
+
+
+@pytest.mark.parametrize("num_engines", [2, 4, 8])
+@pytest.mark.parametrize("spec,policy,kw",
+                         [c[1:] for c in CONTENTION_CASES],
+                         ids=[c[0] for c in CONTENTION_CASES])
+def test_burst_one_bit_identical_to_round_robin(spec, policy, kw,
+                                                num_engines):
+    """The ISSUE reduction bar: burst_beats=1 IS per-beat round robin —
+    identical stream, bit-identical numbers."""
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    rr = vec.contended_throughput(p, m, spec, num_engines=num_engines,
+                                  arbitration="round_robin")
+    b1 = vec.contended_throughput(p, m, spec, num_engines=num_engines,
+                                  arbitration="burst", burst_beats=1)
+    assert b1.aggregate_gbps == rr.aggregate_gbps      # bit-exact
+    assert b1.bound == rr.bound
+    assert b1.queueing_delay_cycles == rr.queueing_delay_cycles
+    for bound in ("bus/ccd", "bank", "faw"):
+        assert b1.detail[bound] == rr.detail[bound]
+
+
+@pytest.mark.parametrize("arbitration,burst_beats", ARBITRATION_CASES,
+                         ids=ARB_IDS)
+def test_n1_bit_identical_under_every_policy(arbitration, burst_beats):
+    """N=1 reduces to the uncontended path regardless of how the (absent)
+    other engines would have been arbitrated."""
+    p = RSTParams(n=2048, b=32, s=32, w=0x1000000)
+    m = get_mapping(HBM)
+    single = vec.throughput(p, m, HBM)
+    cont = vec.contended_throughput(p, m, HBM, num_engines=1,
+                                    arbitration=arbitration,
+                                    burst_beats=burst_beats)
+    assert cont.aggregate_gbps == single.gbps
+    assert cont.queueing_delay_cycles == 0.0
+    for bound in ("bus/ccd", "bank", "faw"):
+        assert cont.detail[bound] == single.detail[bound]
+
+
+def test_burst_run_length_reduces_toward_serialized_bound():
+    """The ISSUE reduction bar: growing the grant monotonically approaches
+    the exclusive (serialized) bound, and a whole-stream grant IS it."""
+    p = RSTParams(n=2048, b=32, s=32, w=0x1000000)
+    m = get_mapping(HBM)
+    exclusive = vec.contended_throughput(p, m, HBM, num_engines=4,
+                                         arbitration="exclusive")
+    gaps = []
+    for bb in (1, 4, 16, 64, 256):
+        burst = vec.contended_throughput(p, m, HBM, num_engines=4,
+                                         arbitration="burst", burst_beats=bb)
+        gaps.append(abs(exclusive.aggregate_gbps - burst.aggregate_gbps))
+    assert all(a >= b for a, b in zip(gaps, gaps[1:]))
+    assert gaps[0] > 1.0                    # round robin is far off the bound
+    # A grant covering the whole stream is the serialized bound, bit-exact.
+    whole = vec.contended_throughput(p, m, HBM, num_engines=4,
+                                     arbitration="burst", burst_beats=10**9)
+    assert whole.aggregate_gbps == exclusive.aggregate_gbps
+    assert whole.bound == exclusive.bound
+    # ... and its grant-head wait clamps to the physical maximum — the
+    # other engines' whole streams — matching exclusive's head wait.
+    assert whole.detail["grant_beats"] == whole.detail["txns_per_engine"]
+    assert whole.detail["grant_head_wait_cycles"] == pytest.approx(
+        exclusive.detail["grant_head_wait_cycles"])
+
+
+def test_oversized_burst_latency_shift_clamps_to_stream():
+    # The serial-side twin of the clamp: a grant larger than the capture
+    # shifts sample 0 by at most the other engines' whole streams.
+    p = RSTParams(n=64, b=32, s=128, w=0x1000000)
+    m = get_mapping(HBM)
+    base = vec.serial_latencies(p, m, HBM)
+    cont = vec.serial_latencies(p, m, HBM, num_engines=4,
+                                arbitration="burst", burst_beats=256)
+    shift = cont.cycles - base.cycles
+    assert shift[0] == pytest.approx(3 * 64 * float(np.mean(base.cycles)))
+    assert np.all(shift[1:] == 0.0)
+
+
+def test_arbitration_rejects_bad_pairs():
+    p = RSTParams(n=64, b=32, s=32, w=0x100000)
+    m = get_mapping(HBM)
+    with pytest.raises(ValueError, match="arbitration"):
+        vec.contended_throughput(p, m, HBM, num_engines=2,
+                                 arbitration="lottery")
+    with pytest.raises(ValueError, match="burst_beats"):
+        vec.contended_throughput(p, m, HBM, num_engines=2,
+                                 arbitration="round_robin", burst_beats=4)
+    with pytest.raises(ValueError, match="burst_beats"):
+        vec.contended_throughput(p, m, HBM, num_engines=2,
+                                 arbitration="burst", burst_beats=0)
+
+
+# ---------------------------------------------------------------------------
+# Contended serial latencies: queueing feedback parity (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+CONTENDED_LATENCY_CASES = [
+    ("hbm_hit_regime", HBM, dict(n=1024, b=32, s=128, w=0x1000000)),
+    ("hbm_miss_regime", HBM, dict(n=1024, b=32, s=128 * 1024, w=0x1000000)),
+    ("ddr4_hit_regime", DDR4, dict(n=1024, b=64, s=128, w=0x1000000)),
+]
+
+
+@pytest.mark.parametrize("op", ["read", "write"])
+@pytest.mark.parametrize("arbitration,burst_beats", ARBITRATION_CASES,
+                         ids=ARB_IDS)
+@pytest.mark.parametrize("spec,kw",
+                         [c[1:] for c in CONTENDED_LATENCY_CASES],
+                         ids=[c[0] for c in CONTENDED_LATENCY_CASES])
+def test_contended_serial_latency_parity(spec, kw, arbitration, burst_beats,
+                                         op):
+    """The queueing-delay feedback is bit-exact against the per-transaction
+    reference loop at every (policy, burst_beats, N)."""
+    p = RSTParams(**kw)
+    m = get_mapping(spec)
+    for num_engines in (1, 2, 4):
+        got = vec.serial_latencies(p, m, spec, op=op,
+                                   num_engines=num_engines,
+                                   arbitration=arbitration,
+                                   burst_beats=burst_beats)
+        want = ref.serial_contended_latencies(p, m, spec, op=op,
+                                              num_engines=num_engines,
+                                              arbitration=arbitration,
+                                              burst_beats=burst_beats)
+        np.testing.assert_array_equal(got.cycles, want.cycles)
+        assert got.states == want.states
+        np.testing.assert_array_equal(got.refresh_hits, want.refresh_hits)
+
+
+def test_contended_latency_n1_bit_identical_to_uncontended():
+    p = RSTParams(n=1024, b=32, s=128, w=0x1000000)
+    m = get_mapping(HBM)
+    base = vec.serial_latencies(p, m, HBM)
+    for arbitration, bb in ARBITRATION_CASES:
+        cont = vec.serial_latencies(p, m, HBM, num_engines=1,
+                                    arbitration=arbitration, burst_beats=bb)
+        np.testing.assert_array_equal(cont.cycles, base.cycles)
+
+
+def test_contended_latency_grant_heads_carry_the_wait():
+    """Burst grants concentrate the rotation wait onto every bb-th sample;
+    the riders post at the uncontended latencies (the bimodal shape the
+    contended classifier separates)."""
+    p = RSTParams(n=1024, b=32, s=128, w=0x1000000)
+    m = get_mapping(HBM)
+    base = vec.serial_latencies(p, m, HBM)
+    bb, n_eng = 8, 4
+    cont = vec.serial_latencies(p, m, HBM, num_engines=n_eng,
+                                arbitration="burst", burst_beats=bb)
+    shift = cont.cycles - base.cycles
+    expected = (n_eng - 1) * bb * float(np.mean(base.cycles))
+    assert np.allclose(shift[::bb], expected)
+    mask = np.ones(len(shift), dtype=bool)
+    mask[::bb] = False
+    assert np.all(shift[mask] == 0.0)
+    # Round robin spreads the same rotation over every transaction.
+    rr = vec.serial_latencies(p, m, HBM, num_engines=n_eng)
+    rr_shift = rr.cycles - base.cycles
+    assert np.allclose(rr_shift, (n_eng - 1) * float(np.mean(base.cycles)))
+
+
 def test_contended_rejects_bad_engine_count():
     p = RSTParams(n=64, b=32, s=32, w=0x100000)
     with pytest.raises(ValueError, match="num_engines"):

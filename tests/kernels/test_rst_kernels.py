@@ -251,3 +251,68 @@ class TestContendedKernel:
         p = RSTParams(n=8, b=4096, s=4096, w=16 * 4096)
         with pytest.raises(ValueError, match="num_engines"):
             ops.measure_contended_bandwidth(p, num_engines=0)
+
+    # -- burst-grant arbitration variant (DESIGN.md §9) ----------------------
+
+    @pytest.mark.parametrize("burst_beats", [2, 4, 8])
+    @pytest.mark.parametrize("num_engines", [2, 3])
+    def test_burst_grant_checksum_vs_oracle(self, num_engines, burst_beats):
+        # The checksum is the sum of every tile each engine reads — the
+        # same multiset regardless of grant interleave — so the round-
+        # robin oracle pins every grant size, including n % bb != 0.
+        stride, wset, n = 2, 8, 11
+        p = RSTParams(n=n, b=4096, s=stride * 4096, w=wset * 4096)
+        s = ops.measure_contended_bandwidth(
+            p, num_engines=num_engines, arbitration="burst",
+            burst_beats=burst_beats, grid_txns=16)
+        np.testing.assert_allclose(
+            s.checksum,
+            self._oracle(ops.make_working_buffer(
+                p, jnp.float32, num_engines=num_engines),
+                stride, wset, n, num_engines),
+            rtol=1e-5)
+        assert s.bytes_moved == num_engines * n * 4096
+
+    def test_exclusive_matches_round_robin_checksum(self):
+        p = RSTParams(n=9, b=4096, s=8192, w=8 * 4096)
+        rr = ops.measure_contended_bandwidth(p, num_engines=2, grid_txns=16)
+        ex = ops.measure_contended_bandwidth(p, num_engines=2,
+                                             arbitration="exclusive",
+                                             grid_txns=16)
+        np.testing.assert_allclose(ex.checksum, rr.checksum, rtol=1e-5)
+
+    def test_backend_threads_arbitration(self):
+        from repro.core import HBM, get_backend, get_mapping
+        p = RSTParams(n=8, b=4096, s=4096, w=16 * 4096)
+        res = get_backend("pallas").contended_throughput(
+            HBM, p, get_mapping(HBM), num_engines=2,
+            arbitration="burst", burst_beats=4)
+        assert (res.arbitration, res.burst_beats) == ("burst", 4)
+        assert res.bound == "measured"
+
+    def test_rejects_bad_arbitration(self):
+        p = RSTParams(n=8, b=4096, s=4096, w=16 * 4096)
+        with pytest.raises(ValueError, match="arbitration"):
+            ops.measure_contended_bandwidth(p, num_engines=2,
+                                            arbitration="lottery")
+        with pytest.raises(ValueError, match="burst_beats"):
+            ops.measure_contended_bandwidth(p, num_engines=2,
+                                            arbitration="round_robin",
+                                            burst_beats=4)
+
+    def test_grant_beats_clamped_to_grid(self):
+        # Regression: an oversized grant must not pad the grid with gated
+        # dummy steps (they occupy the pipeline and bias gbps low) — a
+        # grant covering the stream IS the exclusive whole-stream grant.
+        assert ops._resolve_grant_beats("burst", 10**9, 16) == 16
+        assert ops._resolve_grant_beats("burst", 6, 16) == 6
+        assert ops._resolve_grant_beats("exclusive", 1, 16) == 16
+        assert ops._resolve_grant_beats("round_robin", 1, 16) == 1
+        p = RSTParams(n=11, b=4096, s=2 * 4096, w=8 * 4096)
+        huge = ops.measure_contended_bandwidth(
+            p, num_engines=2, arbitration="burst", burst_beats=10**9,
+            grid_txns=16)
+        ex = ops.measure_contended_bandwidth(
+            p, num_engines=2, arbitration="exclusive", grid_txns=16)
+        np.testing.assert_allclose(huge.checksum, ex.checksum, rtol=1e-5)
+        assert huge.bytes_moved == ex.bytes_moved
