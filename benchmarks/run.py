@@ -23,9 +23,20 @@ experiment that exposes the axis (CI runs one burst-grant ladder —
 table instead of benchmarking — to stdout, or spliced into README.md's
 catalog markers.
 
+``--service`` switches to the campaign-service soak (DESIGN.md §10): a
+mixed batch of duplicate-heavy experiment requests is served through
+`CampaignService` against a fault-injected primary backend at each
+``--fault-rate`` (comma list, default ``0,0.01,0.1``), with sim
+fallback.  Each soak asserts the service invariants — zero dropped
+requests, duplicates coalesced (backend executions < requests), and at
+the highest non-zero rate at least one degraded (fallback) response —
+and records sustained QPS per rate (``--qps-target`` makes a floor of it).
+CI uploads this as ``BENCH_ci_service.json``.
+
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
          [--experiments NAMES] [--engines N]
          [--arbitration POLICY] [--burst B] [--catalog [PATH]]
+         [--service] [--fault-rate RATES] [--qps-target QPS]
 """
 from __future__ import annotations
 
@@ -207,6 +218,116 @@ def bench_oracle_autotune():
              f"seq_eff={eff:.3f};kv_layout={'/'.join(lay.dims)}")]
 
 
+def parse_fault_rates(text):
+    """Parse the --fault-rate comma list; exits cleanly on bad values."""
+    rates = []
+    for part in text.split(","):
+        part = part.strip()
+        try:
+            rate = float(part)
+        except ValueError:
+            raise SystemExit(
+                f"benchmarks.run: --fault-rate: {part!r} is not a number "
+                f"(expected a comma list like '0,0.01,0.1')")
+        if not 0.0 <= rate <= 1.0:
+            raise SystemExit(
+                f"benchmarks.run: --fault-rate must be in [0, 1], got "
+                f"{rate}")
+        rates.append(rate)
+    if not rates:
+        raise SystemExit("benchmarks.run: --fault-rate: empty rate list")
+    return tuple(rates)
+
+
+def _service_request_mix(quick, n_requests):
+    """A duplicate-heavy mixed batch over the hbm/ddr4 registry: ~16
+    distinct request keys cycled (deterministically shuffled) out to
+    `n_requests`, so coalescing has something to prove."""
+    import numpy as np
+
+    from repro.service import ExperimentRequest
+
+    templates = []
+    for spec in BENCH_SPEC_NAMES:
+        templates += [
+            ExperimentRequest.make("fig6_address_mapping", spec, quick=True),
+            ExperimentRequest.make("table4_idle_latency", spec, n=512),
+            ExperimentRequest.make("fig4_refresh", spec, quick=True),
+            ExperimentRequest.make("fig7_locality", spec, quick=True),
+            ExperimentRequest.make("fig9_channel_contention", spec,
+                                   quick=True),
+            ExperimentRequest.make("table5_total_throughput", spec, n=2048),
+            ExperimentRequest.make("duplex_rw_sweep", spec, quick=True),
+            ExperimentRequest.make("contention_scaling_sweep", spec,
+                                   quick=True),
+        ]
+    reqs = [templates[i % len(templates)] for i in range(n_requests)]
+    order = np.random.default_rng(0).permutation(len(reqs))
+    return [reqs[i] for i in order]
+
+
+def bench_service(quick=False, fault_rates=(0.0, 0.01, 0.1),
+                  qps_target=None):
+    """Campaign-service soak: one row per fault rate (DESIGN.md §10).
+
+    Serves the mixed batch through `CampaignService` with a
+    fault-injected sim primary (transient/timeout/corrupt mix) and a
+    clean sim fallback, full oracle validation, then asserts the service
+    invariants before reporting: zero dropped requests at every rate,
+    duplicates coalesced (executed < requests), every response either
+    oracle-validated or degraded-with-reason, and >= 1 exercised
+    fallback at the highest non-zero rate.
+    """
+    from repro.core import engine as engine_mod
+    from repro.service import (CampaignService, RetryPolicy,
+                               register_fault_injected)
+
+    n_requests = 200 if quick else 1000
+    requests = _service_request_mix(quick, n_requests)
+    max_rate = max(fault_rates)
+    rows = []
+    for rate in fault_rates:
+        primary = f"sim+faults@{rate:g}"
+        register_fault_injected(
+            "sim", name=primary, rate=rate, seed=7,
+            kinds=("transient", "timeout", "corrupt", "unsupported"),
+            weights=(0.5, 0.2, 0.15, 0.15), timeout_s=0.2, override=True)
+        try:
+            svc = CampaignService(
+                primary, "sim", retry=RetryPolicy(max_attempts=8),
+                validate_fraction=1.0, seed=11)
+            responses, dt = _timed(lambda: svc.submit_all(requests))
+            st = svc.stats
+            assert st.dropped == 0, (
+                f"service dropped {st.dropped} requests at rate {rate}")
+            assert all(r.ok for r in responses), (
+                f"non-ok responses at rate {rate}: "
+                f"{[r.error for r in responses if not r.ok][:3]}")
+            assert st.executed < st.requests and st.deduped > 0, (
+                f"no coalescing at rate {rate}: {st}")
+            assert all(r.validated is True or r.validated is None
+                       or (r.degraded and r.degraded_reason)
+                       for r in responses), (
+                f"unvalidated, undegraded response at rate {rate}")
+            if rate == max_rate and rate > 0:
+                assert st.degraded >= 1, (
+                    f"no fallback exercised at rate {rate}: {st}")
+            if qps_target is not None:
+                assert st.sustained_qps >= qps_target, (
+                    f"sustained QPS {st.sustained_qps:.0f} below target "
+                    f"{qps_target:.0f} at rate {rate}")
+            rows.append((
+                f"service_soak_fault{rate:g}", dt,
+                f"requests={st.requests};executed={st.executed};"
+                f"deduped={st.deduped};retries={st.retries};"
+                f"degraded={st.degraded};breaker_opens={st.breaker_opens};"
+                f"quarantines={st.quarantines};validated={st.validated};"
+                f"dropped={st.dropped};qps={st.sustained_qps:.0f}"))
+        finally:
+            engine_mod._BACKEND_REGISTRY.pop(primary, None)
+    return rows
+
+
 def emit_catalog(target: str) -> None:
     """Print the registry-generated experiment catalog ("-") or splice it
     between the catalog markers of a markdown file (e.g. README.md)."""
@@ -255,7 +376,25 @@ def main() -> None:
                     help="emit the registry-generated experiment catalog "
                          "and exit: to stdout, or spliced between the "
                          "catalog markers of PATH (e.g. README.md)")
+    ap.add_argument("--service", action="store_true",
+                    help="run the campaign-service fault-injection soak "
+                         "instead of the registry benches (DESIGN.md §10)")
+    ap.add_argument("--fault-rate", metavar="RATES", default=None,
+                    help="comma list of injected fault rates in [0, 1] for "
+                         "--service (default: 0,0.01,0.1)")
+    ap.add_argument("--qps-target", type=float, metavar="QPS", default=None,
+                    help="with --service: fail if sustained QPS falls "
+                         "below this at any fault rate")
     args, _ = ap.parse_known_args()
+    if not args.service:
+        if args.fault_rate is not None:
+            ap.error("--fault-rate only applies with --service")
+        if args.qps_target is not None:
+            ap.error("--qps-target only applies with --service")
+    fault_rates = parse_fault_rates(args.fault_rate) \
+        if args.fault_rate is not None else (0.0, 0.01, 0.1)
+    if args.qps_target is not None and args.qps_target <= 0:
+        ap.error(f"--qps-target must be > 0, got {args.qps_target:g}")
     if args.engines is not None:
         engine_ladder(args.engines)   # validate up front, not per suite
     if args.burst is not None and args.burst < 1:
@@ -279,14 +418,19 @@ def main() -> None:
             ap.error(f"--json: directory {json_dir!r} is not writable")
 
     print("name,us_per_call,derived")
-    suites = [
-        lambda: bench_experiments(q, args.experiments, args.engines,
-                                  args.arbitration, args.burst),
-        lambda: bench_sweep_grid(q),
-        bench_table3_resources,
-        lambda: bench_tpu_rst_kernel(q),
-        bench_oracle_autotune,
-    ]
+    if args.service:
+        suites = [
+            lambda: bench_service(q, fault_rates, args.qps_target),
+        ]
+    else:
+        suites = [
+            lambda: bench_experiments(q, args.experiments, args.engines,
+                                      args.arbitration, args.burst),
+            lambda: bench_sweep_grid(q),
+            bench_table3_resources,
+            lambda: bench_tpu_rst_kernel(q),
+            bench_oracle_autotune,
+        ]
     rows = []
     failures = 0
     t0 = time.perf_counter()
@@ -303,7 +447,8 @@ def main() -> None:
 
     if args.json:
         payload = {
-            "benchmark": "shuhai-campaign",
+            "benchmark": ("shuhai-campaign-service" if args.service
+                          else "shuhai-campaign"),
             "quick": q,
             "unix_time": time.time(),
             "wall_us": round(wall_us, 1),

@@ -48,6 +48,82 @@ class UnsupportedCapability(NotImplementedError):
     """
 
 
+# ---------------------------------------------------------------------------
+# Backend error taxonomy (DESIGN.md §10)
+#
+# Every failure a backend can raise maps onto exactly one of three
+# categories, which is what the campaign service's resilience layer keys
+# its policy decisions off:
+#
+#   TransientBackendError  -> retry with backoff (the same call may succeed)
+#   PermanentBackendError  -> fail fast, never retry (the call is invalid
+#                             or the substrate is durably broken)
+#   UnsupportedCapability  -> degrade: route to a backend that has the
+#                             capability (pallas -> sim), never retry
+# ---------------------------------------------------------------------------
+
+
+class BackendError(RuntimeError):
+    """Base for classified backend execution failures."""
+
+
+class TransientBackendError(BackendError):
+    """A retryable failure: the identical call may succeed on retry
+    (scheduler hiccup, collective timeout, resource pressure)."""
+
+
+class PermanentBackendError(BackendError):
+    """A non-retryable failure: the call itself is invalid or the
+    substrate is durably broken; retrying burns budget for nothing."""
+
+
+class BackendTimeout(TransientBackendError):
+    """A call exceeded its time budget.  Transient (the next attempt may
+    be fast); `seconds` carries the elapsed time so a virtual-clock
+    caller (the campaign service) can charge it against the request's
+    deadline without any wall-clock dependence."""
+
+    def __init__(self, message: str, seconds: float = 0.0):
+        super().__init__(message)
+        self.seconds = seconds
+
+
+# Exception types/markers that signal a retryable substrate hiccup when a
+# backend raises outside the taxonomy.  The string markers cover
+# jaxlib's XlaRuntimeError, whose gRPC-style status code is only in the
+# message text.
+_TRANSIENT_EXC_TYPES = (TimeoutError, ConnectionError, InterruptedError)
+_TRANSIENT_MARKERS = ("RESOURCE_EXHAUSTED", "DEADLINE_EXCEEDED",
+                      "UNAVAILABLE", "ABORTED", "CANCELLED")
+
+
+def classify_backend_error(exc: BaseException) -> type:
+    """Map an arbitrary backend exception onto the error taxonomy.
+
+    Returns one of :class:`TransientBackendError`,
+    :class:`PermanentBackendError`, or :class:`UnsupportedCapability`
+    (the class, not an instance).  Already-classified exceptions keep
+    their category; OS-level timeouts/connection drops and XlaRuntimeError
+    transient status codes classify transient; everything else — bad
+    arguments (ValueError/TypeError), assertion failures, arbitrary
+    backend bugs — classifies permanent, because retrying an invalid call
+    can never succeed (DESIGN.md §10).
+    """
+    if isinstance(exc, UnsupportedCapability):
+        return UnsupportedCapability
+    if isinstance(exc, TransientBackendError):
+        return TransientBackendError
+    if isinstance(exc, PermanentBackendError):
+        return PermanentBackendError
+    if isinstance(exc, _TRANSIENT_EXC_TYPES):
+        return TransientBackendError
+    msg = str(exc)
+    if type(exc).__name__ == "XlaRuntimeError" and any(
+            marker in msg for marker in _TRANSIENT_MARKERS):
+        return TransientBackendError
+    return PermanentBackendError
+
+
 def _contention_kwargs(num_engines: int, arbitration: str,
                        burst_beats: int) -> dict:
     """The arbitration-axis kwargs, only when they deviate from the

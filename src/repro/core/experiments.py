@@ -160,6 +160,52 @@ def experiments_for(spec: MemorySpec) -> List[Experiment]:
     return [e for e in all_experiments() if e.available_on(spec)]
 
 
+def plan_experiment(experiment: "Experiment | str", spec: MemorySpec = HBM,
+                    *, quick: bool = False, bench: bool = False,
+                    **options) -> Tuple[List[PlannedPoint], Dict[str, Any]]:
+    """Resolve options and lay one experiment's keyed grid WITHOUT
+    executing it.
+
+    This is the request-level entry point: the campaign service
+    (repro/service/campaign.py) lowers each accepted request through it,
+    then batches the returned points onto its own (coalescing, fault-
+    tolerant) Sweep and finishes with `Experiment.derive`.  Returns the
+    ``(key, SweepPoint)`` pairs in plan order plus the resolved options
+    `derive` must be called with.
+    """
+    exp = (get_experiment(experiment) if isinstance(experiment, str)
+           else experiment)
+    if not exp.available_on(spec):
+        raise ValueError(
+            f"experiment {exp.name!r} needs an inter-channel switch, which "
+            f"the {spec.name} controller does not have (Sec. IV-D)")
+    opts = exp.options(quick=quick, bench=bench, **options)
+    return exp.plan(spec, opts), opts
+
+
+def backend_capability_gap(backend, planned: List[PlannedPoint]
+                           ) -> Optional[str]:
+    """Why `backend` cannot execute a plan — None when it can.
+
+    Serial-latency points need per-transaction timers
+    (`supports_latency`, DESIGN.md §2); contention points need a
+    multi-engine path (`supports_contention`, DESIGN.md §8).  The
+    campaign service uses a non-None gap as a degradation trigger
+    (pallas -> sim) instead of an error.
+    """
+    impl = get_backend(backend) if isinstance(backend, str) else backend
+    if not impl.supports_latency and any(
+            pt.kind == KIND_LATENCY for _, pt in planned):
+        return (f"needs serial-latency measurements, which backend "
+                f"{impl.name!r} does not provide (supports_latency=False)")
+    if not impl.supports_contention and any(
+            pt.kind == KIND_CONTENTION for _, pt in planned):
+        return (f"needs multi-engine contention support, which backend "
+                f"{impl.name!r} does not provide "
+                f"(supports_contention=False)")
+    return None
+
+
 def run_experiment(experiment: "Experiment | str", spec: MemorySpec = HBM,
                    backend: str = "sim", *, quick: bool = False,
                    bench: bool = False, **options) -> Any:
@@ -169,27 +215,15 @@ def run_experiment(experiment: "Experiment | str", spec: MemorySpec = HBM,
     channel-broadcast on deterministic backends); `derive` only ever sees
     ``(key, value)`` pairs in plan order.
     """
-    exp = get_experiment(experiment) if isinstance(experiment, str) else experiment
-    if not exp.available_on(spec):
+    exp = (get_experiment(experiment) if isinstance(experiment, str)
+           else experiment)
+    planned, opts = plan_experiment(exp, spec, quick=quick, bench=bench,
+                                    **options)
+    gap = backend_capability_gap(backend, planned)
+    if gap is not None:
         raise ValueError(
-            f"experiment {exp.name!r} needs an inter-channel switch, which "
-            f"the {spec.name} controller does not have (Sec. IV-D)")
-    opts = exp.options(quick=quick, bench=bench, **options)
-    planned = exp.plan(spec, opts)
-    backend_impl = get_backend(backend)
-    if not backend_impl.supports_latency and any(
-            pt.kind == KIND_LATENCY for _, pt in planned):
-        raise ValueError(
-            f"experiment {exp.name!r} needs serial-latency measurements, "
-            f"which backend {backend!r} does not provide "
-            f"(supports_latency=False); use the sim backend (DESIGN.md §2)")
-    if not backend_impl.supports_contention and any(
-            pt.kind == KIND_CONTENTION for _, pt in planned):
-        raise ValueError(
-            f"experiment {exp.name!r} needs multi-engine contention "
-            f"support, which backend {backend!r} does not provide "
-            f"(supports_contention=False); use the sim backend "
-            f"(DESIGN.md §8)")
+            f"experiment {exp.name!r} {gap}; use the sim backend "
+            f"(DESIGN.md §2/§8)")
     sweep = Sweep(spec, backend)
     for _, pt in planned:
         sweep.add_point(pt)

@@ -73,7 +73,8 @@ class SweepStats:
 class Sweep:
     """Planner + batched executor for a grid of campaign points."""
 
-    def __init__(self, spec: MemorySpec = HBM, backend: str = "sim"):
+    def __init__(self, spec: MemorySpec = HBM, backend: str = "sim", *,
+                 coalesce: bool = False):
         self.spec = spec
         self.backend = backend
         self.backend_impl = get_backend(backend)
@@ -87,6 +88,16 @@ class Sweep:
         self._tp_cache: Dict[Tuple, timing_model.ThroughputResult] = {}
         self._lat_cache: Dict[Tuple, timing_model.LatencyTrace] = {}
         self._cont_cache: Dict[Tuple, timing_model.ContentionResult] = {}
+        # In-flight coalescing (opt-in): duplicate points issue ONE
+        # evaluation per Sweep lifetime even on NON-deterministic backends
+        # — the campaign service's batching path (DESIGN.md §10), where a
+        # fault-injected or measuring backend must not be re-hit for the
+        # same point twice in one batch, and a retried `run()` resumes
+        # from the points already served instead of re-evaluating them.
+        # Distinct from the memo caches above, which only deterministic
+        # backends get (their results are pure functions of the key).
+        self.coalesce = coalesce
+        self._flight: Dict[Tuple, object] = {}
 
     # ------------------------------------------------------------- planning
     def add(self, params: RSTParams, *, policy: Optional[str] = None,
@@ -162,14 +173,30 @@ class Sweep:
             self._engines[channel] = eng
         return eng
 
+    def _flight_lookup(self, key: Tuple) -> Tuple[object, bool]:
+        """(cached value or None, hit) from the in-flight coalescing map."""
+        if not self.coalesce:
+            return None, False
+        hit = key in self._flight
+        return (self._flight[key] if hit else None), hit
+
     def _run_throughput(self, pt: SweepPoint) -> Tuple[object, bool]:
         eng = self._engine(pt.channel)
         if not self.backend_impl.deterministic:
-            # Real measurements are per-point; no memoization.
+            # Real measurements are per-point; no memoization — but with
+            # coalescing on, duplicate points share one evaluation.
+            key = ("tp", pt.params, pt.policy, pt.op, pt.channel,
+                   pt.dst_channel)
+            cached, hit = self._flight_lookup(key)
+            if hit:
+                return cached, True
             self.stats.evaluated += 1
-            return eng.evaluate_throughput(
+            res = eng.evaluate_throughput(
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
-                op=pt.op), False
+                op=pt.op)
+            if self.coalesce:
+                self._flight[key] = res
+            return res, False
         key = (pt.params, pt.policy, pt.op)
         base = self._tp_cache.get(key)
         cached = base is not None
@@ -189,12 +216,21 @@ class Sweep:
     def _run_contention(self, pt: SweepPoint) -> Tuple[object, bool]:
         eng = self._engine(pt.channel)
         if not self.backend_impl.deterministic:
+            key = ("cont", pt.params, pt.policy, pt.op, pt.num_engines,
+                   pt.arbitration, pt.burst_beats, pt.placement,
+                   pt.channel, pt.dst_channel)
+            cached, hit = self._flight_lookup(key)
+            if hit:
+                return cached, True
             self.stats.evaluated += 1
-            return eng.evaluate_contention(
+            res = eng.evaluate_contention(
                 pt.params, num_engines=pt.num_engines, policy=pt.policy,
                 dst_channel=pt.dst_channel, op=pt.op,
                 arbitration=pt.arbitration, burst_beats=pt.burst_beats,
-                placement=pt.placement), False
+                placement=pt.placement)
+            if self.coalesce:
+                self._flight[key] = res
+            return res, False
         key = (pt.params, pt.policy, pt.op, pt.num_engines,
                pt.arbitration, pt.burst_beats, pt.placement)
         base = self._cont_cache.get(key)
@@ -218,12 +254,21 @@ class Sweep:
     def _run_latency(self, pt: SweepPoint) -> Tuple[object, bool]:
         eng = self._engine(pt.channel)
         if not self.backend_impl.deterministic:
+            key = ("lat", pt.params, pt.policy, pt.switch_enabled, pt.op,
+                   pt.num_engines, pt.arbitration, pt.burst_beats,
+                   pt.channel, pt.dst_channel)
+            cached, hit = self._flight_lookup(key)
+            if hit:
+                return cached, True
             self.stats.evaluated += 1
-            return eng.evaluate_latency(
+            res = eng.evaluate_latency(
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
                 switch_enabled=pt.switch_enabled, op=pt.op,
                 num_engines=pt.num_engines, arbitration=pt.arbitration,
-                burst_beats=pt.burst_beats), False
+                burst_beats=pt.burst_beats)
+            if self.coalesce:
+                self._flight[key] = res
+            return res, False
         enabled, extra = eng.latency_config(pt.dst_channel, pt.switch_enabled)
         key = (pt.params, pt.policy, enabled, extra, pt.op,
                pt.num_engines, pt.arbitration, pt.burst_beats)

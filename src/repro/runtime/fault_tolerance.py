@@ -81,7 +81,17 @@ class StragglerDetector:
         A strike requires BOTH the smoothed and the instantaneous time to
         exceed the threshold — a single transient blip (preemption, GC)
         decays out of the EWMA without accumulating strikes.
+
+        Raises RuntimeError on an empty `step_times`: no reporting host
+        means every node died (or the HealthSource broke), which is a
+        recover/re-mesh situation — not a "median of nothing" numpy
+        warning that silently turns the eviction math into NaNs.
         """
+        if not step_times:
+            raise RuntimeError(
+                "StragglerDetector.observe got no step times: every node "
+                "is dead (or the HealthSource returned nothing); recover "
+                "and re-mesh before resuming straggler detection")
         for n, t in step_times.items():
             prev = self._ewma.get(n, t)
             self._ewma[n] = (1 - self.alpha) * prev + self.alpha * t
@@ -126,6 +136,14 @@ class FaultTolerantLoop:
 
     step_fn(step) -> metrics dict; raise to signal a failure.
     on_remesh(rung) re-lowers for a new topology and restores state.
+
+    The abort budget is *windowed*: `max_failures` bounds the failures
+    seen since the last sustained-progress reset, and the budget resets
+    after `reset_after_clean_steps` consecutive clean steps.  A global
+    (never-resetting) count would eventually abort arbitrarily long runs
+    that each recovered fine — ten node losses over a month of training
+    is healthy attrition, ten in quick succession is an outage.
+    `failures` still reports the total (all-time) count.
     """
 
     step_fn: Callable[[int], Dict]
@@ -136,10 +154,13 @@ class FaultTolerantLoop:
     on_remesh: Optional[Callable[[Tuple[int, int, int]], None]] = None
     checkpoint_every: int = 50
     max_failures: int = 10
+    reset_after_clean_steps: int = 50
 
     def __post_init__(self):
         self.detector = StragglerDetector()
-        self.failures = 0
+        self.failures = 0               # all-time, for reporting
+        self._window_failures = 0       # since last clean-streak reset
+        self._clean_streak = 0
         self.evictions: List[int] = []
         self.remesh_events: List[Tuple[int, Tuple[int, int, int]]] = []
 
@@ -151,11 +172,17 @@ class FaultTolerantLoop:
                 metrics = self.step_fn(step)
             except Exception:
                 self.failures += 1
-                if self.failures > self.max_failures:
+                self._window_failures += 1
+                self._clean_streak = 0
+                if self._window_failures > self.max_failures:
                     raise
                 step = self._recover(step)
                 continue
             history.append(metrics)
+            self._clean_streak += 1
+            if (self._clean_streak >= self.reset_after_clean_steps
+                    and self._window_failures):
+                self._window_failures = 0
             # Straggler policy.
             for node in self.detector.observe(self.health.step_times()):
                 if node not in self.evictions:

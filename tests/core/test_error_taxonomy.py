@@ -1,0 +1,150 @@
+"""Error taxonomy (core/engine.py): classification + service retry policy.
+
+The contract the campaign service builds on: every failure a backend can
+raise maps onto exactly one of {UnsupportedCapability (degrade),
+TransientBackendError (retry), PermanentBackendError (fail fast)}, and
+the service retries ONLY transients — parametrized over both built-in
+backends (sim, pallas in interpret mode).
+"""
+import pytest
+
+from repro.core import HBM, RSTParams
+from repro.core import engine as engine_mod
+from repro.core.engine import (BackendError, BackendTimeout,
+                               PermanentBackendError, TransientBackendError,
+                               UnsupportedCapability, classify_backend_error,
+                               get_backend)
+from repro.core.experiments import (Experiment, _EXPERIMENT_REGISTRY,
+                                    register_experiment)
+from repro.core.sweep import SweepPoint
+from repro.service import (CampaignService, ExperimentRequest, Fault,
+                           FaultScript, RetryPolicy, register_fault_injected)
+
+
+class TestClassification:
+    def test_taxonomy_hierarchy(self):
+        assert issubclass(TransientBackendError, BackendError)
+        assert issubclass(PermanentBackendError, BackendError)
+        assert issubclass(BackendTimeout, TransientBackendError)
+        assert BackendTimeout("t", seconds=1.5).seconds == 1.5
+
+    @pytest.mark.parametrize("exc,want", [
+        (UnsupportedCapability("no timers"), UnsupportedCapability),
+        (TransientBackendError("blip"), TransientBackendError),
+        # BackendTimeout collapses into its category: retryable.
+        (BackendTimeout("slow", seconds=1.0), TransientBackendError),
+        (PermanentBackendError("broken"), PermanentBackendError),
+        (TimeoutError("socket"), TransientBackendError),
+        (ConnectionError("reset"), TransientBackendError),
+        (InterruptedError("signal"), TransientBackendError),
+        (ValueError("bad stride"), PermanentBackendError),
+        (RuntimeError("anything else"), PermanentBackendError),
+    ])
+    def test_classify(self, exc, want):
+        assert classify_backend_error(exc) is want
+
+    def test_xla_runtime_markers_are_transient(self):
+        # The real jaxlib XlaRuntimeError carries a gRPC-style status in
+        # its message; classification keys on type NAME + marker so the
+        # taxonomy needs no jaxlib import.
+        class XlaRuntimeError(RuntimeError):
+            pass
+
+        assert classify_backend_error(
+            XlaRuntimeError("RESOURCE_EXHAUSTED: out of memory while "
+                            "allocating")) is TransientBackendError
+        assert classify_backend_error(
+            XlaRuntimeError("DEADLINE_EXCEEDED: collective timed out")
+        ) is TransientBackendError
+        assert classify_backend_error(
+            XlaRuntimeError("INVALID_ARGUMENT: bad shape")
+        ) is PermanentBackendError
+
+
+class TestBuiltinBackendsMapOntoTaxonomy:
+    """Failures the built-in backends actually raise classify correctly."""
+
+    P = RSTParams(n=256, b=64, s=1024, w=0x100000)
+
+    def test_pallas_latency_is_a_capability_gap(self):
+        be = get_backend("pallas")
+        with pytest.raises(UnsupportedCapability) as ei:
+            be.latency(HBM, self.P, None, switch_enabled=False,
+                       switch_extra_cycles=0)
+        assert classify_backend_error(ei.value) is UnsupportedCapability
+
+    def test_pallas_bad_op_is_permanent(self):
+        be = get_backend("pallas")
+        with pytest.raises(ValueError) as ei:
+            be.throughput(HBM, self.P, None, op="scribble")
+        assert classify_backend_error(ei.value) is PermanentBackendError
+
+    def test_sim_invalid_params_are_permanent(self):
+        from repro.core.address_mapping import get_mapping
+        be = get_backend("sim")
+        bad = RSTParams(n=256, b=64, s=1024, w=512)   # S > W: RST-invalid
+        with pytest.raises(ValueError) as ei:
+            be.throughput(HBM, bad, get_mapping(HBM))
+        assert classify_backend_error(ei.value) is PermanentBackendError
+
+
+# --- service retries only transients, on both built-in backends ------------
+
+def _tiny_experiment():
+    """One pallas-compatible throughput point: fast even in interpret."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    tile = ops.tile_bytes(jnp.float32)
+    p = RSTParams(n=8, b=tile, s=tile, w=8 * tile)
+
+    return Experiment(
+        name="tiny_tp_probe", artifact="test", title="one-point probe",
+        plan=lambda spec, opts: [("pt", SweepPoint(p))],
+        derive=lambda spec, keyed, opts: keyed[0][1].gbps)
+
+
+@pytest.fixture
+def tiny_probe():
+    exp = register_experiment(_tiny_experiment(), override=True)
+    yield exp
+    _EXPERIMENT_REGISTRY.pop("tiny_tp_probe", None)
+
+
+@pytest.mark.parametrize("inner", ["sim", "pallas"])
+class TestServiceRetriesOnlyTransients:
+    def _service(self, faults, inner):
+        register_fault_injected(inner, name="inner+t",
+                                script=FaultScript().script(*faults),
+                                override=True)
+        return CampaignService("inner+t", fallback=None,
+                               retry=RetryPolicy(max_attempts=4),
+                               validate_fraction=0.0)
+
+    def test_transient_retried_to_success(self, tiny_probe, inner):
+        try:
+            svc = self._service([Fault("transient")], inner)
+            r = svc.submit(ExperimentRequest.make("tiny_tp_probe"))
+            assert r.ok and r.retries == 1 and r.attempts == 2
+        finally:
+            engine_mod._BACKEND_REGISTRY.pop("inner+t", None)
+
+    def test_permanent_not_retried(self, tiny_probe, inner):
+        try:
+            svc = self._service([Fault("permanent")], inner)
+            be = engine_mod.get_backend("inner+t")
+            r = svc.submit(ExperimentRequest.make("tiny_tp_probe"))
+            assert not r.ok and r.retries == 0 and be.calls == 1
+        finally:
+            engine_mod._BACKEND_REGISTRY.pop("inner+t", None)
+
+    def test_unsupported_not_retried(self, tiny_probe, inner):
+        try:
+            svc = self._service([Fault("unsupported")], inner)
+            be = engine_mod.get_backend("inner+t")
+            r = svc.submit(ExperimentRequest.make("tiny_tp_probe"))
+            # No fallback configured: the gap surfaces as a failure, after
+            # exactly one (never-retried) call.
+            assert not r.ok and r.retries == 0 and be.calls == 1
+        finally:
+            engine_mod._BACKEND_REGISTRY.pop("inner+t", None)

@@ -121,3 +121,56 @@ class TestCampaignSuitesOnSweep:
         assert 16384 not in res[8 * 1024][32]       # S > W: RST-invalid
         assert 16384 in res[256 * 1024**2][32]
         assert 4096 in res[8 * 1024][32]
+
+
+class TestInFlightCoalescing:
+    """Opt-in duplicate coalescing on NON-deterministic backends
+    (the campaign service's batching/retry-resume path, DESIGN.md §10)."""
+
+    @pytest.fixture
+    def counted(self):
+        from repro.core import engine as engine_mod
+        from repro.service.faults import register_fault_injected
+        be = register_fault_injected("sim", name="sim+counted", rate=0.0,
+                                     override=True)
+        yield be
+        engine_mod._BACKEND_REGISTRY.pop("sim+counted", None)
+
+    def test_duplicates_evaluate_once_with_coalesce(self, counted):
+        p = _p()
+        sweep = Sweep(HBM, "sim+counted", coalesce=True)
+        for _ in range(4):
+            sweep.add(p, channel=0)
+        res = sweep.run()
+        assert counted.calls == 1
+        assert sweep.stats.points == 4 and sweep.stats.evaluated == 1
+        assert [r.cached for r in res] == [False, True, True, True]
+        assert len({id(r.value) for r in res}) == 1
+
+    def test_off_by_default_on_nondeterministic_backends(self, counted):
+        p = _p()
+        sweep = Sweep(HBM, "sim+counted")
+        sweep.add(p).add(p)
+        sweep.run()
+        assert counted.calls == 2            # every point re-measured
+
+    def test_rerun_resumes_from_flight_cache(self, counted):
+        # The retry-resume contract: a second run() on the same Sweep
+        # re-serves already-evaluated points without new backend calls.
+        p = _p()
+        sweep = Sweep(HBM, "sim+counted", coalesce=True)
+        sweep.add(p).add_latency(p).add_contention(p, num_engines=4)
+        sweep.run()
+        calls = counted.calls
+        assert calls == 3
+        sweep.run()
+        assert counted.calls == calls        # all served from flight cache
+
+    def test_distinct_channels_are_distinct_flights(self, counted):
+        # Non-deterministic backends get no channel broadcast: channel is
+        # part of the flight key.
+        p = _p()
+        sweep = Sweep(HBM, "sim+counted", coalesce=True)
+        sweep.add(p, channel=0).add(p, channel=1)
+        sweep.run()
+        assert counted.calls == 2

@@ -1,0 +1,124 @@
+"""FaultScript sources (queue/health/rate) + FaultInjectingBackend."""
+import pytest
+
+from repro.core import HBM, RSTParams
+from repro.core import engine as engine_mod
+from repro.core.address_mapping import get_mapping
+from repro.core.engine import (BackendTimeout, PermanentBackendError,
+                               TransientBackendError, UnsupportedCapability,
+                               get_backend)
+from repro.runtime.fault_tolerance import SimulatedHealth
+from repro.service.faults import (CORRUPT_SCALE, Fault,
+                                  FaultInjectingBackend, FaultScript,
+                                  register_fault_injected)
+
+P = RSTParams(n=256, b=64, s=1024, w=0x100000)
+MAPPING = get_mapping(HBM)
+
+
+def make_backend(script):
+    return FaultInjectingBackend("sim", script)
+
+
+class TestFaultScript:
+    def test_scripted_queue_is_fifo_with_clean_gaps(self):
+        s = FaultScript().script(Fault("transient"), None, Fault("permanent"))
+        assert s.draw().kind == "transient"
+        assert s.draw() is None
+        assert s.draw().kind == "permanent"
+        assert s.draw() is None             # queue drained, rate=0
+
+    def test_rate_draws_are_seeded(self):
+        kinds = ("transient", "timeout", "corrupt")
+        s1 = FaultScript(rate=0.3, seed=5, kinds=kinds)
+        s2 = FaultScript(rate=0.3, seed=5, kinds=kinds)
+        seq1 = [getattr(s1.draw(), "kind", None) for _ in range(50)]
+        seq2 = [getattr(s2.draw(), "kind", None) for _ in range(50)]
+        assert seq1 == seq2                  # same seed, same fault stream
+        assert any(k is not None for k in seq1)
+        assert any(k is None for k in seq1)
+
+    def test_health_outage_and_slowness(self):
+        health = SimulatedHealth(num_nodes=2)
+        s = FaultScript(health=health, node=1, slow_timeout_s=2.0)
+        assert s.draw() is None
+        health.kill(1)
+        assert s.draw().kind == "transient"  # outage while dead
+        health.revive(1)
+        assert s.draw() is None
+        health.make_slow(1, 4.0)             # 4x base step time of 1s
+        f = s.draw()
+        assert f.kind == "timeout" and f.seconds == pytest.approx(4.0)
+
+    def test_validates_inputs(self):
+        with pytest.raises(ValueError, match="rate"):
+            FaultScript(rate=1.5)
+        with pytest.raises(ValueError, match="kind"):
+            FaultScript(kinds=("transient", "flaky"))
+        with pytest.raises(ValueError, match="weights"):
+            FaultScript(kinds=("transient",), weights=(0.5, 0.5))
+        with pytest.raises(ValueError, match="kind"):
+            Fault("nope")
+
+
+class TestFaultInjectingBackend:
+    @pytest.mark.parametrize("kind,exc", [
+        ("transient", TransientBackendError),
+        ("timeout", BackendTimeout),
+        ("permanent", PermanentBackendError),
+        ("unsupported", UnsupportedCapability),
+    ])
+    def test_raising_kinds(self, kind, exc):
+        be = make_backend(FaultScript().script(Fault(kind, seconds=1.5)))
+        with pytest.raises(exc):
+            be.throughput(HBM, P, MAPPING)
+        assert be.injected[kind] == 1 and be.calls == 1
+
+    def test_timeout_carries_virtual_seconds(self):
+        be = make_backend(FaultScript().script(Fault("timeout", seconds=2.5)))
+        with pytest.raises(BackendTimeout) as ei:
+            be.throughput(HBM, P, MAPPING)
+        assert ei.value.seconds == pytest.approx(2.5)
+
+    def test_corrupt_scales_every_result_kind(self):
+        clean = get_backend("sim")
+        be = make_backend(FaultScript().script(
+            Fault("corrupt"), Fault("corrupt"), Fault("corrupt")))
+        tp = be.throughput(HBM, P, MAPPING)
+        assert tp.gbps == pytest.approx(
+            clean.throughput(HBM, P, MAPPING).gbps * CORRUPT_SCALE)
+        lat = be.latency(HBM, P, MAPPING, switch_enabled=False,
+                         switch_extra_cycles=0)
+        ref = clean.latency(HBM, P, MAPPING, switch_enabled=False,
+                            switch_extra_cycles=0)
+        assert lat.cycles[0] == pytest.approx(ref.cycles[0] * CORRUPT_SCALE)
+        cont = be.contended_throughput(HBM, P, MAPPING, num_engines=4)
+        refc = clean.contended_throughput(HBM, P, MAPPING, num_engines=4)
+        assert cont.aggregate_gbps == pytest.approx(
+            refc.aggregate_gbps * CORRUPT_SCALE)
+        assert be.injected["corrupt"] == 3
+
+    def test_clean_calls_delegate_and_count(self):
+        clean = get_backend("sim")
+        be = make_backend(FaultScript())
+        got = be.throughput(HBM, P, MAPPING)
+        assert got.gbps == pytest.approx(clean.throughput(HBM, P,
+                                                          MAPPING).gbps)
+        assert be.calls == 1 and sum(be.injected.values()) == 0
+
+    def test_mirrors_inner_capabilities_but_not_determinism(self):
+        be = make_backend(FaultScript())
+        assert be.supports_latency and be.supports_contention
+        assert not be.deterministic          # injection breaks purity
+        assert be.name == "sim+faults"
+
+    def test_register_fault_injected_roundtrip(self):
+        try:
+            be = register_fault_injected("sim", name="sim+t", rate=0.0)
+            assert get_backend("sim+t") is be
+            with pytest.raises(ValueError, match="not both"):
+                register_fault_injected("sim", name="sim+t2",
+                                        script=FaultScript(), rate=0.5)
+        finally:
+            engine_mod._BACKEND_REGISTRY.pop("sim+t", None)
+            engine_mod._BACKEND_REGISTRY.pop("sim+t2", None)

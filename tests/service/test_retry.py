@@ -1,0 +1,85 @@
+"""RetryPolicy backoff schedule + CircuitBreaker state machine."""
+import numpy as np
+import pytest
+
+from repro.service.retry import (CLOSED, HALF_OPEN, OPEN, CircuitBreaker,
+                                 RetryPolicy)
+
+
+class TestRetryPolicy:
+    def test_exponential_schedule_without_jitter(self):
+        pol = RetryPolicy(base_delay_s=0.1, multiplier=2.0, max_delay_s=1.0,
+                          jitter=0.0)
+        rng = np.random.default_rng(0)
+        delays = [pol.backoff_s(k, rng) for k in (1, 2, 3, 4, 5, 6)]
+        assert delays == [0.1, 0.2, 0.4, 0.8, 1.0, 1.0]  # capped at max
+
+    def test_jitter_only_shrinks_and_is_seeded(self):
+        pol = RetryPolicy(base_delay_s=0.1, multiplier=2.0, jitter=0.5)
+        a = [pol.backoff_s(k, np.random.default_rng(7)) for k in (1, 2, 3)]
+        b = [pol.backoff_s(k, np.random.default_rng(7)) for k in (1, 2, 3)]
+        assert a == b                        # same seed, same schedule
+        for k, d in zip((1, 2, 3), a):
+            full = 0.1 * 2.0 ** (k - 1)
+            assert full * 0.5 <= d <= full   # jitter=0.5 shrinks <= 50%
+
+    @pytest.mark.parametrize("bad", [
+        dict(max_attempts=0), dict(base_delay_s=-1.0),
+        dict(multiplier=0.5), dict(jitter=1.5),
+    ])
+    def test_rejects_bad_parameters(self, bad):
+        with pytest.raises(ValueError):
+            RetryPolicy(**bad)
+
+    def test_rejects_retry_zero(self):
+        with pytest.raises(ValueError, match="retry"):
+            RetryPolicy().backoff_s(0, np.random.default_rng(0))
+
+
+class TestCircuitBreaker:
+    def test_opens_after_consecutive_failures(self):
+        br = CircuitBreaker(failure_threshold=3)
+        for _ in range(2):
+            br.record_failure(now=0.0)
+        assert br.state == CLOSED and br.allow(0.0)
+        br.record_failure(now=0.0)
+        assert br.state == OPEN and not br.allow(0.0)
+        assert br.opens == 1
+
+    def test_success_resets_the_failure_count(self):
+        br = CircuitBreaker(failure_threshold=3)
+        br.record_failure(0.0)
+        br.record_failure(0.0)
+        br.record_success()
+        br.record_failure(0.0)
+        br.record_failure(0.0)
+        assert br.state == CLOSED            # streak broken by the success
+
+    def test_half_open_probe_recloses_on_success(self):
+        br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0)
+        br.record_failure(now=10.0)
+        assert not br.allow(14.0)            # timeout not yet elapsed
+        assert br.allow(15.0)                # half-open probe admitted
+        assert br.state == HALF_OPEN
+        br.record_success()
+        assert br.state == CLOSED and br.allow(15.0)
+
+    def test_half_open_probe_failure_reopens(self):
+        br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0)
+        br.record_failure(now=0.0)
+        assert br.allow(5.0)                 # probe
+        br.record_failure(now=5.0)
+        assert br.state == OPEN and not br.allow(9.9)
+        assert br.allow(10.0)                # timeout restarts from reopen
+        assert br.opens == 2
+
+    def test_quarantine_never_half_opens(self):
+        br = CircuitBreaker(failure_threshold=5, reset_timeout_s=1.0)
+        br.quarantine(now=0.0)
+        assert br.quarantined and not br.allow(1e9)
+        br.reset()
+        assert br.state == CLOSED and not br.quarantined and br.allow(0.0)
+
+    def test_rejects_bad_threshold(self):
+        with pytest.raises(ValueError, match="failure_threshold"):
+            CircuitBreaker(failure_threshold=0)

@@ -32,6 +32,16 @@ class TestStragglerDetector:
             out = det.observe(base)
         assert out == []
 
+    def test_empty_step_times_raises_cleanly(self):
+        # Regression: median-of-nothing used to emit a numpy warning and
+        # poison the EWMA math with NaNs; now it's an explicit error.
+        det = StragglerDetector()
+        det.observe({0: 1.0, 1: 1.0})
+        with pytest.raises(RuntimeError, match="no step times"):
+            det.observe({})
+        # The detector survives the error: normal observation resumes.
+        assert det.observe({0: 1.0, 1: 1.0}) == []
+
 
 class TestMeshLadder:
     def test_rungs(self):
@@ -93,6 +103,46 @@ class TestFaultTolerantLoop:
             health=health, max_failures=2)
         with pytest.raises(RuntimeError, match="persistent"):
             loop.run(0, 5)
+
+    def test_failure_budget_resets_after_sustained_progress(self):
+        # Regression: the abort budget used to be all-time, so a long run
+        # with healthy-but-nonzero attrition (failures spaced far apart)
+        # would eventually abort.  The budget is now windowed: it resets
+        # after `reset_after_clean_steps` consecutive clean steps.
+        health = SimulatedHealth(num_nodes=128)
+        fail_at = {10, 40, 70, 100, 130}     # 5 failures, 30 steps apart
+
+        def step_fn(step):
+            if step in fail_at:
+                fail_at.remove(step)
+                raise RuntimeError("spaced node loss")
+            return {"step": step}
+
+        loop = FaultTolerantLoop(
+            step_fn=step_fn, save_fn=lambda s: None,
+            restore_fn=lambda: 0, health=health, max_failures=2,
+            reset_after_clean_steps=20, checkpoint_every=1000)
+        out = loop.run(0, 150)
+        assert out["failures"] == 5          # all-time count still reported
+
+    def test_clustered_failures_still_abort(self):
+        # The windowed budget must not weaken the outage guard: failures
+        # inside one window still trip max_failures.
+        health = SimulatedHealth(num_nodes=128)
+        calls = {"n": 0}
+
+        def step_fn(step):
+            calls["n"] += 1
+            if calls["n"] % 2 == 0:          # every other step fails
+                raise RuntimeError("clustered failure")
+            return {"step": step}
+
+        loop = FaultTolerantLoop(
+            step_fn=step_fn, save_fn=lambda s: None,
+            restore_fn=lambda: 0, health=health, max_failures=3,
+            reset_after_clean_steps=20)
+        with pytest.raises(RuntimeError, match="clustered"):
+            loop.run(0, 100)
 
 
 class TestServingEngine:
