@@ -328,6 +328,40 @@ def bench_service(quick=False, fault_rates=(0.0, 0.01, 0.1),
     return rows
 
 
+def bench_lint_report():
+    """Timed run of the repro-lint invariant pass (DESIGN.md §11).
+
+    One row per invariant family (`lint_<family>`, analyzer runtime and
+    finding count) plus a `lint_total` row carrying the new/stale split
+    against the committed `analysis_baseline.json` — so BENCH_lint.json
+    tracks both the analyzer's cost and the tree's finding trajectory.
+    """
+    from repro.analysis import lint as lint_mod
+    from repro.analysis.findings import diff_baseline, load_baseline
+
+    root = lint_mod.default_root()
+    rows = []
+    findings = []
+    total_us = 0.0
+    for family, runner in lint_mod.FAMILIES:
+        family_findings, dt = _timed(lambda runner=runner: runner(root))
+        findings.extend(family_findings)
+        total_us += dt
+        rows.append((f"lint_{family}", dt,
+                     f"findings={len(family_findings)}"))
+    baseline = load_baseline(root / "analysis_baseline.json")
+    diff = diff_baseline(findings, baseline)
+    rows.append(("lint_total", total_us,
+                 f"findings={len(findings)};baseline={len(baseline)};"
+                 f"new={len(diff.new)};stale={len(diff.stale)};"
+                 f"clean={diff.clean}"))
+    assert diff.clean, (
+        f"repro-lint not clean vs analysis_baseline.json: "
+        f"{len(diff.new)} new, {len(diff.stale)} stale — run "
+        f"`python -m repro.analysis.lint --baseline analysis_baseline.json`")
+    return rows
+
+
 def emit_catalog(target: str) -> None:
     """Print the registry-generated experiment catalog ("-") or splice it
     between the catalog markers of a markdown file (e.g. README.md)."""
@@ -376,6 +410,11 @@ def main() -> None:
                     help="emit the registry-generated experiment catalog "
                          "and exit: to stdout, or spliced between the "
                          "catalog markers of PATH (e.g. README.md)")
+    ap.add_argument("--lint-report", action="store_true",
+                    help="time the repro.analysis invariant pass per "
+                         "family instead of the registry benches "
+                         "(DESIGN.md §11); --json defaults to "
+                         "BENCH_lint.json")
     ap.add_argument("--service", action="store_true",
                     help="run the campaign-service fault-injection soak "
                          "instead of the registry benches (DESIGN.md §10)")
@@ -391,6 +430,11 @@ def main() -> None:
             ap.error("--fault-rate only applies with --service")
         if args.qps_target is not None:
             ap.error("--qps-target only applies with --service")
+    if args.lint_report:
+        if args.service:
+            ap.error("--lint-report and --service are separate modes")
+        if args.json is None:
+            args.json = "BENCH_lint.json"
     fault_rates = parse_fault_rates(args.fault_rate) \
         if args.fault_rate is not None else (0.0, 0.01, 0.1)
     if args.qps_target is not None and args.qps_target <= 0:
@@ -418,7 +462,9 @@ def main() -> None:
             ap.error(f"--json: directory {json_dir!r} is not writable")
 
     print("name,us_per_call,derived")
-    if args.service:
+    if args.lint_report:
+        suites = [bench_lint_report]
+    elif args.service:
         suites = [
             lambda: bench_service(q, fault_rates, args.qps_target),
         ]
@@ -447,7 +493,8 @@ def main() -> None:
 
     if args.json:
         payload = {
-            "benchmark": ("shuhai-campaign-service" if args.service
+            "benchmark": ("shuhai-lint" if args.lint_report
+                          else "shuhai-campaign-service" if args.service
                           else "shuhai-campaign"),
             "quick": q,
             "unix_time": time.time(),

@@ -1,0 +1,27 @@
+"""repro-lint: AST-driven invariant analysis for this repository.
+
+The last three PRs each fixed a *silent* determinism bug (write captures
+returning read anchors, an unreachable refresh threshold, parameters
+reaching the timing model without reaching the Sweep memo key).  This
+package enforces those invariants statically, before the code runs:
+
+* ``cache_keys``     — REPRO-C*: memo/dedup key completeness in
+  core/sweep.py and service/campaign.py (every parameter that flows into
+  an evaluation participates in its cache key).
+* ``oracle_parity``  — REPRO-O*: every public timing-model function has a
+  loop oracle in ``_timing_reference.py`` and a parity test referencing
+  both.
+* ``capabilities``   — REPRO-B*: Backend subclasses declare the
+  ``supports_*`` flag for every gated method they implement, or raise
+  ``UnsupportedCapability``.
+* ``kernel_shapes``  — REPRO-K*: pallas kernel scalar-prefetch operands,
+  index maps and working buffers are consistent and int32-safe at the
+  registered table bounds.
+
+Run ``python -m repro.analysis.lint --baseline analysis_baseline.json``
+(CI does, before the test matrix); see DESIGN.md §11 for the invariant
+catalog.
+"""
+from repro.analysis.findings import Finding
+
+__all__ = ["Finding"]

@@ -1,0 +1,366 @@
+"""REPRO-K*: pallas kernel shape, operand and index-arithmetic safety.
+
+The RST kernels are parameterized through an int32 scalar-prefetch
+operand consumed by BlockSpec index maps (rst_read: ``int32[4]``,
+rst_contend: ``int32[6]``).  Three things can go quietly wrong before a
+kernel ever runs on hardware, and all three are statically decidable:
+
+* **REPRO-K001** — an index map (or kernel body) subscripts the scalar
+  operand past the length its ops.py builder packs: ``params_ref[k]``
+  with ``k >= len(operand)``.
+* **REPRO-K002** — index-map arithmetic can overflow int32 at the
+  registered table bounds (the index maps compute ``base + k*wset +
+  (t*stride) % wset`` in int32; at the registry's Fig. 7/8 ceilings the
+  raw product ``t*stride`` exceeds 2**31) and the operand builder has no
+  host-side guard rejecting such configurations before launch.
+* **REPRO-K003** — the documented operand dtype shape (``int32[N]`` in a
+  kernel wrapper or builder docstring) drifts from the length the
+  builder actually packs.
+* **REPRO-K004** — the working-buffer builder ignores the RST base
+  address ``A``: index maps address from ``base_block`` upward, so a
+  buffer sized only by ``num_engines * W`` is out of bounds whenever
+  ``A != 0``.
+
+Bounds come from a static scan of the experiment registry
+(``core/experiments.py`` keyword/dict literals for the n/w/s/a/engine
+axes) with documented floors — the Fig. 7 256 MiB window, the Fig. 8
+2e5-transaction stream, the 32-port switch topology — and the smallest
+supported tile (``SUBLANE * LANE`` int8 bytes, parsed from
+rst_read.py).  A conservative bound is fine: the guard the checker
+demands (REPRO-K002) validates the *actual* operand at pack time.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (call_name, int_const, module_functions,
+                                    parse_module)
+from repro.analysis.findings import Finding
+
+# Registry axes scanned for bounds, with documented floors (used when the
+# registry scan finds smaller values — Fig. 7 windows, Fig. 8 streams,
+# the full 32-port topology plus headroom).
+AXIS_FLOORS: Dict[str, int] = {
+    "n": 1 << 18,
+    "w": 1 << 28,
+    "s": 1 << 28,
+    "a": 1 << 28,
+    "num_engines": 64,
+}
+
+INT32_MAX = 2 ** 31 - 1
+_MIN_ITEMSIZE = 1          # int8 — smallest dtype a tile can carry
+_SCALAR_OPERAND = "params_ref"
+_GUARD_PATTERN = re.compile(r"int32")
+_DOC_SHAPE = re.compile(r"int32\[(\d+)\]")
+
+
+def _rel(path: Path, root: Optional[Path]) -> str:
+    if root is not None:
+        try:
+            return str(path.relative_to(root))
+        except ValueError:
+            pass
+    return str(path)
+
+
+# ----------------------------------------------------------- bounds scan
+def registry_bounds(experiments_path: Optional[Path]) -> Dict[str, int]:
+    bounds = dict(AXIS_FLOORS)
+    if experiments_path is None or not experiments_path.exists():
+        return bounds
+    tree = parse_module(experiments_path)
+    for node in ast.walk(tree):
+        pairs: List[Tuple[str, ast.expr]] = []
+        if isinstance(node, ast.Call):
+            pairs = [(kw.arg, kw.value) for kw in node.keywords if kw.arg]
+        elif isinstance(node, ast.Dict):
+            for key, value in zip(node.keys, node.values):
+                if isinstance(key, ast.Constant) \
+                        and isinstance(key.value, str):
+                    pairs.append((key.value, value))
+        for name, value in pairs:
+            if name not in bounds:
+                continue
+            vals = [int_const(value)]
+            if isinstance(value, (ast.List, ast.Tuple)):
+                vals = [int_const(e) for e in value.elts]
+            for v in vals:
+                if v is not None and v > bounds[name]:
+                    bounds[name] = v
+    return bounds
+
+
+def _lane_sublane(kernel_tree: ast.Module) -> Tuple[int, int]:
+    lane, sublane = 128, 8
+    for node in kernel_tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            value = int_const(node.value)
+            if value is None:
+                continue
+            if node.targets[0].id == "LANE":
+                lane = value
+            elif node.targets[0].id == "SUBLANE":
+                sublane = value
+    return lane, sublane
+
+
+# ------------------------------------------------------- operand packing
+def _local_assign(fn: ast.FunctionDef, name: str) -> Optional[ast.expr]:
+    found = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for target in node.targets:
+                if isinstance(target, ast.Name) and target.id == name:
+                    found = node.value
+    return found
+
+
+def _expr_length(expr: ast.expr, fn: ast.FunctionDef,
+                 fns: Dict[str, ast.FunctionDef]) -> Optional[int]:
+    if isinstance(expr, ast.Call):
+        name = call_name(expr)
+        if name == "array" and expr.args \
+                and isinstance(expr.args[0], (ast.List, ast.Tuple)):
+            return len(expr.args[0].elts)
+        if name == "concatenate" and expr.args \
+                and isinstance(expr.args[0], (ast.List, ast.Tuple)):
+            total = 0
+            for elt in expr.args[0].elts:
+                part = _expr_length(elt, fn, fns)
+                if part is None:
+                    return None
+                total += part
+            return total
+        if isinstance(expr.func, ast.Name) and expr.func.id in fns:
+            return _builder_length(fns[expr.func.id], fns)
+    if isinstance(expr, ast.Name):
+        defining = _local_assign(fn, expr.id)
+        if defining is not None:
+            return _expr_length(defining, fn, fns)
+    return None
+
+
+def _builder_length(fn: ast.FunctionDef,
+                    fns: Dict[str, ast.FunctionDef]) -> Optional[int]:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and node.value is not None:
+            length = _expr_length(node.value, fn, fns)
+            if length is not None:
+                return length
+    return None
+
+
+def _calls_guard(fn: ast.FunctionDef,
+                 fns: Dict[str, ast.FunctionDef],
+                 seen: Optional[Set[str]] = None) -> bool:
+    """Direct call in `fn` to a host-side int32-range guard."""
+    seen = seen or set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) \
+                and _GUARD_PATTERN.search(call_name(node)):
+            return True
+    return False
+
+
+def _kernel_feeds(ops_tree: ast.Module,
+                  fns: Dict[str, ast.FunctionDef]) -> Dict[str, Set[str]]:
+    """kernel callee name -> operand builder names whose result is the
+    kernel's first (scalar-prefetch) argument."""
+    builders = {name for name in fns if name.endswith("operand")}
+    feeds: Dict[str, Set[str]] = {}
+    for fn in fns.values():
+        local_builder: Dict[str, str] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and isinstance(node.value.func, ast.Name) \
+                    and node.value.func.id in builders:
+                local_builder[node.targets[0].id] = node.value.func.id
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name) and node.args):
+                continue
+            first = node.args[0]
+            if isinstance(first, ast.Name) \
+                    and first.id in local_builder:
+                feeds.setdefault(node.func.id, set()).add(
+                    local_builder[first.id])
+    return feeds
+
+
+def _kernel_modules(ops_tree: ast.Module,
+                    ops_path: Path) -> Dict[str, Path]:
+    """imported kernel name -> kernel module path (same package dir)."""
+    out: Dict[str, Path] = {}
+    for node in ops_tree.body:
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and ".kernels." in f".{node.module}.":
+            mod_file = ops_path.parent / (node.module.rsplit(".", 1)[-1]
+                                          + ".py")
+            if mod_file == ops_path or not mod_file.exists():
+                continue
+            for alias in node.names:
+                out[alias.asname or alias.name] = mod_file
+    return out
+
+
+def _max_operand_index(tree: ast.Module) -> Tuple[int, int]:
+    """(max constant subscript on the scalar operand, its line)."""
+    best, line = -1, 1
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == _SCALAR_OPERAND:
+            idx = int_const(node.slice)
+            if idx is not None and idx > best:
+                best, line = idx, node.lineno
+    return best, line
+
+
+def _doc_shapes(tree: ast.Module) -> List[Tuple[str, int, int]]:
+    """(function name, declared operand length, line) per docstring that
+    declares an int32[N] scalar operand."""
+    out = []
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            doc = ast.get_docstring(node) or ""
+            for match in _DOC_SHAPE.finditer(doc):
+                out.append((node.name, int(match.group(1)), node.lineno))
+    return out
+
+
+# ------------------------------------------------------------ the check
+def check_kernel_safety(ops_path: Path, *,
+                        experiments_path: Optional[Path] = None,
+                        kernel_paths: Optional[Dict[str, Path]] = None,
+                        buffer_builder: str = "make_working_buffer",
+                        repo_root: Optional[Path] = None) -> List[Finding]:
+    ops_rel = _rel(ops_path, repo_root)
+    ops_tree = parse_module(ops_path)
+    fns = module_functions(ops_tree)
+    feeds = _kernel_feeds(ops_tree, fns)
+    if kernel_paths is None:
+        kernel_paths = _kernel_modules(ops_tree, ops_path)
+    bounds = registry_bounds(experiments_path)
+
+    findings: List[Finding] = []
+
+    # Worst-case index-map products at the registry bounds, using the
+    # smallest supported tile (largest block counts).
+    lane, sublane = 128, 8
+    for path in kernel_paths.values():
+        lane, sublane = _lane_sublane(parse_module(path))
+        break
+    tile_min = lane * sublane * _MIN_ITEMSIZE
+    stride_blocks = max(bounds["s"], 1) // tile_min
+    wset_blocks = max(bounds["w"], 1) // tile_min
+    base_blocks = max(bounds["a"], 1) // tile_min
+    worst_linear = (bounds["n"] - 1) * stride_blocks
+    worst_contend = (base_blocks + bounds["num_engines"] * wset_blocks
+                     + worst_linear)
+    overflow_possible = max(worst_linear, worst_contend) > INT32_MAX
+
+    checked_kernels: Set[Path] = set()
+    for kernel_name, builders in sorted(feeds.items()):
+        kernel_path = kernel_paths.get(kernel_name)
+        if kernel_path is None:
+            continue
+        kernel_rel = _rel(kernel_path, repo_root)
+        kernel_tree = parse_module(kernel_path)
+        checked_kernels.add(kernel_path)
+
+        lengths = {b: _builder_length(fns[b], fns) for b in builders}
+        known = {b: n for b, n in lengths.items() if n is not None}
+        for builder in sorted(builders - set(known)):
+            findings.append(Finding(
+                invariant="REPRO-K001", path=ops_rel,
+                line=fns[builder].lineno,
+                message=(f"operand builder {builder}() packs a shape the "
+                         f"analyzer cannot resolve statically"),
+                hint=("build the operand from literal jnp.array/"
+                      "jnp.concatenate lists so its length is "
+                      "statically evident")))
+        if not known:
+            continue
+        operand_len = min(known.values())
+        short_builder = min(known, key=lambda b: known[b])
+
+        max_index, line = _max_operand_index(kernel_tree)
+        if max_index >= operand_len:
+            findings.append(Finding(
+                invariant="REPRO-K001", path=kernel_rel, line=line,
+                message=(f"{kernel_name} reads {_SCALAR_OPERAND}"
+                         f"[{max_index}] but {short_builder}() packs "
+                         f"only int32[{operand_len}]"),
+                hint=(f"extend {short_builder}() (and the docstrings) or "
+                      f"drop the out-of-range read")))
+
+        for fn_name, declared, doc_line in _doc_shapes(kernel_tree):
+            if declared != operand_len:
+                findings.append(Finding(
+                    invariant="REPRO-K003", path=kernel_rel,
+                    line=doc_line,
+                    message=(f"{fn_name}() documents an int32"
+                             f"[{declared}] operand but "
+                             f"{short_builder}() packs int32"
+                             f"[{operand_len}]"),
+                    hint="update the docstring or the builder together"))
+
+        if overflow_possible:
+            for builder in sorted(known):
+                if not _calls_guard(fns[builder], fns):
+                    findings.append(Finding(
+                        invariant="REPRO-K002", path=ops_rel,
+                        line=fns[builder].lineno,
+                        message=(f"{builder}() packs operands whose "
+                                 f"index-map products can exceed int32 "
+                                 f"at the registry bounds (worst case "
+                                 f"~{max(worst_linear, worst_contend):e})"
+                                 f" with no host-side range guard"),
+                        hint=("validate (n-1)*stride_blocks and "
+                              "base+engines*wset_blocks against 2**31 "
+                              "before packing (call an *int32* guard "
+                              "helper so the analyzer can see it)")))
+
+    # Builder docstrings in ops.py must match what they pack.
+    for fn_name, declared, doc_line in _doc_shapes(ops_tree):
+        if not fn_name.endswith("operand"):
+            continue
+        actual = _builder_length(fns[fn_name], fns)
+        if actual is not None and actual != declared:
+            findings.append(Finding(
+                invariant="REPRO-K003", path=ops_rel, line=doc_line,
+                message=(f"{fn_name}() documents int32[{declared}] but "
+                         f"packs int32[{actual}]"),
+                hint="update the docstring or the packing together"))
+
+    # Working-buffer coverage: index maps address from base_block
+    # (= A // tile) upward, so the buffer must account for p.a.
+    buffer_fn = fns.get(buffer_builder)
+    if buffer_fn is not None:
+        reads_base = any(
+            isinstance(node, ast.Attribute) and node.attr == "a"
+            for node in ast.walk(buffer_fn))
+        if not reads_base:
+            findings.append(Finding(
+                invariant="REPRO-K004", path=ops_rel,
+                line=buffer_fn.lineno,
+                message=(f"{buffer_builder}() sizes the buffer without "
+                         f"the RST base address A — index maps address "
+                         f"base_block + window blocks, so any A != 0 "
+                         f"reads past the buffer"),
+                hint=(f"size the buffer over p.a + num_engines * p.w "
+                      f"bytes in {buffer_builder}()")))
+
+    # A builder feeding several kernels (params_operand: read + write)
+    # would otherwise report once per kernel.
+    unique: Dict[Tuple[str, str, str], Finding] = {}
+    for f in findings:
+        unique.setdefault(f.key, f)
+    return list(unique.values())

@@ -1,0 +1,164 @@
+"""REPRO-O*: loop-oracle and parity-test coverage of the timing model.
+
+PR 1's contract: the vectorized model in ``core/timing_model.py`` is only
+trusted because ``core/_timing_reference.py`` keeps the original
+per-transaction loop implementation and a parity test pins them together
+(bit-exact for serial latencies, 1e-9 for throughput).  A public model
+function without an oracle — or an oracle nobody tests against — is
+exactly how vectorization drift ships silently.
+
+Invariants:
+
+* **REPRO-O001** — a public ``timing_model`` function has no loop oracle
+  in ``_timing_reference.py`` (per the ORACLE_EQUIVALENTS map below).
+* **REPRO-O002** — an (function, oracle) pair has no parity test that
+  references both the vectorized and the reference implementation.
+
+``serial_latencies`` is one vectorized entry point with three oracles
+(read, write, contended — the reference keeps per-direction loops), so
+deleting *any one* reference oracle fails the pass.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import parse_module, public_functions
+from repro.analysis.findings import Finding
+
+# vectorized public function -> reference oracles that must ALL exist.
+ORACLE_EQUIVALENTS: Dict[str, Tuple[str, ...]] = {
+    "throughput": ("throughput",),
+    "contended_throughput": ("contended_throughput",),
+    "serial_latencies": ("serial_read_latencies", "serial_write_latencies",
+                         "serial_contended_latencies"),
+    "serial_read_latencies": ("serial_read_latencies",),
+}
+
+# vectorized names a parity test may call to exercise a public function
+# (serial_latencies is usually reached through its read wrapper).
+VEC_ALIASES: Dict[str, Tuple[str, ...]] = {
+    "serial_latencies": ("serial_latencies", "serial_read_latencies"),
+}
+
+# Public model functions that legitimately have no loop oracle, with the
+# reason (surfaced in the finding if the exemption goes stale).
+EXEMPT_PUBLIC: Dict[str, str] = {
+    "refresh_interval_estimate":
+        "post-processing estimator over an existing LatencyTrace; it has "
+        "no vectorized/loop split (direct unit tests cover it)",
+}
+
+
+def _module_alias(tree: ast.Module, module_suffix: str) -> Optional[str]:
+    """The local name a test binds `repro.core.<module_suffix>` to."""
+    for node in tree.body:
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name == module_suffix \
+                        or alias.name.endswith("." + module_suffix):
+                    return alias.asname or alias.name
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.endswith("." + module_suffix):
+                    return alias.asname or alias.name.split(".")[0]
+    return None
+
+
+def _attr_uses(fn: ast.FunctionDef, owner: str) -> Set[str]:
+    return {node.attr for node in ast.walk(fn)
+            if isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name) and node.value.id == owner}
+
+
+def check_oracle_parity(timing_path: Path, reference_path: Path,
+                        parity_test_path: Path, *,
+                        repo_root: Optional[Path] = None) -> List[Finding]:
+    def rel(p: Path) -> str:
+        if repo_root is not None:
+            try:
+                return str(p.relative_to(repo_root))
+            except ValueError:
+                pass
+        return str(p)
+
+    timing_tree = parse_module(timing_path)
+    reference_tree = parse_module(reference_path)
+    test_tree = parse_module(parity_test_path)
+
+    oracles = {fn.name: fn for fn in reference_tree.body
+               if isinstance(fn, ast.FunctionDef)}
+    findings: List[Finding] = []
+
+    vec_alias = _module_alias(test_tree, "timing_model")
+    ref_alias = _module_alias(test_tree, "_timing_reference")
+    if vec_alias is None or ref_alias is None:
+        findings.append(Finding(
+            invariant="REPRO-O002", path=rel(parity_test_path), line=1,
+            message=("parity test module does not import both "
+                     "timing_model and _timing_reference"),
+            hint="import both modules so parity tests can pin them"))
+        return findings
+
+    # (vec attr set, ref attr set) per test function.
+    test_uses = [( _attr_uses(fn, vec_alias), _attr_uses(fn, ref_alias))
+                 for fn in ast.walk(test_tree)
+                 if isinstance(fn, ast.FunctionDef)
+                 and fn.name.startswith("test_")]
+
+    for fn in public_functions(timing_tree):
+        name = fn.name
+        if name in EXEMPT_PUBLIC:
+            continue
+        required = ORACLE_EQUIVALENTS.get(name)
+        if required is None:
+            findings.append(Finding(
+                invariant="REPRO-O001", path=rel(timing_path),
+                line=fn.lineno,
+                message=(f"public timing-model function {name}() has no "
+                         f"registered loop oracle"),
+                hint=("add the loop implementation to "
+                      "_timing_reference.py and map it in "
+                      "analysis.oracle_parity.ORACLE_EQUIVALENTS (or "
+                      "record an exemption with its reason)")))
+            continue
+        vec_names = set(VEC_ALIASES.get(name, (name,)))
+        for oracle in required:
+            oracle_fn = oracles.get(oracle)
+            if oracle_fn is None:
+                findings.append(Finding(
+                    invariant="REPRO-O001", path=rel(reference_path),
+                    line=1,
+                    message=(f"loop oracle {oracle}() for "
+                             f"timing_model.{name}() is missing from the "
+                             f"reference module"),
+                    hint=(f"restore {oracle}() in _timing_reference.py — "
+                          f"the vectorized path is untrusted without "
+                          f"it")))
+                continue
+            hit = any(vec_names & vec and oracle in ref
+                      for vec, ref in test_uses)
+            if not hit:
+                findings.append(Finding(
+                    invariant="REPRO-O002", path=rel(parity_test_path),
+                    line=1,
+                    message=(f"no parity test references both "
+                             f"timing_model.{name}() and reference "
+                             f"{oracle}()"),
+                    hint=(f"add a test calling {vec_alias}."
+                          f"{sorted(vec_names)[0]} and {ref_alias}."
+                          f"{oracle} on the same inputs")))
+
+    # Exemptions must stay real: an exempt name that disappears from the
+    # module means the exemption table is stale.
+    timing_names = {fn.name for fn in public_functions(timing_tree)}
+    for name, reason in EXEMPT_PUBLIC.items():
+        if name not in timing_names:
+            findings.append(Finding(
+                invariant="REPRO-O001", path=rel(timing_path), line=1,
+                message=(f"oracle exemption for {name}() is stale — the "
+                         f"function no longer exists (exempt because: "
+                         f"{reason})"),
+                hint="drop the entry from EXEMPT_PUBLIC"))
+    return findings

@@ -16,11 +16,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.hwspec import DDR4, HBM, MemorySpec
+from repro.core.hwspec import MemorySpec
 
 Field = Tuple[str, int]   # ("R" | "BG" | "B" | "C", nbits)
 

@@ -19,8 +19,6 @@ import dataclasses
 import itertools
 from typing import Dict, List, Sequence, Tuple
 
-import numpy as np
-
 from repro.core.oracle import AccessPattern, MemoryOracle
 
 

@@ -24,7 +24,7 @@ on demand, mirroring how the paper reports "cycles" at the AXI clock.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 # ---------------------------------------------------------------------------
 # DRAM-side specs (paper platforms)

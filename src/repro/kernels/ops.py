@@ -59,6 +59,30 @@ def default_grid(n_txns: int, interpret: bool) -> int:
     return grid_bucket(n_txns) if interpret else n_txns
 
 
+_INT32_MAX = 2 ** 31 - 1
+
+
+def _require_int32_index_range(stride_b: int, wset_b: int, base_b: int,
+                               n: int, num_engines: int = 1) -> None:
+    """Reject configurations whose index-map arithmetic overflows int32.
+
+    The BlockSpec index maps run in int32 and compute
+    ``base + k * wset + (t * stride) % wset`` with ``t <= n - 1`` and
+    ``k < num_engines``; the raw product ``t * stride`` and the window
+    span ``base + num_engines * wset`` must both stay representable, or
+    a large sweep (Fig. 7/8 ceilings) silently wraps to a wrong — and
+    possibly out-of-bounds — block index on the device.
+    """
+    worst_product = max(n - 1, 0) * stride_b
+    worst_block = base_b + num_engines * wset_b
+    if worst_product > _INT32_MAX or worst_block > _INT32_MAX:
+        raise ValueError(
+            f"RST operand overflows the int32 index maps: "
+            f"(n-1)*stride_blocks={worst_product}, base+span="
+            f"{worst_block} (limit {_INT32_MAX}); shrink N/S/W/A or "
+            f"split the sweep")
+
+
 def params_operand(p: RSTParams, dtype, burst_rows: int = SUBLANE,
                    grid_txns: int | None = None) -> jax.Array:
     """Pack byte-level RST params into the int32[4] scalar operand."""
@@ -70,18 +94,23 @@ def params_operand(p: RSTParams, dtype, burst_rows: int = SUBLANE,
             f"TPU the burst is the BlockSpec tile (DESIGN.md §2)")
     stride_b, wset_b, base_b = block_params(p, tb)
     n = p.n if grid_txns is None else min(p.n, grid_txns)
+    _require_int32_index_range(stride_b, wset_b, base_b, n)
     return jnp.array([stride_b, wset_b, base_b, n], dtype=jnp.int32)
 
 
 def make_working_buffer(p: RSTParams, dtype, key=None, *,
                         num_engines: int = 1) -> jax.Array:
-    """Allocate the working set as (rows, LANE): W bytes of the given
-    dtype, times `num_engines` for the contention kernel's disjoint
-    per-engine windows."""
+    """Allocate the working set as (rows, LANE): A + W bytes of the given
+    dtype (the index maps address from ``base_block = A // tile`` upward,
+    so the buffer must cover the base offset too), with W times
+    `num_engines` for the contention kernel's disjoint per-engine
+    windows."""
     itemsize = jnp.dtype(dtype).itemsize
-    rows = num_engines * p.w // (LANE * itemsize)
-    if rows * LANE * itemsize != num_engines * p.w:
-        raise ValueError(f"W={p.w} not a whole number of ({LANE},) rows")
+    span = p.a + num_engines * p.w
+    rows = span // (LANE * itemsize)
+    if rows * LANE * itemsize != span:
+        raise ValueError(
+            f"A+{num_engines}*W={span} not a whole number of ({LANE},) rows")
     if key is None:
         # Deterministic, cheap, nonconstant content.
         base = jnp.arange(rows * LANE, dtype=jnp.float32) % 251.0
@@ -127,6 +156,12 @@ def contended_params_operand(p: RSTParams, num_engines: int, dtype,
     """Pack byte-level RST params + engine count + grant size into the
     int32[6] scalar operand of the concurrent-access kernel."""
     base = params_operand(p, dtype, burst_rows, grid_txns)
+    # The N disjoint per-engine windows span base + N*wset blocks — wider
+    # than the single-engine range params_operand already validated.
+    stride_b, wset_b, base_b = block_params(p, tile_bytes(dtype, burst_rows))
+    n = p.n if grid_txns is None else min(p.n, grid_txns)
+    _require_int32_index_range(stride_b, wset_b, base_b, n,
+                               num_engines=num_engines)
     return jnp.concatenate(
         [base, jnp.array([num_engines, burst_beats], dtype=jnp.int32)])
 

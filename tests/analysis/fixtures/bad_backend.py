@@ -1,0 +1,42 @@
+"""Fixture: capability-contract violations — parsed, never imported.
+
+* ``UndeclaredBackend`` implements the gated ``latency()`` while its flag
+  chain resolves ``supports_latency = False`` → REPRO-B001.
+* ``PhantomBackend`` declares ``supports_contention = True`` but leaves
+  the raising stub in place → REPRO-B002.
+* ``OpaqueBackend`` assigns ``supports_latency`` in ``__init__`` from a
+  constructor argument instead of mirroring a wrapped backend →
+  REPRO-B003.
+"""
+
+
+class UnsupportedCapability(NotImplementedError):
+    pass
+
+
+class Backend:
+    supports_latency = False
+    supports_contention = False
+
+    def latency(self, spec, p, mapping, **kw):
+        raise UnsupportedCapability("no serial timers")
+
+    def contended_throughput(self, spec, p, mapping, **kw):
+        raise UnsupportedCapability("no shared-port model")
+
+
+class UndeclaredBackend(Backend):
+    def latency(self, spec, p, mapping, **kw):
+        return [1.0] * p.n
+
+
+class PhantomBackend(Backend):
+    supports_contention = True
+
+
+class OpaqueBackend(Backend):
+    def __init__(self, enable):
+        self.supports_latency = enable
+
+    def latency(self, spec, p, mapping, **kw):
+        return [1.0] * p.n

@@ -1,0 +1,31 @@
+"""Fixture: service dedup-key violations — parsed, never imported.
+
+``ExperimentRequest.quick`` is excluded from comparison while the
+execution path reads it (two requests differing only in ``quick`` would
+dedup to one response) → REPRO-C004; the response cache is also keyed by
+a projection of the request instead of the whole request → REPRO-C004.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentRequest:
+    experiment: str
+    spec: str = "hbm"
+    quick: bool = dataclasses.field(default=False, compare=False)
+
+
+class CampaignService:
+    def __init__(self):
+        self._responses = {}
+
+    def submit(self, request):
+        cached = self._responses.get(request.experiment)
+        if cached is not None:
+            return cached
+        resp = self._execute(request)
+        self._responses[request.experiment] = resp
+        return resp
+
+    def _execute(self, req):
+        return (req.experiment, req.spec, req.quick)

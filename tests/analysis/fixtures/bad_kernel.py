@@ -1,0 +1,20 @@
+"""Fixture: a kernel whose index map subscripts the scalar operand past
+the packed length (params_ref[7] on an int32[4] operand) — REPRO-K001 —
+and whose wrapper docstring disagrees with the builder — REPRO-K003.
+Parsed by the analyzer, never imported (the pallas imports are fake).
+"""
+
+LANE = 128
+SUBLANE = 8
+
+
+def _index_map(i, params_ref):
+    stride, wset, base = params_ref[0], params_ref[1], params_ref[2]
+    extra = params_ref[7]
+    return base + (i * stride) % wset + extra, 0
+
+
+def bad_read(params, buf, *, grid_txns):
+    """Fixture kernel; params: int32[6] scalar operand (wrong on both
+    counts: the builder packs 4, the index map reads index 7)."""
+    return _index_map, params, buf, grid_txns

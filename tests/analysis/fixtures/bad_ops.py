@@ -1,0 +1,23 @@
+"""Fixture ops module for bad_kernel.py: packs an int32[4] operand with
+no int32 range guard (→ REPRO-K002 at registry bounds), feeds it to the
+fixture kernel, and sizes the working buffer without the base address
+(→ REPRO-K004).  Parsed by the analyzer, never imported.
+"""
+import jax.numpy as jnp
+
+from repro.kernels.bad_kernel import bad_read
+
+
+def params_operand(p, dtype):
+    return jnp.array([p.s, p.w, p.a, p.n], dtype=jnp.int32)
+
+
+def make_working_buffer(p, dtype):
+    rows = p.w // 128
+    return jnp.zeros((rows, 128), dtype=dtype)
+
+
+def measure(p, dtype):
+    operand = params_operand(p, dtype)
+    buf = make_working_buffer(p, dtype)
+    return bad_read(operand, buf, grid_txns=p.n)

@@ -1,0 +1,11 @@
+"""Fixture parity-test module: imports both sides but only ever pins
+``throughput``; any other required (function, oracle) pair reports
+REPRO-O002.  Parsed, never imported (and not named test_*.py, so pytest
+never collects it).
+"""
+from repro.core import _timing_reference as ref
+from repro.core import timing_model as vec
+
+
+def test_throughput_parity():
+    assert vec.throughput is not ref.throughput

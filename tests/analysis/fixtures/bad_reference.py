@@ -1,0 +1,12 @@
+"""Fixture loop-oracle module: only ``throughput`` exists; the read
+oracle for serial latencies is missing, so checking a timing module that
+exposes ``serial_read_latencies`` against this file raises REPRO-O001.
+Parsed, never imported.
+"""
+
+
+def throughput(p, mapping, spec, *, op="read"):
+    total = 0.0
+    for _ in range(p.n):
+        total += 1.0
+    return total

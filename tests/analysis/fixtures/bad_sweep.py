@@ -1,0 +1,32 @@
+"""Fixture: a Sweep-alike whose memo key misses a field the evaluation
+depends on (`pt.arbitration`) — repro-lint must flag REPRO-C001.  Also a
+SweepPoint that is not frozen — REPRO-C002.  Parsed by the analyzer,
+never imported.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    params: object
+    policy: str = "RBC"
+    op: str = "read"
+    arbitration: str = "round_robin"
+
+
+class Sweep:
+    def __init__(self):
+        self._tp_cache = {}
+
+    def _run_throughput(self, pt):
+        key = (pt.params, pt.policy, pt.op)
+        base = self._tp_cache.get(key)
+        if base is None:
+            base = evaluate(pt.params, pt.policy, op=pt.op,
+                            arbitration=pt.arbitration)
+            self._tp_cache[key] = base
+        return base
+
+
+def evaluate(p, policy, *, op, arbitration):
+    return (p, policy, op, arbitration)

@@ -1,0 +1,13 @@
+"""Fixture vectorized timing module: ``throughput`` has an oracle in
+bad_reference.py, ``frobnicate`` has none (→ REPRO-O001), and the
+keyword axis ``mystery_axis`` has no SweepPoint field (→ REPRO-C003 when
+checked against a point class lacking it).  Parsed, never imported.
+"""
+
+
+def throughput(p, mapping, spec, *, op="read"):
+    return 0.0
+
+
+def frobnicate(p, mapping, spec, *, mystery_axis=3):
+    return float(mystery_axis)

@@ -1,0 +1,182 @@
+"""Analyzer self-tests: every invariant family flags its fixture with the
+right ID, and mutating the *real* tree (deleting a key field, an oracle,
+a capability flag) is caught — the acceptance criteria of the pass.
+Fixtures live in tests/analysis/fixtures/ and are parsed, never
+imported.
+"""
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.cache_keys import (check_request_dedup,
+                                       check_sweep_cache_keys,
+                                       check_timing_signature_coverage)
+from repro.analysis.capabilities import check_capability_contracts
+from repro.analysis.kernel_shapes import check_kernel_safety
+from repro.analysis.oracle_parity import check_oracle_parity
+
+FIXTURES = Path(__file__).parent / "fixtures"
+REPO = Path(__file__).resolve().parents[2]
+CORE = REPO / "src/repro/core"
+
+
+def ids(findings):
+    return {f.invariant for f in findings}
+
+
+def message_of(findings, invariant):
+    return " | ".join(f.message for f in findings
+                      if f.invariant == invariant)
+
+
+# ------------------------------------------------------------- fixtures
+def test_fixture_missing_cache_key_field_is_c001():
+    findings = check_sweep_cache_keys(FIXTURES / "bad_sweep.py")
+    assert "REPRO-C001" in ids(findings)
+    assert "pt.arbitration" in message_of(findings, "REPRO-C001")
+
+
+def test_fixture_unfrozen_point_is_c002():
+    findings = check_sweep_cache_keys(FIXTURES / "bad_sweep.py")
+    assert "REPRO-C002" in ids(findings)
+    assert "not frozen" in message_of(findings, "REPRO-C002")
+
+
+def test_fixture_unkeyable_model_axis_is_c003():
+    findings = check_timing_signature_coverage(
+        FIXTURES / "bad_timing.py", FIXTURES / "bad_sweep.py",
+        functions=("throughput", "frobnicate"))
+    assert ids(findings) == {"REPRO-C003"}
+    assert "mystery_axis" in message_of(findings, "REPRO-C003")
+
+
+def test_fixture_partial_dedup_key_is_c004():
+    findings = check_request_dedup(FIXTURES / "bad_campaign.py")
+    msgs = message_of(findings, "REPRO-C004")
+    assert "projection" in msgs          # keyed by request.experiment
+    assert "compare=False" in msgs       # quick read but not compared
+
+
+def test_fixture_missing_oracle_is_o001():
+    findings = check_oracle_parity(FIXTURES / "bad_timing.py",
+                                   FIXTURES / "bad_reference.py",
+                                   FIXTURES / "bad_parity_test.py")
+    assert "REPRO-O001" in ids(findings)
+    assert "frobnicate" in message_of(findings, "REPRO-O001")
+
+
+def test_fixture_untested_pair_is_o002(tmp_path):
+    # Same fixtures, but the parity test module loses its one test.
+    empty = tmp_path / "parity_test.py"
+    empty.write_text("from repro.core import _timing_reference as ref\n"
+                     "from repro.core import timing_model as vec\n")
+    findings = check_oracle_parity(FIXTURES / "bad_timing.py",
+                                   FIXTURES / "bad_reference.py", empty)
+    assert "REPRO-O002" in ids(findings)
+    assert "throughput" in message_of(findings, "REPRO-O002")
+
+
+def test_fixture_capability_contracts_b001_b002_b003():
+    findings = check_capability_contracts([FIXTURES / "bad_backend.py"])
+    assert ids(findings) == {"REPRO-B001", "REPRO-B002", "REPRO-B003"}
+    assert "UndeclaredBackend" in message_of(findings, "REPRO-B001")
+    assert "PhantomBackend" in message_of(findings, "REPRO-B002")
+    assert "OpaqueBackend" in message_of(findings, "REPRO-B003")
+
+
+def test_fixture_kernel_shape_violations_k001_to_k004():
+    findings = check_kernel_safety(
+        FIXTURES / "bad_ops.py",
+        kernel_paths={"bad_read": FIXTURES / "bad_kernel.py"})
+    assert ids(findings) == {"REPRO-K001", "REPRO-K002", "REPRO-K003",
+                             "REPRO-K004"}
+    assert "params_ref[7]" in message_of(findings, "REPRO-K001")
+    assert "int32[6]" in message_of(findings, "REPRO-K003")
+
+
+# ------------------------------------------- real-tree mutation probes
+def test_deleting_a_sweep_key_field_fails_the_pass(tmp_path):
+    src = (CORE / "sweep.py").read_text()
+    mutated = src.replace(
+        "key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
+        "               pt.arbitration, pt.burst_beats, pt.placement)",
+        "key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
+        "               pt.arbitration, pt.burst_beats)")
+    assert mutated != src, "contention memo key moved; update the probe"
+    target = tmp_path / "sweep.py"
+    target.write_text(mutated)
+    findings = check_sweep_cache_keys(target)
+    assert "REPRO-C001" in ids(findings)
+    assert "pt.placement" in message_of(findings, "REPRO-C001")
+
+
+def test_deleting_an_oracle_fails_the_pass(tmp_path):
+    src = (CORE / "_timing_reference.py").read_text()
+    mutated = src.replace("def serial_write_latencies(",
+                          "def _serial_write_latencies_gone(")
+    assert mutated != src
+    target = tmp_path / "_timing_reference.py"
+    target.write_text(mutated)
+    findings = check_oracle_parity(
+        CORE / "timing_model.py", target,
+        REPO / "tests/core/test_timing_parity.py")
+    assert "REPRO-O001" in ids(findings)
+    assert "serial_write_latencies" in message_of(findings, "REPRO-O001")
+
+
+def test_dropping_a_parity_test_fails_the_pass(tmp_path):
+    src = (REPO / "tests/core/test_timing_parity.py").read_text()
+    mutated = src.replace("def test_contended_serial_latency_parity(",
+                          "def untested_contended_serial_latency(")
+    assert mutated != src
+    target = tmp_path / "test_timing_parity.py"
+    target.write_text(mutated)
+    findings = check_oracle_parity(CORE / "timing_model.py",
+                                   CORE / "_timing_reference.py", target)
+    assert "REPRO-O002" in ids(findings)
+    assert "serial_contended_latencies" in message_of(findings,
+                                                      "REPRO-O002")
+
+
+def test_undeclaring_a_real_capability_fails_the_pass(tmp_path):
+    src = (CORE / "engine.py").read_text()
+    mutated = src.replace(
+        "    deterministic = False\n"
+        "    supports_latency = False\n"
+        "    supports_contention = True",
+        "    deterministic = False\n"
+        "    supports_latency = False\n"
+        "    supports_contention = False")
+    assert mutated != src, "PallasBackend flags moved; update the probe"
+    target = tmp_path / "engine.py"
+    target.write_text(mutated)
+    findings = check_capability_contracts([target])
+    assert "REPRO-B001" in ids(findings)
+    assert "PallasBackend" in message_of(findings, "REPRO-B001")
+
+
+def test_removing_the_operand_guard_fails_the_pass(tmp_path):
+    ops_src = (REPO / "src/repro/kernels/ops.py").read_text()
+    mutated = ops_src.replace(
+        "    _require_int32_index_range(stride_b, wset_b, base_b, n)\n", "")
+    assert mutated != ops_src, "params_operand guard moved; update probe"
+    kerneldir = tmp_path / "kernels"
+    kerneldir.mkdir()
+    (kerneldir / "ops.py").write_text(mutated)
+    for name in ("rst_read.py", "rst_write.py", "rst_contend.py"):
+        shutil.copy(REPO / "src/repro/kernels" / name, kerneldir / name)
+    findings = check_kernel_safety(
+        kerneldir / "ops.py",
+        experiments_path=CORE / "experiments.py")
+    assert "REPRO-K002" in ids(findings)
+    assert "params_operand" in message_of(findings, "REPRO-K002")
+
+
+def test_findings_carry_location_id_and_hint():
+    findings = check_sweep_cache_keys(FIXTURES / "bad_sweep.py")
+    for f in findings:
+        assert f.path.endswith("bad_sweep.py")
+        assert f.line >= 1
+        assert f.hint
+        assert f.invariant.startswith("REPRO-")

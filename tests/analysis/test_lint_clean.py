@@ -1,0 +1,119 @@
+"""The pass as CI runs it: zero findings on the shipped tree, baseline in
+sync, CLI exit codes correct — including the ratchet direction (a stale
+baseline entry fails) and the acceptance probe (a violation introduced
+into a copied tree makes `python -m repro.analysis.lint` exit non-zero).
+"""
+import json
+import shutil
+from pathlib import Path
+
+from repro.analysis.findings import load_baseline
+from repro.analysis.lint import default_root, main, run_analysis
+
+REPO = Path(__file__).resolve().parents[2]
+BASELINE = REPO / "analysis_baseline.json"
+
+# Everything run_analysis touches, for building mutated tree copies.
+ANALYZED = (
+    "src/repro/core/sweep.py",
+    "src/repro/core/timing_model.py",
+    "src/repro/core/_timing_reference.py",
+    "src/repro/core/experiments.py",
+    "src/repro/core/engine.py",
+    "src/repro/service/campaign.py",
+    "src/repro/service/faults.py",
+    "src/repro/kernels/ops.py",
+    "src/repro/kernels/rst_read.py",
+    "src/repro/kernels/rst_write.py",
+    "src/repro/kernels/rst_contend.py",
+    "tests/core/test_timing_parity.py",
+)
+
+
+def _copy_tree(tmp_path: Path) -> Path:
+    root = tmp_path / "tree"
+    for rel in ANALYZED:
+        dst = root / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO / rel, dst)
+    return root
+
+
+def test_default_root_is_the_repo():
+    assert default_root() == REPO
+
+
+def test_shipped_tree_has_no_findings():
+    assert run_analysis(REPO) == []
+
+
+def test_committed_baseline_is_in_sync():
+    assert BASELINE.exists(), "commit analysis_baseline.json at the root"
+    assert load_baseline(BASELINE) == []
+
+
+def test_cli_exits_zero_on_shipped_tree(capsys):
+    status = main(["--root", str(REPO), "--baseline", str(BASELINE)])
+    assert status == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_json_dump(tmp_path, capsys):
+    out = tmp_path / "findings.json"
+    status = main(["--root", str(REPO), "--baseline", str(BASELINE),
+                   "--json", str(out)])
+    assert status == 0
+    capsys.readouterr()
+    data = json.loads(out.read_text())
+    assert data == {"version": 1, "findings": []}
+
+
+def test_stale_baseline_entry_fails_the_ratchet(tmp_path, capsys):
+    stale = tmp_path / "baseline.json"
+    stale.write_text(json.dumps({
+        "version": 1,
+        "findings": [{"invariant": "REPRO-C001",
+                      "path": "src/repro/core/sweep.py",
+                      "message": "a violation that no longer exists"}],
+    }))
+    status = main(["--root", str(REPO), "--baseline", str(stale)])
+    assert status == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_fails_on_introduced_violation(tmp_path, capsys):
+    root = _copy_tree(tmp_path)
+    sweep = root / "src/repro/core/sweep.py"
+    src = sweep.read_text()
+    mutated = src.replace(
+        "key = (pt.params, pt.policy, pt.op)",
+        "key = (pt.params, pt.policy)")
+    assert mutated != src, "throughput memo key moved; update the probe"
+    sweep.write_text(mutated)
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text('{"version": 1, "findings": []}\n')
+    status = main(["--root", str(root), "--baseline", str(baseline)])
+    out = capsys.readouterr().out
+    assert status == 1
+    assert "REPRO-C001" in out and "pt.op" in out
+
+
+def test_write_baseline_round_trips(tmp_path, capsys):
+    root = _copy_tree(tmp_path)
+    engine = root / "src/repro/core/engine.py"
+    src = engine.read_text()
+    mutated = src.replace(
+        "    deterministic = True\n    supports_latency = True",
+        "    deterministic = True\n    supports_latency = False")
+    assert mutated != src
+    engine.write_text(mutated)
+    baseline = tmp_path / "baseline.json"
+    # Ratchet bootstrap: record the pre-existing violation...
+    assert main(["--root", str(root), "--baseline", str(baseline),
+                 "--write-baseline"]) == 0
+    # ...the recorded tree passes (ratchet holds the line)...
+    assert main(["--root", str(root), "--baseline", str(baseline)]) == 0
+    # ...and fixing it makes the stale entry fail until removed.
+    engine.write_text(src)
+    assert main(["--root", str(root), "--baseline", str(baseline)]) == 1
+    capsys.readouterr()

@@ -1,0 +1,85 @@
+"""Regression tests for the two real violations repro-lint surfaced
+(DESIGN.md §11.4): int32 overflow in the index-map operands was
+unguarded (REPRO-K002), and the working buffer ignored the RST base
+address A so any A != 0 indexed past it (REPRO-K004).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RSTParams
+from repro.kernels import ops
+from repro.kernels.ref import rst_read_checksum_ref
+from repro.kernels.rst_read import LANE
+
+TILE = 8 * LANE * 4  # burst_rows=8, float32
+
+
+class TestInt32OverflowGuard:
+    def test_small_operands_unaffected(self):
+        p = RSTParams(n=16, b=TILE, w=16 * TILE, s=TILE)
+        operand = ops.params_operand(p, jnp.float32)
+        assert operand.dtype == jnp.int32
+        assert operand.shape == (4,)
+
+    def test_overflowing_product_rejected(self):
+        # (n-1) * stride_blocks = 16383 * 2**18 > 2**31: on the device
+        # the int32 index map would wrap to a wrong block index.
+        p = RSTParams(n=1 << 14, b=TILE, w=1 << 30, s=1 << 30)
+        with pytest.raises(ValueError, match="int32"):
+            ops.params_operand(p, jnp.float32)
+
+    def test_overflowing_engine_span_rejected(self):
+        # base + num_engines * wset_blocks > 2**31: the contended map's
+        # window offset k * wset overflows even though each engine's own
+        # traversal fits.
+        p = RSTParams(n=8, b=TILE, w=1 << 30, s=TILE)
+        with pytest.raises(ValueError, match="int32"):
+            ops.contended_params_operand(p, 8192, jnp.float32)
+
+    def test_contended_small_config_unaffected(self):
+        p = RSTParams(n=16, b=TILE, w=16 * TILE, s=TILE)
+        operand = ops.contended_params_operand(p, 4, jnp.float32,
+                                               burst_beats=2)
+        assert operand.shape == (6,)
+        assert int(operand[4]) == 4 and int(operand[5]) == 2
+
+    def test_grid_clamp_keeps_large_n_packable(self):
+        # The guard sees the clamped n (min(p.n, grid)), matching what
+        # the index map can actually compute.
+        p = RSTParams(n=1 << 14, b=TILE, w=1 << 30, s=1 << 30)
+        operand = ops.params_operand(p, jnp.float32, grid_txns=64)
+        assert int(operand[3]) == 64
+
+
+class TestWorkingBufferCoversBase:
+    def test_buffer_spans_base_plus_window(self):
+        p = RSTParams(n=8, b=TILE, w=8 * TILE, s=TILE, a=2 * TILE)
+        buf = ops.make_working_buffer(p, jnp.float32)
+        assert buf.shape[0] * LANE * 4 == p.a + p.w
+
+    def test_contended_buffer_spans_base_plus_all_windows(self):
+        p = RSTParams(n=8, b=TILE, w=4 * TILE, s=TILE, a=2 * TILE)
+        buf = ops.make_working_buffer(p, jnp.float32, num_engines=3)
+        assert buf.shape[0] * LANE * 4 == p.a + 3 * p.w
+
+    def test_zero_base_buffer_unchanged(self):
+        p = RSTParams(n=8, b=TILE, w=8 * TILE, s=TILE)
+        buf = ops.make_working_buffer(p, jnp.float32)
+        assert buf.shape[0] * LANE * 4 == p.w
+
+    def test_read_measurement_with_nonzero_base_matches_oracle(self):
+        # Before the fix the buffer held only W bytes, so base_block + i
+        # indexed past it for any A != 0.
+        p = RSTParams(n=12, b=TILE, w=8 * TILE, s=2 * TILE, a=4 * TILE)
+        sample = ops.measure_read_bandwidth(p, grid_txns=16)
+        buf = ops.make_working_buffer(p, jnp.float32)
+        stride_b, wset_b, base_b = 2, 8, 4
+        want = rst_read_checksum_ref(np.asarray(buf), stride_b, wset_b,
+                                     base_b, p.n, burst_rows=8)
+        np.testing.assert_allclose(sample.checksum, want, rtol=1e-5)
+
+    def test_indivisible_base_rejected(self):
+        p = RSTParams(n=8, b=TILE, w=8 * TILE, s=TILE, a=100)
+        with pytest.raises(ValueError, match="rows"):
+            ops.make_working_buffer(p, jnp.float32)
