@@ -201,6 +201,94 @@ def bench_sweep_grid(quick=False):
              f"cache_hits={stats.cache_hits};max_gbps={max(gbps):.2f}")]
 
 
+def bench_grid(quick=False):
+    """Grid-evaluation ladder (DESIGN.md §12): one policy x stride x op x
+    engines x arbitration x placement cross-product priced four ways —
+    per-point NumPy, per-point jit, one jit+vmap compiled grid, and the
+    mesh-sharded grid.  The jit+vmap : per-point-NumPy ratio is the PR's
+    acceptance number (>= 100x on the >= 10k-point default grid).
+    """
+    import jax
+    from repro.core import HBM, RSTParams, get_mapping
+    from repro.core import timing_jax, timing_model
+    from repro.core.address_mapping import policies_for
+    from repro.launch.mesh import grid_mesh
+
+    spec = HBM
+    # Long streams are where batching pays: every lane below is exactly
+    # periodic (pow2 everything, no exclusive grants), so the compiled
+    # grid evaluates a 2-window steady-state kernel per lane while the
+    # per-point NumPy path expands all 2^17 commands.
+    n = 1 << 15 if quick else 1 << 17
+    nparams = 6 if quick else 18
+    params = tuple(RSTParams(n=n, b=32, s=256 << (i % 6),
+                             w=(256 << (i % 6)) * (1 << (i // 6)))
+                   for i in range(nparams))
+    axes = timing_jax.GridAxes(
+        params=params,
+        policies=(None,) + tuple(policies_for(spec))[:3],
+        ops=("read", "write", "duplex"),
+        num_engines=(1, 4) if quick else (1, 2, 4, 8),
+        arbitrations=((("round_robin", 1), ("burst", 4)) if quick else
+                      (("round_robin", 1), ("burst", 2), ("burst", 4),
+                       ("burst", 8))),
+        placements=("same_channel", "same_switch", "cross_switch"))
+
+    # Rung 1: the uncached naive path — one host-side NumPy evaluation
+    # per point, timed on an evenly-spaced sample (the full product at
+    # ~ms/point is exactly what this ladder exists to retire).
+    pts = axes.sweep_points()
+    sample = pts[::max(1, len(pts) // (8 if quick else 24))]
+    def run_numpy():
+        for pt in sample:
+            timing_model.contended_throughput(
+                pt.params, get_mapping(spec, pt.policy), spec,
+                num_engines=pt.num_engines, op=pt.op,
+                arbitration=pt.arbitration, burst_beats=pt.burst_beats)
+    _, numpy_us = _timed(run_numpy)
+    numpy_pps = len(sample) / (numpy_us * 1e-6)
+    rows = [("grid_per_point_numpy", numpy_us,
+             f"sampled={len(sample)};pts_per_s={numpy_pps:.0f}")]
+
+    # Rung 2: per-point jit — same sample through the JAX single-point
+    # wrapper (one compile per shape bucket, then per-call dispatch).
+    timing_jax.contended_throughput(
+        sample[0].params, get_mapping(spec, sample[0].policy), spec,
+        num_engines=sample[0].num_engines, op=sample[0].op,
+        arbitration=sample[0].arbitration,
+        burst_beats=sample[0].burst_beats)          # warm the jit cache
+    def run_jit_pp():
+        for pt in sample:
+            timing_jax.contended_throughput(
+                pt.params, get_mapping(spec, pt.policy), spec,
+                num_engines=pt.num_engines, op=pt.op,
+                arbitration=pt.arbitration, burst_beats=pt.burst_beats)
+    _, jitpp_us = _timed(run_jit_pp)
+    rows.append(("grid_jit_per_point", jitpp_us,
+                 f"sampled={len(sample)};"
+                 f"pts_per_s={len(sample) / (jitpp_us * 1e-6):.0f}"))
+
+    # Rung 3: jit+vmap — the whole cross-product as one compiled program.
+    cold, cold_us = _timed(lambda: timing_jax.evaluate_grid(spec, axes))
+    warm, warm_us = _timed(lambda: timing_jax.evaluate_grid(spec, axes))
+    vmap_pps = warm.size / (warm_us * 1e-6)
+    rows.append(("grid_jit_vmap", warm_us,
+                 f"points={warm.size};pts_per_s={vmap_pps:.0f};"
+                 f"cold_s={cold_us * 1e-6:.2f};"
+                 f"speedup_vs_numpy={vmap_pps / numpy_pps:.0f}x"))
+
+    # Rung 4: mesh-sharded grid (1 device locally; CI forces 8 host
+    # devices via XLA_FLAGS so the sharded rung exercises real sharding).
+    mesh = grid_mesh()
+    timing_jax.evaluate_grid(spec, axes, mesh=mesh)   # compile + place
+    shard, shard_us = _timed(
+        lambda: timing_jax.evaluate_grid(spec, axes, mesh=mesh))
+    rows.append(("grid_sharded", shard_us,
+                 f"points={shard.size};devices={jax.device_count()};"
+                 f"pts_per_s={shard.size / (shard_us * 1e-6):.0f}"))
+    return rows
+
+
 def bench_oracle_autotune():
     """Framework integration: oracle efficiency + KV layout choice."""
     from repro.core import AccessPattern, MemoryOracle, choose_layout
@@ -418,6 +506,11 @@ def main() -> None:
     ap.add_argument("--service", action="store_true",
                     help="run the campaign-service fault-injection soak "
                          "instead of the registry benches (DESIGN.md §10)")
+    ap.add_argument("--grid", action="store_true",
+                    help="run the grid-evaluation ladder (per-point NumPy "
+                         "vs jit vs jit+vmap vs sharded, DESIGN.md §12) "
+                         "instead of the registry benches; --json defaults "
+                         "to BENCH_grid.json")
     ap.add_argument("--fault-rate", metavar="RATES", default=None,
                     help="comma list of injected fault rates in [0, 1] for "
                          "--service (default: 0,0.01,0.1)")
@@ -430,11 +523,12 @@ def main() -> None:
             ap.error("--fault-rate only applies with --service")
         if args.qps_target is not None:
             ap.error("--qps-target only applies with --service")
-    if args.lint_report:
-        if args.service:
-            ap.error("--lint-report and --service are separate modes")
-        if args.json is None:
-            args.json = "BENCH_lint.json"
+    if sum((args.lint_report, args.service, args.grid)) > 1:
+        ap.error("--lint-report, --service and --grid are separate modes")
+    if args.lint_report and args.json is None:
+        args.json = "BENCH_lint.json"
+    if args.grid and args.json is None:
+        args.json = "BENCH_grid.json"
     fault_rates = parse_fault_rates(args.fault_rate) \
         if args.fault_rate is not None else (0.0, 0.01, 0.1)
     if args.qps_target is not None and args.qps_target <= 0:
@@ -464,6 +558,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     if args.lint_report:
         suites = [bench_lint_report]
+    elif args.grid:
+        suites = [lambda: bench_grid(q)]
     elif args.service:
         suites = [
             lambda: bench_service(q, fault_rates, args.qps_target),
@@ -495,6 +591,7 @@ def main() -> None:
         payload = {
             "benchmark": ("shuhai-lint" if args.lint_report
                           else "shuhai-campaign-service" if args.service
+                          else "shuhai-grid" if args.grid
                           else "shuhai-campaign"),
             "quick": q,
             "unix_time": time.time(),

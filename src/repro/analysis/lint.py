@@ -39,11 +39,17 @@ def _run_cache_keys(root: Path) -> List[Finding]:
 
 
 def _run_oracle_parity(root: Path) -> List[Finding]:
-    return oracle_parity.check_oracle_parity(
+    findings = oracle_parity.check_oracle_parity(
         root / "src/repro/core/timing_model.py",
         root / "src/repro/core/_timing_reference.py",
         root / "tests/core/test_timing_parity.py",
         repo_root=root)
+    findings.extend(oracle_parity.check_jax_parity(
+        root / "src/repro/core/timing_jax.py",
+        root / "src/repro/core/timing_model.py",
+        root / "tests/core/test_timing_differential.py",
+        repo_root=root))
+    return findings
 
 
 def _run_capabilities(root: Path) -> List[Finding]:
@@ -72,10 +78,12 @@ def run_analysis(root: Path) -> List[Finding]:
     required = (
         "src/repro/core/sweep.py",
         "src/repro/core/timing_model.py",
+        "src/repro/core/timing_jax.py",
         "src/repro/core/_timing_reference.py",
         "src/repro/service/campaign.py",
         "src/repro/kernels/ops.py",
         "tests/core/test_timing_parity.py",
+        "tests/core/test_timing_differential.py",
     )
     missing = [rel for rel in required if not (root / rel).exists()]
     if missing:

@@ -162,3 +162,130 @@ def check_oracle_parity(timing_path: Path, reference_path: Path,
                          f"{reason})"),
                 hint="drop the entry from EXEMPT_PUBLIC"))
     return findings
+
+
+# ---------------------------------------------------------------------------
+# REPRO-O003/O004 — the JAX tier of the three-implementation tower.
+#
+# The grid port in ``core/timing_jax.py`` is only trusted because every
+# public function names its NumPy mid-level oracle (the timing_model
+# function the differential harness pins it against within
+# ``timing_jax.REL_TOLERANCE``), and because that pair actually appears in
+# ``tests/core/test_timing_differential.py``.  The grid entry points
+# (`evaluate_points`, `evaluate_grid`) answer to ``contended_throughput``:
+# a grid lane IS one contended-throughput evaluation, recombined over
+# placements.
+# ---------------------------------------------------------------------------
+
+# public timing_jax function -> the timing_model counterpart it must be
+# differentially tested against.
+JAX_EQUIVALENTS: Dict[str, str] = {
+    "throughput": "throughput",
+    "contended_throughput": "contended_throughput",
+    "evaluate_points": "contended_throughput",
+    "evaluate_grid": "contended_throughput",
+}
+
+# Public timing_jax names that legitimately need no NumPy counterpart,
+# with the reason (surfaced if the exemption goes stale).
+JAX_EXEMPT: Dict[str, str] = {}
+
+
+def _function_attr_uses(tree: ast.Module, owner: str) -> Dict[str, Set[str]]:
+    """attr uses of `owner` per module-level function, with one level of
+    local helper calls folded in (differential tests route shared
+    assertions through module helpers)."""
+    fns = {fn.name: fn for fn in tree.body
+           if isinstance(fn, ast.FunctionDef)}
+    direct = {name: _attr_uses(fn, owner) for name, fn in fns.items()}
+    calls = {name: {node.func.id for node in ast.walk(fn)
+                    if isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)}
+             for name, fn in fns.items()}
+    # Two folding rounds cover helper-calls-helper chains.
+    for _ in range(2):
+        for name in fns:
+            for callee in calls[name]:
+                if callee in direct:
+                    direct[name] = direct[name] | direct[callee]
+    return direct
+
+
+def check_jax_parity(jax_path: Path, timing_path: Path,
+                     differential_test_path: Path, *,
+                     repo_root: Optional[Path] = None) -> List[Finding]:
+    def rel(p: Path) -> str:
+        if repo_root is not None:
+            try:
+                return str(p.relative_to(repo_root))
+            except ValueError:
+                pass
+        return str(p)
+
+    jax_tree = parse_module(jax_path)
+    timing_tree = parse_module(timing_path)
+    test_tree = parse_module(differential_test_path)
+
+    timing_names = {fn.name for fn in public_functions(timing_tree)}
+    findings: List[Finding] = []
+
+    jax_alias = _module_alias(test_tree, "timing_jax")
+    vec_alias = _module_alias(test_tree, "timing_model")
+    if jax_alias is None or vec_alias is None:
+        findings.append(Finding(
+            invariant="REPRO-O004", path=rel(differential_test_path),
+            line=1,
+            message=("differential test module does not import both "
+                     "timing_jax and timing_model"),
+            hint="import both modules so differential tests can pin them"))
+        return findings
+
+    jax_uses = _function_attr_uses(test_tree, jax_alias)
+    vec_uses = _function_attr_uses(test_tree, vec_alias)
+    test_pairs = [(jax_uses[name], vec_uses[name])
+                  for name in jax_uses if name.startswith("test_")]
+
+    for fn in public_functions(jax_tree):
+        name = fn.name
+        if name in JAX_EXEMPT:
+            continue
+        counterpart = JAX_EQUIVALENTS.get(name)
+        if counterpart is None:
+            findings.append(Finding(
+                invariant="REPRO-O003", path=rel(jax_path), line=fn.lineno,
+                message=(f"public timing_jax function {name}() names no "
+                         f"NumPy counterpart"),
+                hint=("map it to its timing_model oracle in "
+                      "analysis.oracle_parity.JAX_EQUIVALENTS (or record "
+                      "an exemption with its reason)")))
+            continue
+        if counterpart not in timing_names:
+            findings.append(Finding(
+                invariant="REPRO-O003", path=rel(timing_path), line=1,
+                message=(f"NumPy counterpart {counterpart}() for "
+                         f"timing_jax.{name}() is not a public "
+                         f"timing_model function"),
+                hint="fix the JAX_EQUIVALENTS mapping"))
+            continue
+        hit = any(name in jax and counterpart in vec
+                  for jax, vec in test_pairs)
+        if not hit:
+            findings.append(Finding(
+                invariant="REPRO-O004", path=rel(differential_test_path),
+                line=1,
+                message=(f"no differential test references both "
+                         f"timing_jax.{name}() and "
+                         f"timing_model.{counterpart}()"),
+                hint=(f"add a test calling {jax_alias}.{name} and "
+                      f"{vec_alias}.{counterpart} on the same inputs")))
+
+    jax_names = {fn.name for fn in public_functions(jax_tree)}
+    for name, reason in JAX_EXEMPT.items():
+        if name not in jax_names:
+            findings.append(Finding(
+                invariant="REPRO-O003", path=rel(jax_path), line=1,
+                message=(f"JAX parity exemption for {name}() is stale — "
+                         f"the function no longer exists (exempt because: "
+                         f"{reason})"),
+                hint="drop the entry from JAX_EXEMPT"))
+    return findings

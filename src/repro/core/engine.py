@@ -145,6 +145,81 @@ def _arbitration_kwargs(arbitration: str, burst_beats: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Placement decomposition (shared by Engine and the jaxgrid batch path)
+# ---------------------------------------------------------------------------
+
+
+def placement_port_counts(switch: SwitchModel, placement: str,
+                          num_engines: int) -> Tuple[str, List[int]]:
+    """(effective placement, engines per mini-switch port) for one
+    contention placement.
+
+    ``same_channel`` keeps all N engines on one port.  The cross-channel
+    placements spread them over the mini-switch's AXI ports as evenly as
+    possible; on a single-switch (flat) fabric ``cross_switch`` degrades
+    to ``same_switch`` (there is no switch to cross).  Pure planning —
+    no DRAM-side evaluation — so the batch evaluator can decompose a
+    whole grid of placements before launching one kernel call.
+    """
+    if placement not in PLACEMENTS:
+        raise ValueError(
+            f"unknown placement {placement!r}; valid: {PLACEMENTS}")
+    if placement == "same_channel":
+        return placement, [num_engines]
+    effective = placement
+    if placement == "cross_switch" and not switch.can_cross_switch():
+        effective = "same_switch"
+    ports = min(num_engines, switch.topology.axi_per_switch)
+    counts = [num_engines // ports + (1 if i < num_engines % ports else 0)
+              for i in range(ports)]
+    return effective, counts
+
+
+def combine_placement(switch: SwitchModel, placement: str, effective: str,
+                      num_engines: int, counts: List[int],
+                      per_count: Dict[int, "timing_model.ContentionResult"],
+                      *, arbitration: str, burst_beats: int
+                      ) -> "timing_model.ContentionResult":
+    """Fold per-port contention results into one placement result.
+
+    `per_count` maps each distinct per-port engine count to that port's
+    DRAM-side result (same_channel model).  The summed aggregate is
+    capped by the fabric's capacity terms — the mini-switch aggregate
+    datapath for ``same_switch``, additionally the lateral bridge for
+    ``cross_switch`` — and the queueing delay is the engine-weighted
+    mean of the per-port delays.  Exactly the combine the Engine's
+    placement fan-out performs; extracted so the jaxgrid batch path
+    recombines identically.
+    """
+    topo = switch.topology
+    raw_aggregate = sum(per_count[c].aggregate_gbps for c in counts)
+    queueing = sum(c * per_count[c].queueing_delay_cycles
+                   for c in counts) / num_engines
+    dominant = per_count[max(counts)]
+    aggregate, bound = raw_aggregate, dominant.bound
+    cap = switch.capacity_cap_gbps(effective)
+    if cap is not None and raw_aggregate > cap:
+        aggregate = cap
+        lateral = topo.lateral_gbps
+        bound = ("lateral"
+                 if effective == "cross_switch" and lateral is not None
+                 and cap == lateral else "switch")
+    detail = {**dominant.detail,
+              "ports": float(len(counts)),
+              "engines_per_port_max": float(max(counts)),
+              "uncapped_aggregate_gbps": raw_aggregate,
+              "capacity_cap_gbps":
+                  cap if cap is not None else float("inf"),
+              "placement_degraded":
+                  1.0 if effective != placement else 0.0}
+    return timing_model.ContentionResult(
+        num_engines=num_engines, aggregate_gbps=aggregate, bound=bound,
+        queueing_delay_cycles=queueing, detail=detail,
+        arbitration=arbitration, burst_beats=burst_beats,
+        placement=placement)
+
+
+# ---------------------------------------------------------------------------
 # Backend protocol + registry
 # ---------------------------------------------------------------------------
 
@@ -298,6 +373,48 @@ class PallasBackend(Backend):
             burst_beats=burst_beats)
 
 
+class JaxGridBackend(Backend):
+    """JAX jit/vmap grid evaluator over the same timing model
+    (core/timing_jax.py, DESIGN.md §12).
+
+    Per-point protocol calls compile a one-lane batch (cached per
+    command-capacity bucket); the real win is the batch path —
+    :meth:`evaluate_points` lowers a whole campaign cross-product into
+    one compiled XLA program, which ``Sweep.run()`` uses to prefill its
+    memo caches (grid prefill).  Deterministic like ``sim`` — results
+    are a pure function of (spec, params, policy, op, contention axes)
+    — but within ``timing_jax.REL_TOLERANCE`` of the NumPy path rather
+    than bit-identical (float reduction order; the three-way
+    differential tests pin the bound).  Serial latency has no JAX port
+    (its refresh-epoch loop is data-dependent): latency stays on sim.
+    """
+
+    name = "jaxgrid"
+    deterministic = True
+    supports_latency = False
+    supports_contention = True
+    supports_grid = True
+
+    def throughput(self, spec, p, mapping, *, op="read"):
+        from repro.core import timing_jax  # deferred: keeps sim path lean
+        return timing_jax.throughput(p, mapping, spec, op=op)
+
+    def contended_throughput(self, spec, p, mapping, *, num_engines,
+                             op="read", arbitration="round_robin",
+                             burst_beats=1):
+        from repro.core import timing_jax  # deferred: keeps sim path lean
+        return timing_jax.contended_throughput(
+            p, mapping, spec, num_engines=num_engines, op=op,
+            arbitration=arbitration, burst_beats=burst_beats)
+
+    def evaluate_points(self, spec, reqs):
+        """Batched entry point (not part of the per-point protocol):
+        one jit(vmap) call over a flat list of sweep-style requests —
+        see ``timing_jax.evaluate_points`` for the request format."""
+        from repro.core import timing_jax  # deferred: keeps sim path lean
+        return timing_jax.evaluate_points(spec, reqs)
+
+
 _BACKEND_REGISTRY: Dict[str, Backend] = {}
 
 
@@ -328,6 +445,7 @@ def get_backend(name: str) -> Backend:
 
 register_backend(SimBackend())
 register_backend(PallasBackend())
+register_backend(JaxGridBackend())
 
 
 def __getattr__(name: str):
@@ -504,43 +622,17 @@ class Engine:
                 p, num_engines=num_engines, policy=policy, op=op,
                 arbitration=arbitration, burst_beats=burst_beats)
         sw = self._switch_model()
-        topo = sw.topology
-        effective = placement
-        if placement == "cross_switch" and not sw.can_cross_switch():
-            effective = "same_switch"
-        ports = min(num_engines, topo.axi_per_switch)
-        counts = [num_engines // ports + (1 if i < num_engines % ports else 0)
-                  for i in range(ports)]
+        effective, counts = placement_port_counts(sw, placement,
+                                                  num_engines)
         per_count = {
             c: self._port_contended(
                 p, num_engines=c, policy=policy, op=op,
                 arbitration=arbitration, burst_beats=burst_beats)
             for c in set(counts)}
-        raw_aggregate = sum(per_count[c].aggregate_gbps for c in counts)
-        queueing = sum(c * per_count[c].queueing_delay_cycles
-                       for c in counts) / num_engines
-        dominant = per_count[max(counts)]
-        aggregate, bound = raw_aggregate, dominant.bound
-        cap = sw.capacity_cap_gbps(effective)
-        if cap is not None and raw_aggregate > cap:
-            aggregate = cap
-            lateral = topo.lateral_gbps
-            bound = ("lateral"
-                     if effective == "cross_switch" and lateral is not None
-                     and cap == lateral else "switch")
-        detail = {**dominant.detail,
-                  "ports": float(ports),
-                  "engines_per_port_max": float(max(counts)),
-                  "uncapped_aggregate_gbps": raw_aggregate,
-                  "capacity_cap_gbps":
-                      cap if cap is not None else float("inf"),
-                  "placement_degraded":
-                      1.0 if effective != placement else 0.0}
-        return timing_model.ContentionResult(
-            num_engines=num_engines, aggregate_gbps=aggregate, bound=bound,
-            queueing_delay_cycles=queueing, detail=detail,
-            arbitration=arbitration, burst_beats=burst_beats,
-            placement=placement)
+        return combine_placement(sw, placement, effective, num_engines,
+                                 counts, per_count,
+                                 arbitration=arbitration,
+                                 burst_beats=burst_beats)
 
     def evaluate_contention(self, p: RSTParams, *,
                             num_engines: int = 1,

@@ -1,0 +1,19 @@
+"""Fixture: a timing_jax-style module whose public surface drifted.
+
+`frobnicate_grid` is public but named in neither JAX_EQUIVALENTS nor
+JAX_EXEMPT — the REPRO-O003 case.  Parsed by the analyzer tests, never
+imported.
+"""
+
+
+def throughput(p, mapping, spec, *, op="read"):
+    return None
+
+
+def contended_throughput(p, mapping, spec, *, num_engines=1, op="read",
+                         arbitration="round_robin", burst_beats=1):
+    return None
+
+
+def frobnicate_grid(spec, axes):
+    return None

@@ -14,7 +14,7 @@ from repro.analysis.cache_keys import (check_request_dedup,
                                        check_timing_signature_coverage)
 from repro.analysis.capabilities import check_capability_contracts
 from repro.analysis.kernel_shapes import check_kernel_safety
-from repro.analysis.oracle_parity import check_oracle_parity
+from repro.analysis.oracle_parity import check_jax_parity, check_oracle_parity
 
 FIXTURES = Path(__file__).parent / "fixtures"
 REPO = Path(__file__).resolve().parents[2]
@@ -137,6 +137,50 @@ def test_dropping_a_parity_test_fails_the_pass(tmp_path):
     assert "REPRO-O002" in ids(findings)
     assert "serial_contended_latencies" in message_of(findings,
                                                       "REPRO-O002")
+
+
+def test_fixture_unmapped_jax_function_is_o003():
+    findings = check_jax_parity(
+        FIXTURES / "bad_timing_jax.py", CORE / "timing_model.py",
+        REPO / "tests/core/test_timing_differential.py")
+    assert "REPRO-O003" in ids(findings)
+    assert "frobnicate_grid" in message_of(findings, "REPRO-O003")
+
+
+def test_deleting_a_jax_parity_case_fails_the_pass(tmp_path):
+    """The ISSUE's mutation probe: dropping one JAX<->NumPy parity case
+    from the differential harness must fail the lint pass."""
+    src = (REPO / "tests/core/test_timing_differential.py").read_text()
+    mutated = src.replace("def test_throughput_three_way(",
+                          "def untested_throughput_three_way(")
+    assert mutated != src, "differential test renamed; update the probe"
+    target = tmp_path / "test_timing_differential.py"
+    target.write_text(mutated)
+    findings = check_jax_parity(
+        CORE / "timing_jax.py", CORE / "timing_model.py", target)
+    assert "REPRO-O004" in ids(findings)
+    assert "timing_jax.throughput()" in message_of(findings, "REPRO-O004")
+
+
+def test_deleting_the_grid_parity_case_fails_the_pass(tmp_path):
+    src = (REPO / "tests/core/test_timing_differential.py").read_text()
+    mutated = src.replace(
+        "def test_evaluate_grid_matches_numpy_per_point(",
+        "def untested_evaluate_grid(")
+    assert mutated != src
+    target = tmp_path / "test_timing_differential.py"
+    target.write_text(mutated)
+    findings = check_jax_parity(
+        CORE / "timing_jax.py", CORE / "timing_model.py", target)
+    assert "REPRO-O004" in ids(findings)
+    assert "evaluate_grid" in message_of(findings, "REPRO-O004")
+
+
+def test_real_jax_tree_is_clean():
+    findings = check_jax_parity(
+        CORE / "timing_jax.py", CORE / "timing_model.py",
+        REPO / "tests/core/test_timing_differential.py")
+    assert findings == []
 
 
 def test_undeclaring_a_real_capability_fails_the_pass(tmp_path):

@@ -17,6 +17,7 @@ BASELINE = REPO / "analysis_baseline.json"
 ANALYZED = (
     "src/repro/core/sweep.py",
     "src/repro/core/timing_model.py",
+    "src/repro/core/timing_jax.py",
     "src/repro/core/_timing_reference.py",
     "src/repro/core/experiments.py",
     "src/repro/core/engine.py",
@@ -27,6 +28,7 @@ ANALYZED = (
     "src/repro/kernels/rst_write.py",
     "src/repro/kernels/rst_contend.py",
     "tests/core/test_timing_parity.py",
+    "tests/core/test_timing_differential.py",
 )
 
 

@@ -385,7 +385,7 @@ class TestCatalog:
         from repro.core.experiments import catalog_rows
         by_name = {r[0]: r for r in catalog_rows()}
         assert by_name["fig4_refresh"][3] == "sim"
-        assert by_name["table5_write_throughput"][3] == "sim, pallas"
+        assert by_name["table5_write_throughput"][3] == "sim, pallas, jaxgrid"
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,323 @@
+"""Three-way differential harness: loop oracle vs NumPy vs JAX.
+
+The timing model ships as a three-implementation tower (DESIGN.md §12):
+
+* ``_timing_reference``  — the verbatim pre-refactor per-transaction loop
+  oracle (who everything ultimately answers to);
+* ``timing_model``       — the vectorized NumPy mid-level oracle, pinned
+  to the loop oracle bit-exactly (integers) / rel 1e-9 (floats) by
+  ``test_timing_parity.py`` and re-checked here on fuzzed tuples;
+* ``timing_jax``         — the jit/vmap grid port, pinned to the NumPy
+  path within :data:`timing_jax.REL_TOLERANCE` (= 1e-9: same f64 math,
+  only mult-vs-repeated-add float associativity differs).
+
+Every assertion message prints the failing tuple as a ready-to-paste
+``REGRESSION_CASES`` entry, so a shrunk hypothesis counterexample becomes
+a permanent fixed case by copy-paste.
+
+The fuzz draws deliberately cover all three JAX lanes (``timing_jax._route``):
+"full" (small streams, full expansion kernel), "periodic" (exactly-periodic
+streams evaluated by steady-state extrapolation), and "numpy" (large
+non-periodic streams that fall back to the NumPy model per-lane).  The
+loop oracle joins only while streams stay small enough for a Python loop;
+large-stream cases are NumPy↔JAX two-way, which is sound because the
+loop↔NumPy leg is stream-size-independent vectorization pinned elsewhere.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import DDR4, HBM, RSTParams, get_mapping
+from repro.core import _timing_reference as ref
+from repro.core import timing_model as vec
+from repro.core import timing_jax as tj
+
+SPECS = {"hbm": HBM, "ddr4": DDR4}
+
+# Tolerance policy (documented contract, DESIGN.md §12):
+LOOP_NUMPY_REL = 1e-9           # loop oracle <-> NumPy (float fields)
+NUMPY_JAX_REL = tj.REL_TOLERANCE  # NumPy <-> JAX (float fields) = 1e-9
+
+_DETAIL_BOUNDS = ("bus/ccd", "bank", "faw")
+
+
+def _case_repr(spec_name, policy, kw, op, num_engines, arbitration,
+               burst_beats):
+    """A ready-to-paste REGRESSION_CASES entry for the failing tuple."""
+    return (f'    ("{spec_name}", {policy!r}, dict(n={kw["n"]}, '
+            f'b={kw["b"]}, s={kw["s"]}, w={kw["w"]}), "{op}", '
+            f'{num_engines}, "{arbitration}", {burst_beats}),')
+
+
+def _assert_contention_close(a, b, rel, label, case):
+    """`b` matches `a` on every ContentionResult field that feeds results."""
+    msg = (f"{label} mismatch; add to REGRESSION_CASES:\n{case}")
+    assert b.aggregate_gbps == pytest.approx(a.aggregate_gbps,
+                                             rel=rel), msg
+    assert b.bound == a.bound, msg
+    assert b.queueing_delay_cycles == pytest.approx(
+        a.queueing_delay_cycles, rel=rel, abs=1e-9), msg
+    assert b.detail["total_acts"] == a.detail["total_acts"], msg
+    assert b.detail["txns"] == a.detail["txns"], msg
+    assert b.detail["mean_service_cycles"] == pytest.approx(
+        a.detail["mean_service_cycles"], rel=rel, abs=1e-9), msg
+    for bound in _DETAIL_BOUNDS:
+        assert b.detail[bound] == pytest.approx(a.detail[bound],
+                                                rel=rel), (bound, msg)
+
+
+def _three_way(spec_name, policy, kw, op, num_engines, arbitration,
+               burst_beats, *, loop_oracle=True):
+    spec = SPECS[spec_name]
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    case = _case_repr(spec_name, policy, kw, op, num_engines, arbitration,
+                      burst_beats)
+    numpy_res = vec.contended_throughput(
+        p, m, spec, num_engines=num_engines, op=op,
+        arbitration=arbitration, burst_beats=burst_beats)
+    if loop_oracle:
+        loop_res = ref.contended_throughput(
+            p, m, spec, num_engines=num_engines, op=op,
+            arbitration=arbitration, burst_beats=burst_beats)
+        _assert_contention_close(loop_res, numpy_res, LOOP_NUMPY_REL,
+                                 "loop<->numpy", case)
+    jax_res = tj.contended_throughput(
+        p, m, spec, num_engines=num_engines, op=op,
+        arbitration=arbitration, burst_beats=burst_beats)
+    _assert_contention_close(numpy_res, jax_res, NUMPY_JAX_REL,
+                             "numpy<->jax", case)
+
+
+# ---------------------------------------------------------------------------
+# Fixed regression cases.  One entry per JAX lane and per arbitration
+# family; shrunk fuzz counterexamples get appended here verbatim.
+# ---------------------------------------------------------------------------
+
+REGRESSION_CASES = [
+    # (spec, policy, params kwargs, op, N, arbitration, burst_beats)
+    # -- "full" lane: small streams, full expansion kernel
+    ("hbm", None, dict(n=512, b=32, s=128, w=0x1000000), "read",
+     1, "round_robin", 1),
+    ("hbm", None, dict(n=512, b=32, s=1024, w=8192), "write",
+     4, "burst", 4),
+    ("hbm", "RBC", dict(n=256, b=64, s=2048, w=0x100000), "duplex",
+     2, "round_robin", 1),
+    ("hbm", None, dict(n=300, b=32, s=64, w=0x1000000), "read",
+     3, "burst", 3),          # non-pow2 N and burst
+    ("hbm", None, dict(n=128, b=32, s=32, w=0x1000000), "read",
+     2, "exclusive", 1),
+    ("ddr4", None, dict(n=512, b=64, s=256, w=0x1000000), "read",
+     2, "burst", 8),
+    ("ddr4", "RCB", dict(n=512, b=128, s=4096, w=0x1000000), "write",
+     4, "round_robin", 1),
+    # -- "periodic" lane: exactly-periodic large streams (steady-state
+    #    extrapolation; period = cmds*wos for N=1, cmds*N*bb*wos/gcd else)
+    ("hbm", None, dict(n=1 << 16, b=32, s=1024, w=4096), "read",
+     1, "round_robin", 1),
+    ("hbm", None, dict(n=1 << 16, b=32, s=1024, w=8192), "write",
+     4, "burst", 4),
+    ("hbm", "BRC", dict(n=1 << 16, b=32, s=1024, w=1024), "duplex",
+     2, "burst", 2),
+    ("ddr4", None, dict(n=1 << 16, b=64, s=2048, w=8192), "read",
+     8, "burst", 8),
+    # -- "numpy" fallback lane: large stream, NOT periodic (exclusive
+    #    whole-stream grants for N>1 never interleave periodically)
+    ("hbm", None, dict(n=1 << 15, b=32, s=1024, w=4096), "read",
+     2, "exclusive", 1),
+    ("hbm", None, dict(n=40_000, b=32, s=512, w=0x1000000), "read",
+     4, "round_robin", 1),    # large far-stride stream, period > window
+]
+
+# The loop oracle walks the interleaved stream transaction-by-transaction
+# in Python; past ~20k commands that costs minutes, so big-stream cases
+# check the NumPy<->JAX leg only (see module docstring).
+_LOOP_ORACLE_MAX_CMDS = 16_384
+
+
+def _loop_ok(kw, num_engines, spec_name):
+    spec = SPECS[spec_name]
+    cmds = max(1, kw["b"] // spec.bus_bytes_per_cycle)
+    return kw["n"] * cmds <= _LOOP_ORACLE_MAX_CMDS
+
+
+@pytest.mark.parametrize(
+    "spec_name,policy,kw,op,num_engines,arbitration,burst_beats",
+    REGRESSION_CASES,
+    ids=[f"{c[0]}_{c[1]}_n{c[2]['n']}_s{c[2]['s']}_{c[3]}_N{c[4]}_{c[5]}{c[6]}"
+         for c in REGRESSION_CASES])
+def test_regression_three_way(spec_name, policy, kw, op, num_engines,
+                              arbitration, burst_beats):
+    _three_way(spec_name, policy, kw, op, num_engines, arbitration,
+               burst_beats,
+               loop_oracle=_loop_ok(kw, num_engines, spec_name))
+
+
+def test_regression_cases_cover_every_jax_lane():
+    """The fixed case list keeps exercising all three _route lanes even
+    if routing thresholds move."""
+    lanes = set()
+    for spec_name, policy, kw, op, num_engines, arb, bb in REGRESSION_CASES:
+        spec = SPECS[spec_name]
+        m = get_mapping(spec, policy)
+        unit = (RSTParams(**kw), m, op, num_engines, arb, bb)
+        lanes.add(tj._route(tj._unit_row(spec, unit)))
+    assert lanes == {"full", "periodic", "numpy"}, lanes
+
+
+# ---------------------------------------------------------------------------
+# Throughput (single-engine read/write/duplex) three-way.
+# ---------------------------------------------------------------------------
+
+TP_CASES = [
+    ("hbm", None, dict(n=1024, b=32, s=128, w=0x1000000)),
+    ("hbm", "RBC", dict(n=1024, b=32, s=1024, w=0x1000000)),
+    ("hbm", None, dict(n=1024, b=32, s=4096, w=8192)),
+    ("ddr4", None, dict(n=1024, b=64, s=128, w=0x1000000)),
+    ("ddr4", "RBC", dict(n=1024, b=64, s=2048, w=0x1000000)),
+]
+
+
+@pytest.mark.parametrize("op", ["read", "write", "duplex"])
+@pytest.mark.parametrize("spec_name,policy,kw", TP_CASES,
+                         ids=[f"{c[0]}_{c[1]}_s{c[2]['s']}" for c in TP_CASES])
+def test_throughput_three_way(spec_name, policy, kw, op):
+    spec = SPECS[spec_name]
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    case = _case_repr(spec_name, policy, kw, op, 1, "round_robin", 1)
+    loop_res = ref.throughput(p, m, spec, op=op)
+    numpy_res = vec.throughput(p, m, spec, op=op)
+    jax_res = tj.throughput(p, m, spec, op=op)
+    msg = f"mismatch; add to TP_CASES:\n{case}"
+    assert numpy_res.gbps == pytest.approx(loop_res.gbps,
+                                           rel=LOOP_NUMPY_REL), msg
+    assert jax_res.gbps == pytest.approx(numpy_res.gbps,
+                                         rel=NUMPY_JAX_REL), msg
+    assert jax_res.bound == numpy_res.bound == loop_res.bound, msg
+    assert jax_res.detail["total_acts"] == numpy_res.detail["total_acts"], msg
+    assert jax_res.detail["txns"] == numpy_res.detail["txns"], msg
+    for bound in _DETAIL_BOUNDS:
+        assert jax_res.detail[bound] == pytest.approx(
+            numpy_res.detail[bound], rel=NUMPY_JAX_REL), (bound, msg)
+
+
+# ---------------------------------------------------------------------------
+# Grid entry points vs the NumPy model, point for point.  (Placement
+# recombination beyond same_channel is pinned separately against the
+# per-point Sweep path in test_grid_equivalence.py.)
+# ---------------------------------------------------------------------------
+
+
+def test_evaluate_points_matches_numpy_per_point():
+    spec = HBM
+    p0 = RSTParams(n=512, b=32, s=128, w=0x1000000)
+    p1 = RSTParams(n=512, b=32, s=2048, w=8192)
+    reqs = [
+        ("tp", p0, None, "read"),
+        ("tp", p1, "RBC", "write"),
+        ("cont", p0, None, "read", 4, "burst", 4, "same_channel"),
+        ("cont", p1, None, "duplex", 2, "round_robin", 1, "same_channel"),
+    ]
+    got = tj.evaluate_points(spec, reqs)
+    for req, res in zip(reqs, got):
+        if req[0] == "tp":
+            _, p, pol, op = req
+            want = vec.throughput(p, get_mapping(spec, pol), spec, op=op)
+            assert res.gbps == pytest.approx(want.gbps,
+                                             rel=NUMPY_JAX_REL), req
+            assert res.bound == want.bound, req
+        else:
+            _, p, pol, op, n, arb, bb, _pl = req
+            want = vec.contended_throughput(
+                p, get_mapping(spec, pol), spec, num_engines=n, op=op,
+                arbitration=arb, burst_beats=bb)
+            assert res.aggregate_gbps == pytest.approx(
+                want.aggregate_gbps, rel=NUMPY_JAX_REL), req
+            assert res.bound == want.bound, req
+
+
+def test_evaluate_grid_matches_numpy_per_point():
+    spec = HBM
+    axes = tj.GridAxes(
+        params=tuple(RSTParams(n=512, b=32, s=64 << i, w=0x1000000)
+                     for i in range(3)),
+        policies=(None, "RBC"),
+        ops=("read", "write"),
+        num_engines=(1, 2, 4),
+        arbitrations=(("round_robin", 1), ("burst", 4)))
+    grid = tj.evaluate_grid(spec, axes)
+    for i, (p, pol, op, n, (arb, bb), _pl) in enumerate(axes.product()):
+        want = vec.contended_throughput(
+            p, get_mapping(spec, pol), spec, num_engines=n, op=op,
+            arbitration=arb, burst_beats=bb)
+        assert grid.gbps[i] == pytest.approx(want.aggregate_gbps,
+                                             rel=NUMPY_JAX_REL), i
+        assert grid.bound[i] == want.bound, i
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz.  Strategies draw pow2 RST tuples (Eq. 1's closed form
+# only holds for pow2 S <= W), every op/arbitration family, and engine
+# counts 1..8; example counts stay small because each JAX point compiles
+# once per (cap, nseg) bucket.
+# ---------------------------------------------------------------------------
+
+pow2 = lambda lo, hi: st.integers(lo, hi).map(lambda e: 1 << e)
+
+
+@st.composite
+def contention_tuples(draw):
+    spec_name = draw(st.sampled_from(["hbm", "ddr4"]))
+    spec = SPECS[spec_name]
+    policy = draw(st.sampled_from([None, "RBC"]))
+    b = draw(pow2(5, 8).map(lambda v: max(v, spec.min_burst)))
+    we = draw(pow2(10, 24))
+    s = draw(pow2(5, 14).map(lambda v: min(v, we)))
+    n = draw(st.integers(1, 2048))
+    op = draw(st.sampled_from(["read", "write", "duplex"]))
+    num_engines = draw(st.integers(1, 8))
+    arbitration, burst_beats = draw(st.sampled_from(
+        [("round_robin", 1), ("burst", 2), ("burst", 4), ("burst", 8),
+         ("burst", 3), ("exclusive", 1)]))
+    return (spec_name, policy, dict(n=n, b=b, s=s, w=we), op,
+            num_engines, arbitration, burst_beats)
+
+
+@given(case=contention_tuples())
+@settings(max_examples=25, deadline=None)
+def test_fuzz_contention_three_way(case):
+    """Fuzzed tuples agree loop<->NumPy (rel 1e-9) and NumPy<->JAX
+    (rel REL_TOLERANCE); failures print a paste-ready regression row."""
+    spec_name, policy, kw, op, num_engines, arbitration, burst_beats = case
+    _three_way(spec_name, policy, kw, op, num_engines, arbitration,
+               burst_beats,
+               loop_oracle=_loop_ok(kw, num_engines, spec_name))
+
+
+@st.composite
+def periodic_tuples(draw):
+    """Tuples that land in the periodic lane: pow2 everything, stream
+    long enough for steady-state extrapolation."""
+    spec_name = draw(st.sampled_from(["hbm", "ddr4"]))
+    spec = SPECS[spec_name]
+    b = spec.min_burst                    # cmds = min_burst/bus (1 or 2)
+    s = 1024
+    wos = draw(st.sampled_from([1, 2, 4, 8]))
+    n = draw(pow2(14, 16))
+    op = draw(st.sampled_from(["read", "write", "duplex"]))
+    num_engines, (arbitration, burst_beats) = draw(st.sampled_from(
+        [(1, ("round_robin", 1)), (2, ("burst", 2)), (4, ("burst", 4)),
+         (8, ("burst", 8)), (4, ("round_robin", 1))]))
+    return (spec_name, None, dict(n=n, b=b, s=s, w=s * wos), op,
+            num_engines, arbitration, burst_beats)
+
+
+@given(case=periodic_tuples())
+@settings(max_examples=10, deadline=None)
+def test_fuzz_periodic_lane_matches_numpy(case):
+    """The steady-state extrapolation lane stays within REL_TOLERANCE of
+    the NumPy model on streams far past the loop oracle's reach."""
+    spec_name, policy, kw, op, num_engines, arbitration, burst_beats = case
+    _three_way(spec_name, policy, kw, op, num_engines, arbitration,
+               burst_beats, loop_oracle=False)
