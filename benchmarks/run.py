@@ -81,7 +81,7 @@ def resolve_experiments(names):
 
 
 def engine_ladder(max_engines):
-    """The --engines override: powers of two up to (and including) N."""
+    """The --engines N override: powers of two up to (and including) N."""
     if max_engines < 1:
         raise SystemExit(
             f"benchmarks.run: --engines must be >= 1, got {max_engines}")
@@ -94,6 +94,27 @@ def engine_ladder(max_engines):
     return tuple(ladder)
 
 
+def parse_engines_arg(text):
+    """Resolve the --engines value: a bare integer N (engine-count ladder)
+    or a heterogeneous mix spec like '2r+1w+1d' (DESIGN.md §13).
+
+    Returns the int for the ladder form, the validated spec string for the
+    mix form; exits with the accepted grammar on anything else — the same
+    UX as an unknown --experiments name.
+    """
+    from repro.core.engine_mix import parse_mix_spec
+
+    if text.isdigit():
+        n = int(text)
+        engine_ladder(n)        # validates >= 1 up front, not per suite
+        return n
+    try:
+        parse_mix_spec(text)
+    except ValueError as e:
+        raise SystemExit(f"benchmarks.run: --engines: {e}")
+    return text
+
+
 def bench_experiments(quick=False, experiments=None, engines=None,
                       arbitration=None, burst=None):
     """One row per (registered experiment, applicable spec).
@@ -104,9 +125,12 @@ def bench_experiments(quick=False, experiments=None, engines=None,
     multi-spec ones are suffixed with the spec, matching the historical
     row names so BENCH_*.json trajectories stay comparable.  `engines`
     (the --engines flag) replaces the engine-count ladder of the
-    contention experiments — every experiment with an "engines" option;
-    `arbitration`/`burst` (--arbitration/--burst) select the shared-port
-    grant granularity for every experiment exposing that axis.
+    contention experiments — every experiment with an "engines" option —
+    when given as an int, or (as a mix spec like '2r+1w+1d') the custom
+    blend of every experiment with a "custom_mix" option (the engine-mix
+    family, DESIGN.md §13); `arbitration`/`burst` (--arbitration/--burst)
+    select the shared-port grant granularity for every experiment
+    exposing that axis.
     """
     from repro.core import spec_by_name
     from repro.core.experiments import run_experiment
@@ -117,9 +141,11 @@ def bench_experiments(quick=False, experiments=None, engines=None,
                  for n in (exp.bench_specs or BENCH_SPEC_NAMES)]
         available = [s for s in specs if exp.available_on(s)]
         label = exp.bench_label or exp.name
-        overrides = ({"engines": engine_ladder(engines)}
-                     if engines is not None and "engines" in exp.defaults
-                     else {})
+        overrides = {}
+        if isinstance(engines, int) and "engines" in exp.defaults:
+            overrides["engines"] = engine_ladder(engines)
+        elif isinstance(engines, str) and "custom_mix" in exp.defaults:
+            overrides["custom_mix"] = engines
         if arbitration is not None and "arbitration" in exp.defaults:
             overrides["arbitration"] = arbitration
             if arbitration != "burst" and "burst_beats" in exp.defaults:
@@ -286,6 +312,26 @@ def bench_grid(quick=False):
     rows.append(("grid_sharded", shard_us,
                  f"points={shard.size};devices={jax.device_count()};"
                  f"pts_per_s={shard.size / (shard_us * 1e-6):.0f}"))
+
+    # Rung 5: heterogeneous engine-mix lanes (DESIGN.md §13) — per-engine
+    # (params, op) blends batched through the same compiled evaluator.
+    # Short streams keep every blend on the stacked mixed-lane kernel.
+    import dataclasses as _dc
+
+    from repro.core.engine_mix import EngineMix
+
+    mix_reqs = []
+    for p in params[: 3 if quick else 6]:
+        mp = _dc.replace(p, n=1 << 11)
+        for spec_str in ("3r+1w", "2r+2w", "2r+1w+1d"):
+            mix = EngineMix.from_spec(spec_str, mp)
+            mix_reqs.append(("cont", mp, None, "read", len(mix),
+                             "round_robin", 1, "same_channel", mix))
+    timing_jax.evaluate_points(spec, mix_reqs)            # compile + place
+    _, mix_us = _timed(lambda: timing_jax.evaluate_points(spec, mix_reqs))
+    rows.append(("grid_hetero_mix", mix_us,
+                 f"points={len(mix_reqs)};"
+                 f"pts_per_s={len(mix_reqs) / (mix_us * 1e-6):.0f}"))
     return rows
 
 
@@ -348,6 +394,7 @@ def _service_request_mix(quick, n_requests):
             ExperimentRequest.make("duplex_rw_sweep", spec, quick=True),
             ExperimentRequest.make("contention_scaling_sweep", spec,
                                    quick=True),
+            ExperimentRequest.make("engine_mix_sweep", spec, quick=True),
         ]
     reqs = [templates[i % len(templates)] for i in range(n_requests)]
     order = np.random.default_rng(0).permutation(len(reqs))
@@ -481,10 +528,12 @@ def main() -> None:
                     help="comma-separated experiment names to benchmark "
                          "(default: every registered experiment); unknown "
                          "names fail with the registered list")
-    ap.add_argument("--engines", type=int, metavar="N", default=None,
+    ap.add_argument("--engines", metavar="N|MIX", default=None,
                     help="override the engine-count ladder of the "
                          "contention experiments with powers of two up to "
-                         "N (e.g. 16 -> 1,2,4,8,16)")
+                         "N (e.g. 16 -> 1,2,4,8,16), or — as a mix spec "
+                         "like 2r+1w+1d — the custom blend of the "
+                         "engine-mix experiments (DESIGN.md §13)")
     ap.add_argument("--arbitration", metavar="POLICY", default=None,
                     choices=("round_robin", "burst", "exclusive"),
                     help="shared-port arbitration granularity for every "
@@ -534,7 +583,7 @@ def main() -> None:
     if args.qps_target is not None and args.qps_target <= 0:
         ap.error(f"--qps-target must be > 0, got {args.qps_target:g}")
     if args.engines is not None:
-        engine_ladder(args.engines)   # validate up front, not per suite
+        args.engines = parse_engines_arg(args.engines)
     if args.burst is not None and args.burst < 1:
         ap.error(f"--burst must be >= 1, got {args.burst}")
     if args.burst is not None and args.arbitration != "burst":

@@ -52,7 +52,7 @@ DERIVED_PARAMS: Dict[str, Tuple[str, ...]] = {
 _EXEMPT_PARAMS = frozenset({"p", "mapping", "spec", "trace"})
 
 _TIMING_PUBLIC_KEYED = ("serial_latencies", "throughput",
-                       "contended_throughput")
+                       "contended_throughput", "contended_throughput_mix")
 
 
 def _rel(path: Path, root: Optional[Path]) -> str:
@@ -283,12 +283,32 @@ def check_request_dedup(campaign_path: Path, *,
     return findings
 
 
+def check_engine_mix_keyed(engine_mix_path: Path, *,
+                           repo_root: Optional[Path] = None,
+                           mix_class: str = "EngineMix") -> List[Finding]:
+    """C002 over the heterogeneous-mix value type (DESIGN.md §13).
+
+    ``EngineMix`` rides inside every contention memo/flight key (the
+    ``pt.mix`` slot C001 traces through the Sweep stores), so it must be
+    a frozen ``eq`` dataclass like ``SweepPoint`` itself — a mutable or
+    identity-compared mix would fork cache entries between the two
+    spellings of one request.
+    """
+    path = _rel(engine_mix_path, repo_root)
+    tree = parse_module(engine_mix_path)
+    return _check_keyed_dataclass(tree, path, mix_class)
+
+
 def check_cache_keys(sweep_path: Path, campaign_path: Path,
-                     timing_path: Path, *,
+                     timing_path: Path,
+                     engine_mix_path: Optional[Path] = None, *,
                      repo_root: Optional[Path] = None) -> List[Finding]:
-    """The whole REPRO-C family over the real tree's three modules."""
+    """The whole REPRO-C family over the real tree's modules."""
     findings = check_sweep_cache_keys(sweep_path, repo_root=repo_root)
     findings += check_timing_signature_coverage(timing_path, sweep_path,
                                                 repo_root=repo_root)
     findings += check_request_dedup(campaign_path, repo_root=repo_root)
+    if engine_mix_path is not None:
+        findings += check_engine_mix_keyed(engine_mix_path,
+                                           repo_root=repo_root)
     return findings

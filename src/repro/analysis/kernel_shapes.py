@@ -54,6 +54,7 @@ AXIS_FLOORS: Dict[str, int] = {
 INT32_MAX = 2 ** 31 - 1
 _MIN_ITEMSIZE = 1          # int8 — smallest dtype a tile can carry
 _SCALAR_OPERAND = "params_ref"
+_TABLE_OPERAND = "table_ref"
 _GUARD_PATTERN = re.compile(r"int32")
 _DOC_SHAPE = re.compile(r"int32\[(\d+)\]")
 
@@ -158,13 +159,65 @@ def _builder_length(fn: ast.FunctionDef,
 def _calls_guard(fn: ast.FunctionDef,
                  fns: Dict[str, ast.FunctionDef],
                  seen: Optional[Set[str]] = None) -> bool:
-    """Direct call in `fn` to a host-side int32-range guard."""
+    """Call in `fn` (or a local helper it calls — the per-entry mix
+    builders guard each table row inside `_mix_block_rows`) to a
+    host-side int32-range guard."""
     seen = seen or set()
+    seen.add(fn.name)
     for node in ast.walk(fn):
-        if isinstance(node, ast.Call) \
-                and _GUARD_PATTERN.search(call_name(node)):
+        if not isinstance(node, ast.Call):
+            continue
+        if _GUARD_PATTERN.search(call_name(node)):
+            return True
+        if isinstance(node.func, ast.Name) and node.func.id in fns \
+                and node.func.id not in seen \
+                and _calls_guard(fns[node.func.id], fns, seen):
             return True
     return False
+
+
+def _table_row_width(fn: ast.FunctionDef,
+                     fns: Dict[str, ast.FunctionDef]) -> Optional[int]:
+    """Statically-evident row width of a *table* operand builder.
+
+    A mix builder packs ``int32[rows, width]`` where the row count is
+    runtime (one row per engine) but every row is a literal list of the
+    same width — the header row plus the per-engine rows appended by its
+    helpers.  Returns that width when every >= 2-element flat list
+    literal in the builder (and the local helpers it calls) agrees on
+    one length, else None (ambiguous — surfaced as K001)."""
+    widths: Set[int] = set()
+    seen = {fn.name}
+    stack = [fn]
+    while stack:
+        cur = stack.pop()
+        for node in ast.walk(cur):
+            if isinstance(node, ast.List) and len(node.elts) >= 2 \
+                    and not any(isinstance(e, (ast.List, ast.Starred))
+                                for e in node.elts):
+                widths.add(len(node.elts))
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in fns and node.func.id not in seen:
+                seen.add(node.func.id)
+                stack.append(fns[node.func.id])
+    return widths.pop() if len(widths) == 1 else None
+
+
+def _max_table_column(tree: ast.Module) -> Tuple[int, int]:
+    """(max constant column subscript on the table operand, its line):
+    ``table_ref[row, col]`` reads with a constant col."""
+    best, line = -1, 1
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == _TABLE_OPERAND \
+                and isinstance(node.slice, ast.Tuple) \
+                and len(node.slice.elts) == 2:
+            idx = int_const(node.slice.elts[1])
+            if idx is not None and idx > best:
+                best, line = idx, node.lineno
+    return best, line
 
 
 def _kernel_feeds(ops_tree: ast.Module,
@@ -277,15 +330,45 @@ def check_kernel_safety(ops_path: Path, *,
 
         lengths = {b: _builder_length(fns[b], fns) for b in builders}
         known = {b: n for b, n in lengths.items() if n is not None}
-        for builder in sorted(builders - set(known)):
-            findings.append(Finding(
-                invariant="REPRO-K001", path=ops_rel,
-                line=fns[builder].lineno,
-                message=(f"operand builder {builder}() packs a shape the "
-                         f"analyzer cannot resolve statically"),
-                hint=("build the operand from literal jnp.array/"
-                      "jnp.concatenate lists so its length is "
-                      "statically evident")))
+        # Builders without a flat static length may pack a per-engine
+        # *table* (int32[rows, width], dynamic row count): K001 for
+        # those checks the kernel's constant column reads against the
+        # statically-evident row width instead.
+        tables = {b: _table_row_width(fns[b], fns)
+                  for b in sorted(builders - set(known))}
+        for builder, width in sorted(tables.items()):
+            if width is None:
+                findings.append(Finding(
+                    invariant="REPRO-K001", path=ops_rel,
+                    line=fns[builder].lineno,
+                    message=(f"operand builder {builder}() packs a shape "
+                             f"the analyzer cannot resolve statically"),
+                    hint=("build the operand from literal jnp.array/"
+                          "jnp.concatenate lists (or same-width literal "
+                          "rows) so its shape is statically evident")))
+                continue
+            max_col, col_line = _max_table_column(kernel_tree)
+            if max_col >= width:
+                findings.append(Finding(
+                    invariant="REPRO-K001", path=kernel_rel, line=col_line,
+                    message=(f"{kernel_name} reads {_TABLE_OPERAND}"
+                             f"[*, {max_col}] but {builder}() packs rows "
+                             f"of width {width}"),
+                    hint=(f"widen the rows {builder}() packs (and the "
+                          f"docstrings) or drop the out-of-range column "
+                          f"read")))
+            if overflow_possible and not _calls_guard(fns[builder], fns):
+                findings.append(Finding(
+                    invariant="REPRO-K002", path=ops_rel,
+                    line=fns[builder].lineno,
+                    message=(f"{builder}() packs table rows whose "
+                             f"index-map products can exceed int32 at "
+                             f"the registry bounds with no host-side "
+                             f"range guard"),
+                    hint=("validate each entry's (n-1)*stride_blocks and "
+                          "base+wset_blocks against 2**31 before packing "
+                          "(call an *int32* guard helper so the analyzer "
+                          "can see it)")))
         if not known:
             continue
         operand_len = min(known.values())

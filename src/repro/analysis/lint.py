@@ -35,6 +35,7 @@ def _run_cache_keys(root: Path) -> List[Finding]:
         root / "src/repro/core/sweep.py",
         root / "src/repro/service/campaign.py",
         root / "src/repro/core/timing_model.py",
+        root / "src/repro/core/engine_mix.py",
         repo_root=root)
 
 
@@ -77,6 +78,7 @@ def run_analysis(root: Path) -> List[Finding]:
     out from under the analyzer's configured paths."""
     required = (
         "src/repro/core/sweep.py",
+        "src/repro/core/engine_mix.py",
         "src/repro/core/timing_model.py",
         "src/repro/core/timing_jax.py",
         "src/repro/core/_timing_reference.py",

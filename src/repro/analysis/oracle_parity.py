@@ -31,6 +31,7 @@ from repro.analysis.findings import Finding
 ORACLE_EQUIVALENTS: Dict[str, Tuple[str, ...]] = {
     "throughput": ("throughput",),
     "contended_throughput": ("contended_throughput",),
+    "contended_throughput_mix": ("contended_throughput_mix",),
     "serial_latencies": ("serial_read_latencies", "serial_write_latencies",
                          "serial_contended_latencies"),
     "serial_read_latencies": ("serial_read_latencies",),
@@ -182,6 +183,7 @@ def check_oracle_parity(timing_path: Path, reference_path: Path,
 JAX_EQUIVALENTS: Dict[str, str] = {
     "throughput": "throughput",
     "contended_throughput": "contended_throughput",
+    "contended_throughput_mix": "contended_throughput_mix",
     "evaluate_points": "contended_throughput",
     "evaluate_grid": "contended_throughput",
 }

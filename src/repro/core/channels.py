@@ -36,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core.hwspec import HBM, MemorySpec
+from repro.core.hwspec import HBM, HBM3, MemorySpec
 
 # U280 constants, kept for readers of the paper (Sec. II) and for the
 # registered U280 instance below.
@@ -46,6 +46,36 @@ PSEUDO_PER_MEM_CHANNEL = 2
 NUM_AXI_CHANNELS = 32
 AXI_PER_MINI_SWITCH = 4
 NUM_MINI_SWITCHES = NUM_AXI_CHANNELS // AXI_PER_MINI_SWITCH  # 8
+
+# ---------------------------------------------------------------------------
+# Published calibration anchors (DESIGN.md §13 calibration table).  The
+# capacity terms registered below are *derived* from these, and
+# tests/core/test_calibration.py pins model outputs against them with
+# explicit tolerances — changing a term means changing its anchor (or its
+# derivation), never a bare magic number.
+# ---------------------------------------------------------------------------
+
+#: U280 pseudo-channel wire rate: 64-bit pseudo channel at 1800 MT/s
+#: (HBM2 @ 900 MHz DDR, paper Sec. II) = 14.4 GB/s.  Matches
+#: ``HBM.peak_channel_gbps`` by construction.
+U280_CHANNEL_WIRE_GBPS = 14.4
+
+#: Shuhai Table V: measured sequential-read throughput of one U280
+#: channel, 13.27 GB/s (92.2% of wire rate).  The timing model's
+#: sequential operating point must land within 1% of this.
+SHUHAI_TABLE5_SEQ_GBPS = 13.27
+
+#: Choi et al. 2020 ("When HLS Meets FPGA HBM"): multi-engine layouts
+#: swing between ~30% (switch-crossing placements serialized on the
+#: lateral bridge) and ~90% (well-placed) of nominal aggregate.
+CHOI_CROSS_SWITCH_FRACTION = 0.30
+CHOI_WELL_PLACED_FRACTION = 0.90
+
+#: HBM3 fabric derivation ratios (modeled, Sec. VII generalization): the
+#: finer 2-channel mini-switch shares one internal datapath at 1.5x the
+#: channel wire rate, and its lateral bridges carry half a channel.
+HBM3_AGG_RATIO = 1.5
+HBM3_LATERAL_RATIO = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,12 +290,13 @@ def topology_for(spec: MemorySpec) -> SwitchTopology:
 
 
 # The U280's measured crossbar (paper Sec. II / Table VI): 2 HBM2 stacks,
-# 8 mini-switches x 4 AXI channels, 8 GB total.  Capacity terms: each
-# mini-switch is a full 4x4 crossbar (4 x 14.4 GB/s wire rate — present
-# but non-binding for any legal traffic, matching Fig. 8's non-blocking
-# datapath), while the lateral bridge to the adjacent mini-switch is one
-# channel-width link (14.4 GB/s) that all cross-switch masters share —
-# the collapse Choi et al. 2020 measure for switch-crossing placements.
+# 8 mini-switches x 4 AXI channels, 8 GB total.  Capacity terms derived
+# from the published wire rate: each mini-switch is a full 4x4 crossbar
+# (4 x 14.4 GB/s — present but non-binding for any legal traffic,
+# matching Fig. 8's non-blocking datapath), while the lateral bridge to
+# the adjacent mini-switch is one channel-width link (14.4 GB/s) that all
+# cross-switch masters share — the collapse Choi et al. 2020 measure for
+# switch-crossing placements.
 U280_CROSSBAR = register_topology("hbm", SwitchTopology(
     name="u280_8x4_crossbar",
     num_stacks=2,
@@ -274,8 +305,10 @@ U280_CROSSBAR = register_topology("hbm", SwitchTopology(
     crossing=CrossingLatencyTable(same_stack=(0, 1, 3, 5),
                                   cross_stack_base=16, cross_stack_step=2),
     capacity_bytes=8 * 1024**3,
-    switch_agg_gbps=57.6,     # 4 AXI x 14.4 GB/s: full crossbar
-    lateral_gbps=14.4,        # one channel-width bridge per neighbour
+    # 4 AXI x wire rate: full crossbar (= 57.6 GB/s)
+    switch_agg_gbps=AXI_PER_MINI_SWITCH * U280_CHANNEL_WIRE_GBPS,
+    # one channel-width bridge per neighbour (= 14.4 GB/s)
+    lateral_gbps=U280_CHANNEL_WIRE_GBPS,
 ))
 
 # Modeled HBM3-class fabric (Sec. VII generalization target): an HBM3 stack
@@ -298,8 +331,11 @@ HBM3_FABRIC = register_topology("hbm3", SwitchTopology(
     crossing=CrossingLatencyTable(same_stack=(0, 1, 2, 3, 4, 5, 6, 7),
                                   cross_stack_base=12, cross_stack_step=1),
     capacity_bytes=32 * 1024**3,
-    switch_agg_gbps=38.4,     # shared internal datapath, 1.5x channel rate
-    lateral_gbps=12.8,        # half-channel bridges between fine switches
+    # shared internal datapath, 1.5x channel rate (= 38.4 GB/s, *below*
+    # the 51.2 GB/s two saturated ports would need -> binding)
+    switch_agg_gbps=HBM3_AGG_RATIO * HBM3.peak_channel_gbps,
+    # half-channel bridges between fine switches (= 12.8 GB/s)
+    lateral_gbps=HBM3_LATERAL_RATIO * HBM3.peak_channel_gbps,
 ))
 
 # Flat DDR-style fabrics: the U280 DDR4 controller and the VCU709-class

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core import timing_model
 from repro.core.address_mapping import AddressMapping, get_mapping
 from repro.core.channels import topology_for
+from repro.core.engine_mix import EngineMix, normalize_mix
 from repro.core.hwspec import HBM, MemorySpec
 from repro.core.latency import (DEFAULT_COUNTER_BITS, DEFAULT_DEPTH,
                                 LatencyModule)
@@ -125,23 +126,34 @@ def classify_backend_error(exc: BaseException) -> type:
 
 
 def _contention_kwargs(num_engines: int, arbitration: str,
-                       burst_beats: int) -> dict:
+                       burst_beats: int,
+                       mix: Optional[EngineMix] = None) -> dict:
     """The arbitration-axis kwargs, only when they deviate from the
     pre-§9 defaults — so backends registered against the older protocol
-    signature keep working until a caller actually engages the axes."""
-    if (num_engines, arbitration, burst_beats) == (1, "round_robin", 1):
-        return {}
-    return {"num_engines": num_engines, "arbitration": arbitration,
-            "burst_beats": burst_beats}
+    signature keep working until a caller actually engages the axes.
+    A (genuinely mixed, already-normalized) `mix` is likewise forwarded
+    only when present, so pre-§13 backends keep serving homogeneous
+    contention unchanged."""
+    kwargs = {}
+    if (num_engines, arbitration, burst_beats) != (1, "round_robin", 1):
+        kwargs = {"num_engines": num_engines, "arbitration": arbitration,
+                  "burst_beats": burst_beats}
+    if mix is not None:
+        kwargs["mix"] = mix
+    return kwargs
 
 
-def _arbitration_kwargs(arbitration: str, burst_beats: int) -> dict:
+def _arbitration_kwargs(arbitration: str, burst_beats: int,
+                        mix: Optional[EngineMix] = None) -> dict:
     """Like `_contention_kwargs` for `Backend.contended_throughput`, whose
-    pre-§9 protocol already took num_engines — only the grant axes are
-    conditionally forwarded."""
-    if (arbitration, burst_beats) == ("round_robin", 1):
-        return {}
-    return {"arbitration": arbitration, "burst_beats": burst_beats}
+    pre-§9 protocol already took num_engines — only the grant axes (and,
+    when present, the heterogeneous mix) are conditionally forwarded."""
+    kwargs = {}
+    if (arbitration, burst_beats) != ("round_robin", 1):
+        kwargs = {"arbitration": arbitration, "burst_beats": burst_beats}
+    if mix is not None:
+        kwargs["mix"] = mix
+    return kwargs
 
 
 # ---------------------------------------------------------------------------
@@ -175,27 +187,50 @@ def placement_port_counts(switch: SwitchModel, placement: str,
     return effective, counts
 
 
-def combine_placement(switch: SwitchModel, placement: str, effective: str,
-                      num_engines: int, counts: List[int],
-                      per_count: Dict[int, "timing_model.ContentionResult"],
-                      *, arbitration: str, burst_beats: int
-                      ) -> "timing_model.ContentionResult":
-    """Fold per-port contention results into one placement result.
+def placement_mix_slices(counts: List[int]) -> List[Tuple[int, int]]:
+    """Contiguous ``(lo, hi)`` entry slices assigning an EngineMix's
+    entries to the per-port engine counts of `placement_port_counts`.
 
-    `per_count` maps each distinct per-port engine count to that port's
-    DRAM-side result (same_channel model).  The summed aggregate is
-    capped by the fabric's capacity terms — the mini-switch aggregate
-    datapath for ``same_switch``, additionally the lateral bridge for
-    ``cross_switch`` — and the queueing delay is the engine-weighted
-    mean of the per-port delays.  Exactly the combine the Engine's
-    placement fan-out performs; extracted so the jaxgrid batch path
-    recombines identically.
+    Entry order is grant order, so the decomposition is *contiguous*:
+    port 0 gets entries ``[0:counts[0])``, port 1 the next ``counts[1]``,
+    and so on — a deterministic placement rule every layer (Engine,
+    jaxgrid batch, kernels) shares, so cache keys built from the sub-mixes
+    agree across paths.
+    """
+    slices = []
+    lo = 0
+    for c in counts:
+        slices.append((lo, lo + c))
+        lo += c
+    return slices
+
+
+def combine_placement_ports(switch: SwitchModel, placement: str,
+                            effective: str, num_engines: int,
+                            ports: List[Tuple[int,
+                                              "timing_model.ContentionResult"]],
+                            *, arbitration: str, burst_beats: int,
+                            mix: Optional[EngineMix] = None
+                            ) -> "timing_model.ContentionResult":
+    """Fold an *ordered* list of per-port ``(count, result)`` pairs into
+    one placement result.
+
+    The general form of :func:`combine_placement`: the count-keyed
+    mapping cannot represent a heterogeneous placement where two ports
+    carry the same engine count but different sub-mixes, so the batch and
+    Engine mix paths hand over the per-port results positionally.  The
+    summed aggregate is capped by the fabric's capacity terms — the
+    mini-switch aggregate datapath for ``same_switch``, additionally the
+    lateral bridge for ``cross_switch`` — and the queueing delay is the
+    engine-weighted mean of the per-port delays.  `mix`, when given, is
+    recorded on the combined result.
     """
     topo = switch.topology
-    raw_aggregate = sum(per_count[c].aggregate_gbps for c in counts)
-    queueing = sum(c * per_count[c].queueing_delay_cycles
-                   for c in counts) / num_engines
-    dominant = per_count[max(counts)]
+    raw_aggregate = sum(res.aggregate_gbps for _, res in ports)
+    queueing = sum(c * res.queueing_delay_cycles
+                   for c, res in ports) / num_engines
+    dominant = max(ports, key=lambda cr: cr[0])[1]
+    max_count = max(c for c, _ in ports)
     aggregate, bound = raw_aggregate, dominant.bound
     cap = switch.capacity_cap_gbps(effective)
     if cap is not None and raw_aggregate > cap:
@@ -205,8 +240,8 @@ def combine_placement(switch: SwitchModel, placement: str, effective: str,
                  if effective == "cross_switch" and lateral is not None
                  and cap == lateral else "switch")
     detail = {**dominant.detail,
-              "ports": float(len(counts)),
-              "engines_per_port_max": float(max(counts)),
+              "ports": float(len(ports)),
+              "engines_per_port_max": float(max_count),
               "uncapped_aggregate_gbps": raw_aggregate,
               "capacity_cap_gbps":
                   cap if cap is not None else float("inf"),
@@ -216,7 +251,27 @@ def combine_placement(switch: SwitchModel, placement: str, effective: str,
         num_engines=num_engines, aggregate_gbps=aggregate, bound=bound,
         queueing_delay_cycles=queueing, detail=detail,
         arbitration=arbitration, burst_beats=burst_beats,
-        placement=placement)
+        placement=placement, mix=mix)
+
+
+def combine_placement(switch: SwitchModel, placement: str, effective: str,
+                      num_engines: int, counts: List[int],
+                      per_count: Dict[int, "timing_model.ContentionResult"],
+                      *, arbitration: str, burst_beats: int
+                      ) -> "timing_model.ContentionResult":
+    """Fold per-port contention results into one placement result.
+
+    `per_count` maps each distinct per-port engine count to that port's
+    DRAM-side result (same_channel model) — sufficient for homogeneous
+    placements, where every port with the same count is interchangeable.
+    Thin wrapper over :func:`combine_placement_ports` (the ordered
+    general form the heterogeneous paths use); extracted so the jaxgrid
+    batch path recombines identically to the Engine's placement fan-out.
+    """
+    return combine_placement_ports(
+        switch, placement, effective, num_engines,
+        [(c, per_count[c]) for c in counts],
+        arbitration=arbitration, burst_beats=burst_beats)
 
 
 # ---------------------------------------------------------------------------
@@ -259,7 +314,9 @@ class Backend:
                 mapping: AddressMapping, *, switch_enabled: bool,
                 switch_extra_cycles: int, op: str = "read",
                 num_engines: int = 1, arbitration: str = "round_robin",
-                burst_beats: int = 1) -> timing_model.LatencyTrace:
+                burst_beats: int = 1,
+                mix: Optional[EngineMix] = None
+                ) -> timing_model.LatencyTrace:
         raise UnsupportedCapability(
             f"backend {self.name!r} has no per-transaction timers "
             f"(supports_latency=False); cannot measure serial {op!r} "
@@ -269,7 +326,8 @@ class Backend:
                              mapping: AddressMapping, *, num_engines: int,
                              op: str = "read",
                              arbitration: str = "round_robin",
-                             burst_beats: int = 1
+                             burst_beats: int = 1,
+                             mix: Optional[EngineMix] = None
                              ) -> timing_model.ContentionResult:
         raise UnsupportedCapability(
             f"backend {self.name!r} has no multi-engine contention path "
@@ -290,16 +348,20 @@ class SimBackend(Backend):
 
     def latency(self, spec, p, mapping, *, switch_enabled,
                 switch_extra_cycles, op="read", num_engines=1,
-                arbitration="round_robin", burst_beats=1):
+                arbitration="round_robin", burst_beats=1, mix=None):
         return timing_model.serial_latencies(
             p, mapping, spec, op=op, switch_enabled=switch_enabled,
             switch_extra_cycles=switch_extra_cycles,
             num_engines=num_engines, arbitration=arbitration,
-            burst_beats=burst_beats)
+            burst_beats=burst_beats, mix=mix)
 
     def contended_throughput(self, spec, p, mapping, *, num_engines,
                              op="read", arbitration="round_robin",
-                             burst_beats=1):
+                             burst_beats=1, mix=None):
+        if mix is not None:
+            return timing_model.contended_throughput_mix(
+                mix, mapping, spec, arbitration=arbitration,
+                burst_beats=burst_beats)
         return timing_model.contended_throughput(
             p, mapping, spec, num_engines=num_engines, op=op,
             arbitration=arbitration, burst_beats=burst_beats)
@@ -349,14 +411,39 @@ class PallasBackend(Backend):
 
     def contended_throughput(self, spec, p, mapping, *, num_engines,
                              op="read", arbitration="round_robin",
-                             burst_beats=1):
+                             burst_beats=1, mix=None):
         del spec, mapping  # the device's controller, not the model's
+        from repro.kernels import ops  # deferred: keeps sim path jax-free
+        if mix is not None:
+            # The concurrent-access kernel gathers per-engine RST tuples
+            # from a scalar-prefetch operand table, but its data path is
+            # read-only: engines that drive writes (write/duplex entries)
+            # must route through the model backends, whose placement paths
+            # cap them against the fabric capacity terms (DESIGN.md §13).
+            if any(op_k != "read" for op_k in mix.ops):
+                raise ValueError(
+                    f"the concurrent-access pallas kernel measures read "
+                    f"traffic only, got mix {mix.describe()!r} with ops "
+                    f"{sorted(set(mix.ops))}; route write/duplex engines "
+                    f"through the sim/jaxgrid placement paths "
+                    f"(DESIGN.md §13)")
+            sample = ops.measure_contended_mix_bandwidth(
+                mix, arbitration=arbitration, burst_beats=burst_beats)
+            return timing_model.ContentionResult(
+                num_engines=len(mix),
+                aggregate_gbps=sample.gbps,
+                bound="measured",
+                queueing_delay_cycles=float("nan"),
+                detail={"seconds": sample.seconds,
+                        "bytes": float(sample.bytes_moved)},
+                arbitration=arbitration,
+                burst_beats=burst_beats,
+                mix=mix)
         if op != "read":
             raise ValueError(
                 f"the concurrent-access pallas kernel measures read "
                 f"traffic only, got op={op!r}; use the sim backend for "
                 f"write/duplex contention (DESIGN.md §8)")
-        from repro.kernels import ops  # deferred: keeps sim path jax-free
         sample = ops.measure_contended_bandwidth(
             p, num_engines=num_engines, arbitration=arbitration,
             burst_beats=burst_beats)
@@ -401,8 +488,12 @@ class JaxGridBackend(Backend):
 
     def contended_throughput(self, spec, p, mapping, *, num_engines,
                              op="read", arbitration="round_robin",
-                             burst_beats=1):
+                             burst_beats=1, mix=None):
         from repro.core import timing_jax  # deferred: keeps sim path lean
+        if mix is not None:
+            return timing_jax.contended_throughput_mix(
+                mix, mapping, spec, arbitration=arbitration,
+                burst_beats=burst_beats)
         return timing_jax.contended_throughput(
             p, mapping, spec, num_engines=num_engines, op=op,
             arbitration=arbitration, burst_beats=burst_beats)
@@ -548,20 +639,32 @@ class Engine:
                          op: str = "read",
                          num_engines: int = 1,
                          arbitration: str = "round_robin",
-                         burst_beats: int = 1) -> timing_model.LatencyTrace:
+                         burst_beats: int = 1,
+                         mix: Optional[EngineMix] = None
+                         ) -> timing_model.LatencyTrace:
         """Evaluate one serial-latency point without the register file.
 
         ``num_engines > 1`` yields a *contended* trace: the shared port's
         queueing delay is fed back into the per-transaction latencies at
-        the requested arbitration granularity (DESIGN.md §9)."""
+        the requested arbitration granularity (DESIGN.md §9).  `mix`
+        names the full heterogeneous engine set sharing the port; the
+        observed engine stays ``(p, op)`` and must be one of the mix
+        entries (DESIGN.md §13).  A uniform mix equal to the observed
+        engine reduces to the homogeneous spelling before the backend is
+        consulted, so legacy backends and memo keys never see it."""
         p = p.validate(self.spec)
+        if mix is not None:
+            if mix.uniform_entry() == (p, op):
+                num_engines, mix = len(mix), None
+            else:
+                num_engines = len(mix)
         enabled, extra = self.latency_config(dst_channel, switch_enabled)
         # Forward the contention axes only when engaged: a third-party
         # backend implementing the pre-§9 protocol signature keeps
         # serving uncontended captures unchanged, and fails with a clear
         # TypeError only when actually asked for the new axes.
         contended_kw = _contention_kwargs(num_engines, arbitration,
-                                          burst_beats)
+                                          burst_beats, mix)
         return self.backend_impl.latency(
             self.spec, p, self._mapping(policy),
             switch_enabled=enabled, switch_extra_cycles=extra, op=op,
@@ -577,18 +680,22 @@ class Engine:
 
     def _port_contended(self, p: RSTParams, *, num_engines: int,
                         policy: Optional[str], op: str, arbitration: str,
-                        burst_beats: int) -> timing_model.ContentionResult:
+                        burst_beats: int,
+                        mix: Optional[EngineMix] = None
+                        ) -> timing_model.ContentionResult:
         """One shared-port DRAM-side contention result, memoized per engine
         on deterministic backends (the placement decomposition re-asks for
         the same (count, grant) evaluation across placements and ladder
-        rungs).  The arbitration axes are forwarded only when engaged —
-        see `_contention_kwargs` / `_arbitration_kwargs`."""
-        kwargs = _arbitration_kwargs(arbitration, burst_beats)
+        rungs).  `mix` is already normalized (None or genuinely mixed) and
+        participates in the memo key.  The arbitration axes are forwarded
+        only when engaged — see `_contention_kwargs` /
+        `_arbitration_kwargs`."""
+        kwargs = _arbitration_kwargs(arbitration, burst_beats, mix)
         if not self.backend_impl.deterministic:
             return self.backend_impl.contended_throughput(
                 self.spec, p, self._mapping(policy),
                 num_engines=num_engines, op=op, **kwargs)
-        key = (p, policy, op, num_engines, arbitration, burst_beats)
+        key = (p, policy, op, num_engines, arbitration, burst_beats, mix)
         res = self._port_cache.get(key)
         if res is None:
             res = self.backend_impl.contended_throughput(
@@ -600,7 +707,8 @@ class Engine:
     def _contention_unscaled(self, p: RSTParams, *, num_engines: int,
                              policy: Optional[str], op: str,
                              arbitration: str, burst_beats: int,
-                             placement: str
+                             placement: str,
+                             mix: Optional[EngineMix] = None
                              ) -> timing_model.ContentionResult:
         """Placement-routed contention result, before the switch scale.
 
@@ -612,7 +720,11 @@ class Engine:
         aggregate datapath for ``same_switch``, additionally the lateral
         bridge for ``cross_switch``.  On a single-switch (flat) fabric
         ``cross_switch`` degrades to ``same_switch`` (there is no switch
-        to cross; ``detail["placement_degraded"]`` records it).
+        to cross; ``detail["placement_degraded"]`` records it).  A
+        heterogeneous `mix` decomposes its entry tuple *contiguously*
+        across the per-port counts (`placement_mix_slices`), each port's
+        sub-mix re-normalized so uniform ports share the homogeneous
+        memo entries, and recombines through `combine_placement_ports`.
         """
         if placement not in PLACEMENTS:
             raise ValueError(
@@ -620,10 +732,22 @@ class Engine:
         if placement == "same_channel":
             return self._port_contended(
                 p, num_engines=num_engines, policy=policy, op=op,
-                arbitration=arbitration, burst_beats=burst_beats)
+                arbitration=arbitration, burst_beats=burst_beats, mix=mix)
         sw = self._switch_model()
         effective, counts = placement_port_counts(sw, placement,
                                                   num_engines)
+        if mix is not None:
+            ports = []
+            for lo, hi in placement_mix_slices(counts):
+                sub = EngineMix.of(mix.entries[lo:hi])
+                sub_mix, sp, sop, sn = normalize_mix(sub, p, op, hi - lo)
+                ports.append((hi - lo, self._port_contended(
+                    sp, num_engines=sn, policy=policy, op=sop,
+                    arbitration=arbitration, burst_beats=burst_beats,
+                    mix=sub_mix)))
+            return combine_placement_ports(
+                sw, placement, effective, num_engines, ports,
+                arbitration=arbitration, burst_beats=burst_beats, mix=mix)
         per_count = {
             c: self._port_contended(
                 p, num_engines=c, policy=policy, op=op,
@@ -641,16 +765,24 @@ class Engine:
                             op: str = "read",
                             arbitration: str = "round_robin",
                             burst_beats: int = 1,
-                            placement: str = "same_channel"
+                            placement: str = "same_channel",
+                            mix: Optional[EngineMix] = None
                             ) -> timing_model.ContentionResult:
         """N engines' streams through the selected arbitration granularity
         and fabric placement (the Choi et al. 2020 multi-PE scenarios;
-        DESIGN.md §8/§9)."""
+        DESIGN.md §8/§9).  `mix` names a heterogeneous per-engine
+        ``(params, op)`` tuple (DESIGN.md §13); when given it supersedes
+        ``p``/``op``/``num_engines``, and a *uniform* mix normalizes back
+        to the homogeneous spelling first, so both spellings hit the same
+        memo entries and return bit-identical results."""
+        mix, p, op, num_engines = normalize_mix(mix, p, op, num_engines)
         p = p.validate(self.spec)
+        if mix is not None:
+            mix.validate(self.spec)
         res = self._contention_unscaled(
             p, num_engines=num_engines, policy=policy, op=op,
             arbitration=arbitration, burst_beats=burst_beats,
-            placement=placement)
+            placement=placement, mix=mix)
         if self.backend_impl.deterministic:
             scale = self.throughput_scale(dst_channel)
             if scale != 1.0:
@@ -715,7 +847,8 @@ class Engine:
                              switch_enabled: Optional[bool] = None,
                              num_engines: int = 1,
                              arbitration: str = "round_robin",
-                             burst_beats: int = 1) -> np.ndarray:
+                             burst_beats: int = 1,
+                             mix: Optional[EngineMix] = None) -> np.ndarray:
         """Capture up to `depth` serial latencies from the selected module.
 
         `op` picks the engine module whose register params drive the run
@@ -754,6 +887,6 @@ class Engine:
                                       switch_enabled=switch_enabled, op=op,
                                       num_engines=num_engines,
                                       arbitration=arbitration,
-                                      burst_beats=burst_beats)
+                                      burst_beats=burst_beats, mix=mix)
         return LatencyModule(depth=depth, counter_bits=counter_bits,
                              op=op).capture(trace)

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.address_mapping import DEFAULT_POLICY, policies_for
 from repro.core.channels import topology_for
+from repro.core.engine_mix import EngineMix
 from repro.core.hwspec import HBM, MemorySpec
 from repro.core.latency import LatencyModule
 from repro.core.params import RSTParams
@@ -252,10 +253,11 @@ def _lat_point(p: RSTParams, channel=0, dst_channel=None,
 
 def _cont_point(p: RSTParams, num_engines, policy=None, channel=0,
                 dst_channel=None, op="read", arbitration="round_robin",
-                burst_beats=1, placement="same_channel") -> SweepPoint:
+                burst_beats=1, placement="same_channel",
+                mix=None) -> SweepPoint:
     return SweepPoint(p, policy, channel, dst_channel, op, KIND_CONTENTION,
                       num_engines=num_engines, arbitration=arbitration,
-                      burst_beats=burst_beats, placement=placement)
+                      burst_beats=burst_beats, placement=placement, mix=mix)
 
 
 def _bursts(spec: MemorySpec, bursts) -> Tuple[int, ...]:
@@ -1071,6 +1073,83 @@ register_experiment(Experiment(
     flatten=lambda spec, r: [
         (f"N{n_eng}_{cls}", str(cnt))
         for n_eng, per in r.items() for cls, cnt in per["counts"].items()],
+))
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous engine-mix family (DESIGN.md §13): named read/write/duplex
+# blends of the Fig. 9 contention ladder — per-engine (params, op) tuples
+# instead of N identical engines.  Runs on every registered memory system
+# and is benchmarked on all four built-ins.
+# ---------------------------------------------------------------------------
+
+_MIX_PRESETS = (("read_heavy", "3r+1w"),
+                ("write_heavy", "1r+3w"),
+                ("balanced", "2r+2w"),
+                ("duplex_spiked", "2r+1w+1d"))
+
+
+def _mix_sweep_plan(spec, o):
+    # Every engine in a named blend shares one RST tuple (sequential
+    # stream, min burst) so the blends differ only in their traffic-
+    # direction composition — the axis this family isolates.  The
+    # arbitration rungs replay the §9 grant ladder under each blend.
+    p = RSTParams(n=o["n"], b=spec.min_burst, s=spec.min_burst, w=o["w"])
+    mixes = list(o["mixes"])
+    if o["custom_mix"]:
+        mixes.append(("custom", o["custom_mix"]))
+    out = []
+    for label, spec_str in mixes:
+        mix = EngineMix.from_spec(spec_str, p)
+        for policy, bb in o["arbitrations"]:
+            out.append(((label, policy, bb),
+                        _cont_point(p, len(mix), arbitration=policy,
+                                    burst_beats=bb, mix=mix)))
+    return out
+
+
+def _mix_sweep_derive(spec, keyed, o):
+    out: Dict[str, Dict] = {}
+    for (label, policy, bb), r in keyed:
+        out.setdefault(label, {})[(policy, bb)] = {
+            "aggregate_gbps": r.aggregate_gbps,
+            "per_engine_gbps": r.per_engine_gbps,
+            "queueing_delay_cycles": r.queueing_delay_cycles,
+            "op_switch_cycles": r.detail.get("op_switch_cycles",
+                                             float("nan")),
+            "bound": r.bound,
+            "mix": r.mix.describe() if r.mix is not None else None,
+        }
+    return out
+
+
+def _mix_sweep_summarize(spec, r):
+    rung = next(iter(next(iter(r.values()))))   # first arbitration rung
+    parts = [f"{label}={per[rung]['aggregate_gbps']:.2f}"
+             for label, per in r.items()]
+    opsw = max(per[rung]["op_switch_cycles"] for per in r.values())
+    parts.append(f"max_opsw={opsw:.0f}cyc")
+    return ";".join(parts)
+
+
+register_experiment(Experiment(
+    name="engine_mix_sweep",
+    artifact="contention (mixes)",
+    title="Heterogeneous engine blends: read/write/duplex mixes x grants",
+    plan=_mix_sweep_plan,
+    derive=_mix_sweep_derive,
+    defaults={"mixes": _MIX_PRESETS, "custom_mix": None,
+              "arbitrations": (("round_robin", 1), ("burst", 8),
+                               ("exclusive", 1)),
+              "n": 4096, "w": 0x1000000},
+    quick={"mixes": _MIX_PRESETS[:2],
+           "arbitrations": (("round_robin", 1),), "n": 1024},
+    bench_specs=_ALL_BUILTIN_SPECS,
+    summarize=_mix_sweep_summarize,
+    flatten=lambda spec, r: [
+        (f"{label}_{policy if policy != 'burst' else f'burst{bb}'}",
+         f"{per[(policy, bb)]['aggregate_gbps']:.2f}")
+        for label, per in r.items() for (policy, bb) in per],
 ))
 
 

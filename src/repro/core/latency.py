@@ -43,10 +43,11 @@ The module is *per-transaction instrumentation*, not a read-only probe:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List, Sequence, Union
 
 import numpy as np
 
+from repro.core.engine_mix import EngineMix
 from repro.core.hwspec import MemorySpec
 from repro.core.timing_model import LatencyTrace
 
@@ -211,6 +212,22 @@ class LatencyModule:
         counts["refresh"] = int(np.count_nonzero(refresh))
         return counts
 
+    @classmethod
+    def for_mix_entry(cls, mix: EngineMix, index: int, *,
+                      depth: int = DEFAULT_DEPTH,
+                      counter_bits: int = DEFAULT_COUNTER_BITS
+                      ) -> "LatencyModule":
+        """A capture module bound to one engine of a heterogeneous mix.
+
+        The module's ``op`` is that entry's *own* traffic direction, so
+        its anchors carry the entry's timing segments (a write entry's
+        miss anchor sits tWR above a read entry's, DESIGN.md §13) —
+        classifying every engine of a mixed capture against one shared
+        op's anchors re-introduces the PR 4 cross-binning bug class.
+        """
+        return cls(depth=depth, counter_bits=counter_bits,
+                   op=mix.entries[index][1])
+
     @staticmethod
     def modal_latency(captured: np.ndarray) -> int:
         """The dominant (modal) latency — the paper's per-category number."""
@@ -228,3 +245,37 @@ class LatencyModule:
             vals = c[~refresh & (nearest == k)]   # refresh samples excluded
             out[name] = int(np.median(vals)) if vals.size else -1
         return out
+
+
+def classify_mix_contended(captures: Sequence[np.ndarray], spec: MemorySpec,
+                           mix: EngineMix,
+                           queueing_cycles: Union[float, Sequence[float]],
+                           extra_cycles: int = 0, *,
+                           depth: int = DEFAULT_DEPTH,
+                           counter_bits: int = DEFAULT_COUNTER_BITS
+                           ) -> List[Dict[str, int]]:
+    """Classify per-engine contended captures of a heterogeneous mix.
+
+    ``captures[k]`` is engine k's capture list, classified against that
+    entry's *own* op anchors (``LatencyModule.for_mix_entry``) — a write
+    entry's miss population binds to the tWR-shifted write-miss anchor
+    while its read neighbours keep the unshifted one, so mixed-direction
+    captures never cross-bin (the PR 4 bug class, DESIGN.md §13).
+    `queueing_cycles` is the grant-head arbitration wait, a scalar shared
+    by every engine or one value per engine (a mixed rotation's waits
+    differ engine to engine).  Returns one contended-count dict per
+    engine, entry order.
+    """
+    if len(captures) != len(mix):
+        raise ValueError(
+            f"got {len(captures)} capture lists for a {len(mix)}-engine "
+            f"mix; one per entry, entry order")
+    qs = np.broadcast_to(
+        np.asarray(queueing_cycles, dtype=np.float64), (len(mix),))
+    out: List[Dict[str, int]] = []
+    for k, cap in enumerate(captures):
+        mod = LatencyModule.for_mix_entry(mix, k, depth=depth,
+                                          counter_bits=counter_bits)
+        out.append(mod.classify_contended(cap, spec, float(qs[k]),
+                                          extra_cycles))
+    return out

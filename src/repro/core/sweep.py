@@ -26,6 +26,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import timing_model
 from repro.core.engine import Engine, get_backend
+from repro.core.engine_mix import EngineMix, normalize_mix
 from repro.core.hwspec import HBM, MemorySpec
 from repro.core.params import RSTParams
 
@@ -36,7 +37,17 @@ KIND_CONTENTION = "contention"
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    """One campaign grid point (an engine configuration plus a trigger)."""
+    """One campaign grid point (an engine configuration plus a trigger).
+
+    The contention fields carry two spellings of the engine set: the
+    homogeneous ``num_engines`` count and the heterogeneous ``mix`` of
+    per-engine ``(params, op)`` entries (DESIGN.md §13).  Construction
+    normalizes them onto one canonical form — a *uniform* mix folds back
+    into ``(params, op, num_engines)`` with ``mix=None``, a genuinely
+    mixed mix pins ``num_engines``/``params``/``op`` to its entry count
+    and entry 0 — so the memo/flight keys built from these fields cannot
+    fork on spelling (REPRO-C001 honesty).
+    """
 
     params: RSTParams
     policy: Optional[str] = None
@@ -49,6 +60,28 @@ class SweepPoint:
     arbitration: str = "round_robin"        # shared-port grant policy (§9)
     burst_beats: int = 1                    # beats per grant ("burst" only)
     placement: str = "same_channel"         # contention runs only
+    mix: Optional[EngineMix] = None         # heterogeneous engine set (§13)
+
+    def __post_init__(self):
+        if self.mix is None:
+            return
+        if self.kind == KIND_LATENCY:
+            # Contended-latency points observe the engine named by
+            # (params, op) — never rewrite it to the mix's entry 0.  Only
+            # a uniform mix equal to the observed engine reduces to the
+            # homogeneous spelling; a mismatched uniform mix is left for
+            # serial_latencies' membership check to reject.
+            n = len(self.mix)
+            if self.mix.uniform_entry() == (self.params, self.op):
+                object.__setattr__(self, "mix", None)
+            object.__setattr__(self, "num_engines", n)
+            return
+        mix, p, op, n = normalize_mix(self.mix, self.params, self.op,
+                                      self.num_engines)
+        object.__setattr__(self, "mix", mix)
+        object.__setattr__(self, "params", p)
+        object.__setattr__(self, "op", op)
+        object.__setattr__(self, "num_engines", n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,8 +116,9 @@ class Sweep:
         self._engines: Dict[int, Engine] = {}
         # Unscaled throughput results keyed by (params, policy, op); latency
         # traces keyed by (params, policy, enabled, extra_cycles, op, N,
-        # arbitration, burst_beats); contention results keyed by (params,
-        # policy, op, N, arbitration, burst_beats, placement).  sim only.
+        # arbitration, burst_beats, mix); contention results keyed by
+        # (params, policy, op, N, arbitration, burst_beats, placement,
+        # mix).  sim only.
         self._tp_cache: Dict[Tuple, timing_model.ThroughputResult] = {}
         self._lat_cache: Dict[Tuple, timing_model.LatencyTrace] = {}
         self._cont_cache: Dict[Tuple, timing_model.ContentionResult] = {}
@@ -119,33 +153,43 @@ class Sweep:
                     switch_enabled: Optional[bool] = None,
                     op: str = "read", num_engines: int = 1,
                     arbitration: str = "round_robin",
-                    burst_beats: int = 1) -> "Sweep":
+                    burst_beats: int = 1,
+                    mix: Optional[EngineMix] = None) -> "Sweep":
         """Queue one serial-latency point (op: "read" or "write").
         ``num_engines > 1`` makes it a *contended* trace at the given
-        arbitration granularity (DESIGN.md §9); returns self for
+        arbitration granularity (DESIGN.md §9); `mix` names the full
+        heterogeneous engine set sharing the port while ``(params, op)``
+        stays the observed engine (DESIGN.md §13).  Returns self for
         chaining."""
         self._points.append(SweepPoint(params, policy, channel, dst_channel,
                                        op, KIND_LATENCY, switch_enabled,
                                        num_engines=num_engines,
                                        arbitration=arbitration,
-                                       burst_beats=burst_beats))
+                                       burst_beats=burst_beats,
+                                       mix=mix))
         return self
 
-    def add_contention(self, params: RSTParams, *, num_engines: int,
+    def add_contention(self, params: RSTParams, *, num_engines: int = 1,
                        policy: Optional[str] = None, channel: int = 0,
                        dst_channel: Optional[int] = None,
                        op: str = "read", arbitration: str = "round_robin",
                        burst_beats: int = 1,
-                       placement: str = "same_channel") -> "Sweep":
+                       placement: str = "same_channel",
+                       mix: Optional[EngineMix] = None) -> "Sweep":
         """Queue one multi-engine contention point (N engines sharing a
         channel port / mini-switch at the given arbitration granularity
-        and placement, DESIGN.md §8/§9); returns self for chaining."""
+        and placement, DESIGN.md §8/§9).  `mix` supersedes
+        ``params``/``op``/``num_engines`` with a heterogeneous per-engine
+        tuple (DESIGN.md §13); the point normalizes on construction, so a
+        uniform mix is indistinguishable from the homogeneous spelling.
+        Returns self for chaining."""
         self._points.append(SweepPoint(params, policy, channel, dst_channel,
                                        op, KIND_CONTENTION,
                                        num_engines=num_engines,
                                        arbitration=arbitration,
                                        burst_beats=burst_beats,
-                                       placement=placement))
+                                       placement=placement,
+                                       mix=mix))
         return self
 
     def add_point(self, pt: SweepPoint) -> "Sweep":
@@ -224,7 +268,7 @@ class Sweep:
         eng = self._engine(pt.channel)
         if not self.backend_impl.deterministic:
             key = ("cont", pt.params, pt.policy, pt.op, pt.num_engines,
-                   pt.arbitration, pt.burst_beats, pt.placement,
+                   pt.arbitration, pt.burst_beats, pt.placement, pt.mix,
                    pt.channel, pt.dst_channel)
             cached, hit = self._flight_lookup(key)
             if hit:
@@ -234,12 +278,12 @@ class Sweep:
                 pt.params, num_engines=pt.num_engines, policy=pt.policy,
                 dst_channel=pt.dst_channel, op=pt.op,
                 arbitration=pt.arbitration, burst_beats=pt.burst_beats,
-                placement=pt.placement)
+                placement=pt.placement, mix=pt.mix)
             if self.coalesce:
                 self._flight[key] = res
             return res, False
         key = (pt.params, pt.policy, pt.op, pt.num_engines,
-               pt.arbitration, pt.burst_beats, pt.placement)
+               pt.arbitration, pt.burst_beats, pt.placement, pt.mix)
         base = self._cont_cache.get(key)
         cached = base is not None and key not in self._fresh
         self._fresh.discard(key)
@@ -248,7 +292,7 @@ class Sweep:
             base = eng._contention_unscaled(
                 p, num_engines=pt.num_engines, policy=pt.policy, op=pt.op,
                 arbitration=pt.arbitration, burst_beats=pt.burst_beats,
-                placement=pt.placement)
+                placement=pt.placement, mix=pt.mix)
             self._cont_cache[key] = base
             self.stats.evaluated += 1
         # Channel broadcast, like throughput: location only enters through
@@ -263,7 +307,7 @@ class Sweep:
         eng = self._engine(pt.channel)
         if not self.backend_impl.deterministic:
             key = ("lat", pt.params, pt.policy, pt.switch_enabled, pt.op,
-                   pt.num_engines, pt.arbitration, pt.burst_beats,
+                   pt.num_engines, pt.arbitration, pt.burst_beats, pt.mix,
                    pt.channel, pt.dst_channel)
             cached, hit = self._flight_lookup(key)
             if hit:
@@ -273,13 +317,13 @@ class Sweep:
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
                 switch_enabled=pt.switch_enabled, op=pt.op,
                 num_engines=pt.num_engines, arbitration=pt.arbitration,
-                burst_beats=pt.burst_beats)
+                burst_beats=pt.burst_beats, mix=pt.mix)
             if self.coalesce:
                 self._flight[key] = res
             return res, False
         enabled, extra = eng.latency_config(pt.dst_channel, pt.switch_enabled)
         key = (pt.params, pt.policy, enabled, extra, pt.op,
-               pt.num_engines, pt.arbitration, pt.burst_beats)
+               pt.num_engines, pt.arbitration, pt.burst_beats, pt.mix)
         trace = self._lat_cache.get(key)
         cached = trace is not None
         if trace is None:
@@ -287,7 +331,7 @@ class Sweep:
                 pt.params, policy=pt.policy, dst_channel=pt.dst_channel,
                 switch_enabled=pt.switch_enabled, op=pt.op,
                 num_engines=pt.num_engines, arbitration=pt.arbitration,
-                burst_beats=pt.burst_beats)
+                burst_beats=pt.burst_beats, mix=pt.mix)
             self._lat_cache[key] = trace
             self.stats.evaluated += 1
         return trace, cached
@@ -315,10 +359,10 @@ class Sweep:
                 kind = "cont"
                 key = (pt.params, pt.policy, pt.op,
                        pt.num_engines, pt.arbitration,
-                       pt.burst_beats, pt.placement)
+                       pt.burst_beats, pt.placement, pt.mix)
                 req = ("cont", pt.params, pt.policy, pt.op,
                        pt.num_engines, pt.arbitration,
-                       pt.burst_beats, pt.placement)
+                       pt.burst_beats, pt.placement, pt.mix)
                 if key in self._cont_cache:
                     continue
             else:

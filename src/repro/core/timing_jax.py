@@ -54,14 +54,18 @@ from jax.experimental import enable_x64
 
 from repro.core.address_mapping import AddressMapping, get_mapping
 from repro.core.engine import (PLACEMENTS, combine_placement,
+                               combine_placement_ports, placement_mix_slices,
                                placement_port_counts)
+from repro.core.engine_mix import EngineMix, normalize_mix
 from repro.core.hwspec import MemorySpec
 from repro.core.params import RSTParams
 from repro.core.switch import SwitchModel
 from repro.core.channels import topology_for
 from repro.core.timing_model import (_MAX_EXPAND, _REORDER_WINDOW,
                                      ContentionResult, ThroughputResult,
-                                     _direction_overheads, _grant_beats)
+                                     _direction_overheads, _grant_beats,
+                                     _mixed_grant_schedule,
+                                     _turnaround_between)
 
 #: Documented NumPy<->JAX agreement bound (relative) for float outputs —
 #: both paths compute the same float64 formulas; only summation order and
@@ -316,6 +320,163 @@ def _grid_kernel(spec: MemorySpec, cap: int, nseg: int,
     return jax.jit(jax.vmap(point))
 
 
+@functools.lru_cache(maxsize=None)
+def _mix_kernel(spec: MemorySpec, cap: int, nseg: int, maxN: int):
+    """Compiled ``vmap`` evaluator for *mixed-engine* lanes on `spec`.
+
+    The heterogeneous sibling of :func:`_grid_kernel`: one lane = one
+    stackable :class:`EngineMix` unit — every engine has the same
+    transaction count and commands-per-transaction (ragged mixes fall
+    back to the NumPy mixed model per lane), but carries its *own* RST
+    tuple and direction overheads in padded per-engine parameter stacks
+    of width `maxN` (pad entries repeat engine 0 and are never gathered:
+    the computed engine index stays below the lane's real engine count).
+    The grant-interleave index math is exactly the homogeneous kernel's;
+    per-engine address terms, per-window *mean* turnaround, the
+    activation weights of the bank bound, and the host-computed
+    grant-boundary bus-reversal cost (``bcost``) generalize the scalar
+    lane fields.  Mixed lanes never take the periodic fast path: engines
+    may disagree on period, which is precisely what routes them here
+    (`_route`).
+    """
+    nw = cap // _WIN
+    nbg = 1 << spec.bankgroup_bits
+    nb = spec.num_banks
+    bus = spec.bus_bytes_per_cycle
+    lsb = spec.addr_lsb
+    ccd_l = spec.ns_to_cycles(spec.t_ccd_l_ns)
+    t_rc = spec.ns_to_cycles(spec.t_rc_ns)
+    faw4 = spec.ns_to_cycles(spec.t_faw_ns) / 4.0
+    cycle_ns = spec.cycle_ns
+    peak = spec.peak_channel_gbps
+
+    def point(d: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        i = jnp.arange(cap, dtype=jnp.int32)
+        txns, eng, cmds, bb = d["txns"], d["eng"], d["cmds"], d["bb"]
+        total_txn = txns * eng
+        total = total_txn * cmds
+        totalf = total.astype(jnp.float64)
+        txnef = total_txn.astype(jnp.float64)
+        valid = i < total
+
+        # Same grant-interleave index math as the homogeneous kernel
+        # (equal counts by stackability), but every per-engine scalar is
+        # a gather from the lane's parameter stacks.
+        q = i // cmds
+        off = ((i % cmds) * bus).astype(jnp.int64)
+        nfull = (txns // bb) * bb
+        split = nfull * eng
+        ebb = eng * bb
+        m_full = q % ebb
+        e_full = m_full // bb
+        t_full = (q // ebb) * bb + m_full % bb
+        q2 = q - split
+        rem = jnp.maximum(txns - nfull, 1)
+        in_full = q < split
+        e = jnp.where(in_full, e_full, q2 // rem)
+        t = jnp.where(in_full, t_full, nfull + q2 % rem)
+        e_c = jnp.clip(e, 0, maxN - 1)
+        a_e = jnp.take(d["stk_a"], e_c)        # absolute base incl. window
+        s_e = jnp.take(d["stk_s"], e_c)
+        wos_e = jnp.take(d["stk_wos"], e_c)
+        addr = a_e + (t % wos_e).astype(jnp.int64) * s_e + off
+
+        m = addr >> lsb
+        row = jnp.zeros(cap, jnp.int32)
+        bg = jnp.zeros(cap, jnp.int32)
+        bank = jnp.zeros(cap, jnp.int32)
+        for k in range(nseg):
+            piece = ((m >> d["seg_pos"][k]) & d["seg_mask"][k])
+            piece = piece.astype(jnp.int32)
+            row = row + piece * d["seg_row"][k]
+            bg = bg + piece * d["seg_bg"][k]
+            bank = bank + piece * d["seg_bank"][k]
+        bg_s = jnp.where(valid, bg, nbg)
+        bank_s = jnp.where(valid, bank, nb)
+
+        # --- command-issue bound (data bus + bank-group tCCD_L) --------
+        diffs = (bg_s[1:] != bg_s[:-1]) & valid[1:]
+        trans = jnp.sum(diffs.astype(jnp.int32)).astype(jnp.float64)
+        run_len = totalf / (trans + 1.0)
+        g_cap = jnp.maximum(1.0, _WIN / (2.0 * run_len))
+        bgw = bg_s.reshape(nw, _WIN)
+        uniq = jnp.sum(jnp.any(
+            bgw[:, :, None] == jnp.arange(nbg, dtype=jnp.int32)[None, None],
+            axis=1).astype(jnp.int32), axis=1)
+        wlen = jnp.clip(total - jnp.arange(nw, dtype=jnp.int32) * _WIN,
+                        0, _WIN)
+        g = jnp.minimum(uniq.astype(jnp.float64), g_cap)
+        denom = jnp.minimum(1.0, g / ccd_l)
+        per = jnp.where(wlen > 0,
+                        wlen.astype(jnp.float64)
+                        / jnp.maximum(denom, 1e-300), 0.0)
+        # Per-window *mean* of the per-command turnaround (each command
+        # contributes its issuing engine's duplex share), plus the
+        # host-computed grant-boundary bus-reversal segments.
+        turn_i = jnp.where(valid, jnp.take(d["stk_turn"], e_c), 0.0)
+        tw = jnp.sum(turn_i.reshape(nw, _WIN), axis=1)
+        per_turn = jnp.where(wlen > 0,
+                             tw / jnp.maximum(wlen.astype(jnp.float64), 1.0),
+                             0.0)
+        issue = jnp.sum(per) + jnp.sum(per_turn) + d["bcost"]
+
+        # --- bank bound (activations serialize at tRC per bank) -------
+        prev = jnp.full(cap, -1, jnp.int32)
+        for b in range(nb):
+            is_b = bank_s == b
+            cand = jnp.where(is_b, i, -1)
+            run = lax.cummax(cand, axis=0)
+            run_excl = jnp.concatenate(
+                [jnp.full((1,), -1, jnp.int32), run[:-1]])
+            prev = jnp.where(is_b, run_excl, prev)
+        row_prev = jnp.take(row, jnp.clip(prev, 0, cap - 1))
+        act = valid & ((prev < 0) | (row_prev != row))
+        # Each activation extends tRC by its own engine's write-recovery
+        # term: weighted per-(window, bank) sums instead of counts.
+        w_i = jnp.where(act, t_rc + jnp.take(d["stk_extra"], e_c), 0.0)
+        sums = jnp.sum(
+            (w_i.reshape(nw, _WIN)[:, :, None]
+             * (bank_s.reshape(nw, _WIN)[:, :, None]
+                == jnp.arange(nb, dtype=jnp.int32)[None, None])
+             .astype(jnp.float64)), axis=1)
+        pwmax = jnp.max(sums, axis=1)
+        acts_f = jnp.sum(act.astype(jnp.int32)).astype(jnp.float64)
+        bank_cycles = jnp.sum(pwmax)
+
+        # --- four-activate-window bound --------------------------------
+        faw = acts_f * faw4
+
+        bounds = jnp.stack([issue, bank_cycles, faw])
+        steady = jnp.max(bounds)
+        eff = d["eff"]
+        seconds = steady * cycle_ns * 1e-9
+        gbps = jnp.where(seconds > 0.0,
+                         d["bytesf"] / jnp.maximum(seconds, 1e-300)
+                         / 1e9 * eff, 0.0)
+        gbps = jnp.minimum(gbps, peak)
+
+        # Equal counts and commands-per-txn make every engine's service
+        # share identical, so the homogeneous queueing forms apply.
+        mean_service = jnp.where(
+            txnef > 0.0, steady / jnp.maximum(txnef, 1.0), 0.0)
+        engf = eng.astype(jnp.float64)
+        bbf = bb.astype(jnp.float64)
+        stream = txns.astype(jnp.float64) * mean_service
+        is_excl = d["excl"] > 0
+        queueing = jnp.where(is_excl, 0.5 * (engf - 1.0) * stream,
+                             (engf - 1.0) * mean_service)
+        head = jnp.where(is_excl, (engf - 1.0) * stream,
+                         (engf - 1.0) * bbf * mean_service)
+
+        return {"gbps": gbps, "bidx": jnp.argmax(bounds),
+                "issue": issue, "bank": bank_cycles, "faw": faw,
+                "acts": acts_f, "cmds_total": totalf,
+                "mean_service": mean_service, "queueing": queueing,
+                "head": head, "opsw": d["bcost"]}
+
+    return jax.jit(jax.vmap(point))
+
+
 # ------------------------------------------------- unit batching + results
 # A "unit" is one same-channel kernel lane: (params, mapping, op,
 # engine_count, arbitration, requested_burst_beats).  Placement points
@@ -323,6 +484,12 @@ def _grid_kernel(spec: MemorySpec, cap: int, nseg: int,
 # recombined host-side (engine.combine_placement), exactly like
 # Engine._contention_unscaled.
 _Unit = Tuple[RSTParams, AddressMapping, str, int, str, int]
+
+# A mixed-engine kernel lane: (mix, mapping, arbitration,
+# requested_burst_beats).  Only genuinely mixed EngineMix values appear
+# here — uniform mixes normalize to a homogeneous _Unit before the units
+# dict is built, so the two spellings share lanes (and memo keys).
+_MixUnit = Tuple[EngineMix, AddressMapping, str, int]
 
 
 def _efficiency(spec: MemorySpec) -> float:
@@ -366,6 +533,61 @@ def _unit_row(spec: MemorySpec, unit: _Unit) -> Dict[str, object]:
             "periodic": periodic, "totalf": float(total),
             "txnef": float(txns * count), "nwinf": float(total // _WIN),
             "unit": unit}
+
+
+def _mix_row(spec: MemorySpec, unit: _MixUnit) -> Dict[str, object]:
+    """Host-side row for one *mixed* kernel lane.
+
+    Mirrors `_contended_throughput_mixed`'s caps exactly: the shared
+    command budget splits `_MAX_EXPAND` across engines at the widest
+    per-transaction command count, per-engine streams truncate to it,
+    and grant beats clamp against the longest stream.  The grant-boundary
+    bus-reversal cost (`bcost`) is data-independent of the addresses, so
+    it is summed host-side along the real `_mixed_grant_schedule` grant
+    sequence and added to the kernel's issue bound as a scalar.  A lane
+    is *stackable* (eligible for `_mix_kernel`) when every engine has the
+    same transaction count and commands-per-transaction — the padded
+    parameter stacks then share the homogeneous interleave index math;
+    ragged mixes fall back to the NumPy mixed model per lane.  Mixed
+    lanes are never periodic: engines may disagree on period, which is
+    what routes them off the homogeneous fast path in the first place.
+    """
+    mix, mapping, arbitration, burst_beats = unit
+    mix.validate(spec)
+    n_eng = len(mix)
+    bus = spec.bus_bytes_per_cycle
+    over = [_direction_overheads(spec, op_k) for op_k in mix.ops]
+    cmds_e = [max(1, p_k.b // bus) for p_k in mix.params]
+    max_txns = max(16, (_MAX_EXPAND // max(cmds_e)) // n_eng)
+    counts = [min(p_k.n, _MAX_EXPAND, max_txns) for p_k in mix.params]
+    bb = _grant_beats(arbitration, burst_beats, max(counts))
+    _, _, grants = _mixed_grant_schedule(counts, bb, arbitration)
+    pair_cost = np.array(
+        [[_turnaround_between(spec, oi, oj) for oj in mix.ops]
+         for oi in mix.ops], dtype=np.float64)
+    bcost = (float(pair_cost[grants[:-1], grants[1:]].sum())
+             if len(grants) > 1 else 0.0)
+    w_offs = np.concatenate(([0], np.cumsum(
+        np.array([p_k.w for p_k in mix.params], dtype=np.int64))))[:-1]
+    stackable = len(set(counts)) == 1 and len(set(cmds_e)) == 1
+    total = int(sum(c * cm for c, cm in zip(counts, cmds_e)))
+    total_txns = int(sum(counts))
+    bytesf = float(sum(c * p_k.b for c, p_k in zip(counts, mix.params)))
+    return {"txns": counts[0], "eng": n_eng, "cmds": cmds_e[0], "bb": bb,
+            "excl": int(arbitration == "exclusive"),
+            "stk_a": np.array(
+                [p_k.a + int(w_offs[k])
+                 for k, p_k in enumerate(mix.params)], dtype=np.int64),
+            "stk_s": np.array([p_k.s for p_k in mix.params],
+                              dtype=np.int64),
+            "stk_wos": np.array([p_k.w // p_k.s for p_k in mix.params],
+                                dtype=np.int32),
+            "stk_turn": np.array([t for t, _ in over], dtype=np.float64),
+            "stk_extra": np.array([x for _, x in over], dtype=np.float64),
+            "bcost": bcost, "bytesf": bytesf,
+            "seg": _segment_table(mapping), "periodic": False,
+            "stackable": stackable, "totalf": float(total),
+            "txnef": float(total_txns), "mix": mix, "mix_unit": unit}
 
 
 _I32 = ("txns", "eng", "cmds", "bb", "excl", "wos")
@@ -443,6 +665,73 @@ def _run_batch(spec: MemorySpec, rows: Sequence[Dict[str, object]],
     return out
 
 
+_MIX_I32 = ("txns", "eng", "cmds", "bb", "excl")
+_MIX_F64 = ("bcost", "bytesf", "totalf", "txnef")
+_MIX_STACKS = (("stk_a", np.int64), ("stk_s", np.int64),
+               ("stk_wos", np.int32), ("stk_turn", np.float64),
+               ("stk_extra", np.float64))
+
+
+def _run_mix_batch(spec: MemorySpec, rows: Sequence[Dict[str, object]],
+                   mesh=None) -> Dict[str, np.ndarray]:
+    """One batched `_mix_kernel` call over stackable mixed rows.
+
+    Same lane bucketing/chunking/mesh-padding discipline as `_run_batch`;
+    additionally pads the engine axis to a shared pow2 width, repeating
+    each lane's engine-0 stack entry (pad entries are never gathered —
+    the kernel's engine index stays below the lane's real engine count).
+    """
+    n = len(rows)
+    cap = _bucket(max(int(r["totalf"]) for r in rows), _WIN)
+    maxN = _bucket(max(int(r["eng"]) for r in rows), 1)
+    if mesh is None:
+        chunk = _bucket(max(1, _LANE_SLOT_BUDGET // cap), 1)
+        if n > chunk:
+            parts = [_run_mix_batch(spec, rows[lo:lo + chunk])
+                     for lo in range(0, n, chunk)]
+            return {k: np.concatenate([p[k] for p in parts])
+                    for k in parts[0]}
+    nseg = max(len(r["seg"]) for r in rows)
+    lanes = _bucket(n, 1)
+    if mesh is not None:
+        ndev = int(np.prod(mesh.devices.shape))
+        lanes += (-lanes) % ndev
+
+    cols: Dict[str, np.ndarray] = {}
+    padded = list(rows) + [rows[0]] * (lanes - n)
+    for k in _MIX_I32:
+        cols[k] = np.array([r[k] for r in padded], dtype=np.int32)
+    for k in _MIX_F64:
+        cols[k] = np.array([r[k] for r in padded], dtype=np.float64)
+    for k, dt in _MIX_STACKS:
+        arr = np.empty((lanes, maxN), dtype=dt)
+        for j, r in enumerate(padded):
+            v = r[k]
+            arr[j, :len(v)] = v
+            arr[j, len(v):] = v[0]
+        cols[k] = arr
+    cols["eff"] = np.full(lanes, _efficiency(spec), dtype=np.float64)
+    seg = np.zeros((lanes, nseg, 5), dtype=np.int64)
+    for j, r in enumerate(padded):
+        for k, ent in enumerate(r["seg"]):
+            seg[j, k] = ent
+    cols["seg_pos"] = seg[:, :, 0]
+    cols["seg_mask"] = seg[:, :, 1]
+    cols["seg_row"] = seg[:, :, 2].astype(np.int32)
+    cols["seg_bg"] = seg[:, :, 3].astype(np.int32)
+    cols["seg_bank"] = seg[:, :, 4].astype(np.int32)
+
+    kernel = _mix_kernel(spec, cap, nseg, maxN)
+    with enable_x64():
+        if mesh is not None:
+            from repro.launch.mesh import shard_grid
+            cols = {k: shard_grid(v, mesh, pad=False)[0]
+                    for k, v in cols.items()}
+        out = kernel(cols)
+        out = {k: np.asarray(v)[:n] for k, v in out.items()}
+    return out
+
+
 def _numpy_rows(spec: MemorySpec, rows: Sequence[Dict[str, object]]
                 ) -> Dict[str, np.ndarray]:
     """NumPy-oracle fallback for lanes the kernels decline (non-periodic
@@ -471,7 +760,40 @@ def _numpy_rows(spec: MemorySpec, rows: Sequence[Dict[str, object]]
     return out
 
 
+def _numpy_mix_rows(spec: MemorySpec, rows: Sequence[Dict[str, object]]
+                    ) -> Dict[str, np.ndarray]:
+    """NumPy-oracle fallback for mixed lanes `_mix_kernel` declines
+    (ragged counts/commands, or streams past `_FULL_KERNEL_MAX_CMDS`):
+    same output schema, computed by `timing_model.contended_throughput_mix`
+    per lane."""
+    from repro.core import timing_model
+    keys = ("gbps", "bidx", "issue", "bank", "faw", "acts", "cmds_total",
+            "mean_service", "queueing", "head", "opsw")
+    out = {k: np.empty(len(rows), dtype=np.float64) for k in keys}
+    for j, r in enumerate(rows):
+        mix, mapping, arb, bb_req = r["mix_unit"]
+        res = timing_model.contended_throughput_mix(
+            mix, mapping, spec, arbitration=arb, burst_beats=bb_req)
+        out["gbps"][j] = res.aggregate_gbps
+        out["bidx"][j] = _BOUND_NAMES.index(res.bound)
+        out["issue"][j] = res.detail["bus/ccd"]
+        out["bank"][j] = res.detail["bank"]
+        out["faw"][j] = res.detail["faw"]
+        out["acts"][j] = res.detail["total_acts"]
+        out["cmds_total"][j] = res.detail["txns"]
+        out["mean_service"][j] = res.detail["mean_service_cycles"]
+        out["queueing"][j] = res.queueing_delay_cycles
+        out["head"][j] = res.detail["grant_head_wait_cycles"]
+        out["opsw"][j] = res.detail.get("op_switch_cycles", 0.0)
+    out["bidx"] = out["bidx"].astype(np.int64)
+    return out
+
+
 def _route(row: Dict[str, object]) -> str:
+    if "mix_unit" in row:
+        if row["stackable"] and row["totalf"] <= _FULL_KERNEL_MAX_CMDS:
+            return "mixfull"
+        return "mixnumpy"
     if row["periodic"]:
         return "periodic"
     if row["txns"] * row["eng"] * row["cmds"] > _FULL_KERNEL_MAX_CMDS:
@@ -487,13 +809,17 @@ def _run_rows(spec: MemorySpec, rows: Sequence[Dict[str, object]],
     arrays."""
     n = len(rows)
     merged: Dict[str, np.ndarray] = {}
-    for route in ("full", "periodic", "numpy"):
+    for route in ("full", "periodic", "numpy", "mixfull", "mixnumpy"):
         idxs = [j for j in range(n) if _route(rows[j]) == route]
         if not idxs:
             continue
         sub = [rows[j] for j in idxs]
         if route == "numpy":
             out = _numpy_rows(spec, sub)
+        elif route == "mixnumpy":
+            out = _numpy_mix_rows(spec, sub)
+        elif route == "mixfull":
+            out = _run_mix_batch(spec, sub, mesh)
         else:
             out = _run_batch(spec, sub, route == "periodic", mesh)
         for k, v in out.items():
@@ -540,6 +866,34 @@ def _cont_result(spec: MemorySpec, rows, out, j: int, arbitration: str,
         burst_beats=burst_beats)
 
 
+def _cont_result_mix(spec: MemorySpec, rows, out, j: int,
+                     arbitration: str, burst_beats: int) -> ContentionResult:
+    r = rows[j]
+    mix: EngineMix = r["mix"]
+    txnef = float(r["txnef"])
+    return ContentionResult(
+        num_engines=len(mix),
+        aggregate_gbps=float(out["gbps"][j]),
+        bound=_BOUND_NAMES[int(out["bidx"][j])],
+        queueing_delay_cycles=float(out["queueing"][j]),
+        detail={"bus/ccd": float(out["issue"][j]),
+                "bank": float(out["bank"][j]),
+                "faw": float(out["faw"][j]),
+                "txns": float(out["cmds_total"][j]),
+                "cmds_per_txn": float(r["totalf"]) / txnef if txnef else 0.0,
+                "txns_per_engine": txnef / len(mix),
+                "total_acts": float(out["acts"][j]),
+                "mean_service_cycles": float(out["mean_service"][j]),
+                "grant_head_wait_cycles": float(out["head"][j]),
+                "grant_beats": float(r["bb"]),
+                "op_switch_cycles": float(out["opsw"][j]),
+                "mix_size": float(len(mix)),
+                "efficiency": _efficiency(spec)},
+        arbitration=arbitration,
+        burst_beats=burst_beats,
+        mix=mix)
+
+
 def _switch_for(spec: MemorySpec) -> SwitchModel:
     # Matches Engine._switch_model for an engine built without an explicit
     # switch: the placement combine sees identical capacity terms.
@@ -577,17 +931,49 @@ def contended_throughput(p: RSTParams, mapping: AddressMapping,
     return _cont_result(spec, rows, out, 0, arbitration, burst_beats)
 
 
+def contended_throughput_mix(mix: EngineMix, mapping: AddressMapping,
+                             spec: MemorySpec, *,
+                             arbitration: str = "round_robin",
+                             burst_beats: int = 1) -> ContentionResult:
+    """JAX mirror of :func:`repro.core.timing_model.contended_throughput_mix`.
+
+    A uniform mix delegates to the homogeneous :func:`contended_throughput`
+    (keeping its periodic fast path and bit-for-bit agreement with the
+    homogeneous NumPy model); a genuinely mixed mix runs the stacked
+    `_mix_kernel` lane (or the NumPy mixed model for ragged/oversized
+    lanes) and agrees with `timing_model.contended_throughput_mix` within
+    :data:`REL_TOLERANCE`.
+    """
+    uni = mix.uniform_entry()
+    if uni is not None:
+        return contended_throughput(
+            uni[0], mapping, spec, num_engines=len(mix), op=uni[1],
+            arbitration=arbitration, burst_beats=burst_beats)
+    unit: _MixUnit = (mix.validate(spec), mapping, arbitration, burst_beats)
+    rows = [_mix_row(spec, unit)]
+    out = _run_rows(spec, rows)
+    return _cont_result_mix(spec, rows, out, 0, arbitration, burst_beats)
+
+
 def evaluate_points(spec: MemorySpec, reqs: Sequence[Tuple], *,
                     mesh=None) -> List[object]:
     """Evaluate a flat batch of sweep-style requests in one compiled call.
 
     Each request is ``("tp", params, policy, op)`` or ``("cont", params,
-    policy, op, num_engines, arbitration, burst_beats, placement)`` —
-    exactly the memo-key fields of ``Sweep``'s deterministic caches.
-    Placement requests decompose into per-port units and recombine
-    through the same switch-capacity model as
-    ``Engine._contention_unscaled``; duplicate units across the batch
-    evaluate once.  Returns result objects aligned with `reqs`.
+    policy, op, num_engines, arbitration, burst_beats, placement)``,
+    optionally extended with a ninth ``mix`` element (an
+    :class:`EngineMix` or None) — exactly the memo-key fields of
+    ``Sweep``'s deterministic caches.  Mix requests normalize first
+    (uniform mix -> the homogeneous spelling, sharing its lanes and memo
+    keys); genuinely mixed placements decompose the entry tuple
+    *contiguously* across the per-port engine counts, re-normalizing each
+    port's sub-mix, and recombine through
+    ``engine.combine_placement_ports`` (ordered per-port results — two
+    same-count ports may carry different sub-mixes, which the count-keyed
+    homogeneous combine cannot represent).  Placement requests decompose
+    into per-port units and recombine through the same switch-capacity
+    model as ``Engine._contention_unscaled``; duplicate units across the
+    batch evaluate once.  Returns result objects aligned with `reqs`.
     """
     units: Dict[_Unit, int] = {}
     plans: List[Tuple] = []
@@ -600,15 +986,43 @@ def evaluate_points(spec: MemorySpec, reqs: Sequence[Tuple], *,
             units.setdefault(unit, len(units))
             plans.append(("tp", unit, None))
         elif req[0] == "cont":
-            _, p, policy, op, n_eng, arb, bb, placement = req
+            if len(req) == 9:
+                _, p, policy, op, n_eng, arb, bb, placement, mix = req
+            else:
+                _, p, policy, op, n_eng, arb, bb, placement = req
+                mix = None
             if n_eng < 1:
                 raise ValueError(
                     f"num_engines must be >= 1, got {n_eng}")
+            mix, p, op, n_eng = normalize_mix(mix, p, op, n_eng)
             p = p.validate(spec)
             mapping = get_mapping(spec, policy)
             if placement not in PLACEMENTS:
                 raise ValueError(f"unknown placement {placement!r}; "
                                  f"valid: {PLACEMENTS}")
+            if mix is not None:
+                mix.validate(spec)
+                if placement == "same_channel":
+                    munit: _MixUnit = (mix, mapping, arb, bb)
+                    units.setdefault(munit, len(units))
+                    plans.append(("mix", munit, (arb, bb)))
+                    continue
+                sw = sw or _switch_for(spec)
+                effective, counts = placement_port_counts(
+                    sw, placement, n_eng)
+                ports = []
+                for lo, hi in placement_mix_slices(counts):
+                    sub = EngineMix.of(mix.entries[lo:hi])
+                    uni = sub.uniform_entry()
+                    if uni is not None:
+                        u = (uni[0], mapping, uni[1], len(sub), arb, bb)
+                    else:
+                        u = (sub, mapping, arb, bb)
+                    units.setdefault(u, len(units))
+                    ports.append((hi - lo, u))
+                plans.append(("mixpl", ports, (n_eng, arb, bb, placement,
+                                               effective, mix)))
+                continue
             if placement == "same_channel":
                 effective, counts = placement, [n_eng]
             else:
@@ -626,13 +1040,38 @@ def evaluate_points(spec: MemorySpec, reqs: Sequence[Tuple], *,
     if not plans:
         return []
     ordered = sorted(units, key=units.get)
-    rows = [_unit_row(spec, u) for u in ordered]
+    rows = [_mix_row(spec, u) if isinstance(u[0], EngineMix)
+            else _unit_row(spec, u) for u in ordered]
     out = _run_rows(spec, rows, mesh)
 
     results: List[object] = []
     for plan in plans:
         if plan[0] == "tp":
             results.append(_tp_result(spec, rows, out, units[plan[1]]))
+            continue
+        if plan[0] == "mix":
+            munit, (arb, bb) = plan[1], plan[2]
+            results.append(_cont_result_mix(
+                spec, rows, out, units[munit], arb, bb))
+            continue
+        if plan[0] == "mixpl":
+            ports, (n_eng, arb, bb, placement, effective, mix) = \
+                plan[1], plan[2]
+            port_results = []
+            for count, u in ports:
+                jdx = units[u]
+                if isinstance(u[0], EngineMix):
+                    port_results.append(
+                        (count, _cont_result_mix(spec, rows, out, jdx,
+                                                 arb, bb)))
+                else:
+                    port_results.append(
+                        (count, _cont_result(spec, rows, out, jdx,
+                                             arb, bb)))
+            assert sw is not None
+            results.append(combine_placement_ports(
+                sw, placement, effective, n_eng, port_results,
+                arbitration=arb, burst_beats=bb, mix=mix))
             continue
         _, cunits, (n_eng, arb, bb, placement, effective, counts) = plan
         per_count = {c: _cont_result(spec, rows, out, units[u], arb, bb)

@@ -95,11 +95,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.address_mapping import AddressMapping
+from repro.core.engine_mix import EngineMix
 from repro.core.hwspec import MemorySpec
 from repro.core.params import RSTParams
 
@@ -177,6 +178,29 @@ def _direction_overheads(spec: MemorySpec, op: str) -> Tuple[float, float]:
         return 0.0, wr_cyc
     turnaround = spec.ns_to_cycles(spec.t_rtw_ns + spec.t_wtr_ns)
     return turnaround, 0.5 * wr_cyc
+
+
+def _turnaround_between(spec: MemorySpec, prev_op: str, next_op: str) -> float:
+    """Bus-turnaround cycles between two consecutive arbitration grants.
+
+    A grant boundary between engines of the *same* direction costs nothing
+    extra (the homogeneous model already prices intra-stream effects).  A
+    boundary where the bus direction reverses pays the DRAM turnaround
+    segments: tRTW when the earlier grant could end on a read and the
+    later one starts with a write, tWTR for the write->read reversal.
+    Duplex grants drive both directions, so they pay the reversal on both
+    edges against a pure-read or pure-write neighbor and nothing against
+    another duplex grant (the per-window duplex turnaround of
+    `_direction_overheads` already covers intra-grant reversals).
+    """
+    if prev_op == next_op:
+        return 0.0
+    cost = 0.0
+    if prev_op in ("read", "duplex") and next_op in ("write", "duplex"):
+        cost += spec.ns_to_cycles(spec.t_rtw_ns)
+    if prev_op in ("write", "duplex") and next_op in ("read", "duplex"):
+        cost += spec.ns_to_cycles(spec.t_wtr_ns)
+    return cost
 
 
 @dataclasses.dataclass
@@ -269,6 +293,55 @@ def _contended_latency_delay(base_cycles: np.ndarray, num_engines: int,
     return delay
 
 
+def _contended_latency_delay_mix(base_cycles: np.ndarray, mix: EngineMix,
+                                 observed: Tuple[RSTParams, str],
+                                 mapping: AddressMapping, spec: MemorySpec, *,
+                                 switch_enabled: bool,
+                                 switch_extra_cycles: int,
+                                 arbitration: str, burst_beats: int
+                                 ) -> np.ndarray:
+    """Per-transaction queueing-delay addition for a *mixed* serial trace.
+
+    The observed engine is the mix entry equal to ``observed`` (its first
+    occurrence fixes the grant position).  Under round-robin/burst grants
+    each grant-head transaction waits out one grant from every *other*
+    engine — ``bb`` times the sum of their own mean service times, each
+    taken from that engine's own uncontended serial trace (per-engine
+    service times, not N-1 copies of one shared mean).  Under exclusive
+    grants the whole capture rides one grant: the first transaction waits
+    out the complete streams of the engines granted *before* it in entry
+    order — the mix names the position, so no homogeneous engine-mean
+    averaging applies.
+    """
+    n = len(base_cycles)
+    bb = _grant_beats(arbitration, burst_beats, n)
+    delay = np.zeros(n, dtype=np.float64)
+    if len(mix) <= 1 or n == 0:
+        return delay
+    k0 = mix.entries.index(observed)
+    if arbitration == "exclusive":
+        total = 0.0
+        for j, (p_j, op_j) in enumerate(mix.entries):
+            if j >= k0:
+                break
+            t = serial_latencies(p_j, mapping, spec, op=op_j,
+                                 switch_enabled=switch_enabled,
+                                 switch_extra_cycles=switch_extra_cycles)
+            total += float(np.sum(t.cycles))
+        delay[0] = total
+    else:
+        total = 0.0
+        for j, (p_j, op_j) in enumerate(mix.entries):
+            if j == k0:
+                continue
+            t = serial_latencies(p_j, mapping, spec, op=op_j,
+                                 switch_enabled=switch_enabled,
+                                 switch_extra_cycles=switch_extra_cycles)
+            total += float(np.mean(t.cycles))
+        delay[::bb] = bb * total
+    return delay
+
+
 def serial_latencies(
     p: RSTParams,
     mapping: AddressMapping,
@@ -280,6 +353,7 @@ def serial_latencies(
     num_engines: int = 1,
     arbitration: str = "round_robin",
     burst_beats: int = 1,
+    mix: Optional[EngineMix] = None,
 ) -> LatencyTrace:
     """Simulate N serial transactions and return per-transaction latencies.
 
@@ -305,6 +379,15 @@ def serial_latencies(
     ``num_engines=1`` is bit-identical to the uncontended trace under
     every policy.
 
+    `mix` names a heterogeneous set of co-resident engines
+    (DESIGN.md §13): ``(p, op)`` selects the *observed* engine and must
+    be one of the mix entries; the queueing delay fed back into the
+    trace sums the *other* entries' own per-engine service times
+    (`_contended_latency_delay_mix`) instead of N-1 copies of one shared
+    mean.  Every mix op must be serial-capable (read/write — duplex has
+    no serial meaning), and a uniform mix normalizes to the homogeneous
+    ``num_engines=len(mix)`` path bit-identically.
+
     Vectorized over refresh epochs: between two refreshes no bank is ever
     closed by the controller, so the page state of every transaction in the
     epoch is a pure function of its previous same-bank access — closed if
@@ -316,6 +399,20 @@ def serial_latencies(
         raise ValueError(
             f"serial latency measures one outstanding transaction; op must "
             f"be one of {SERIAL_OPS}, got {op!r}")
+    if mix is not None:
+        for _, op_k in mix.entries:
+            if op_k not in SERIAL_OPS:
+                raise ValueError(
+                    f"serial latency measures one outstanding transaction; "
+                    f"every mix op must be one of {SERIAL_OPS}, got {op_k!r}")
+        if (p, op) not in mix.entries:
+            raise ValueError(
+                "serial_latencies(mix=...) observes the engine named by "
+                "(p, op); that (params, op) pair must be one of the mix "
+                "entries")
+        num_engines = len(mix)
+        if mix.uniform_entry() is not None:
+            mix = None          # a uniform mix IS the homogeneous request
     if num_engines < 1:
         raise ValueError(f"num_engines must be >= 1, got {num_engines}")
     _grant_beats(arbitration, burst_beats, 1)   # validate the pair eagerly
@@ -389,7 +486,13 @@ def serial_latencies(
             now_ns = float(starts[k])   # txn pos+k re-enters the refresh check
         pos += k
 
-    if num_engines > 1:
+    if mix is not None:
+        lat = lat + _contended_latency_delay_mix(
+            lat, mix, (p, op), mapping, spec,
+            switch_enabled=switch_enabled,
+            switch_extra_cycles=switch_extra_cycles,
+            arbitration=arbitration, burst_beats=burst_beats)
+    elif num_engines > 1:
         lat = lat + _contended_latency_delay(lat, num_engines, arbitration,
                                              burst_beats)
     return LatencyTrace(cycles=lat, states=_STATE_NAMES[codes].tolist(),
@@ -571,6 +674,11 @@ class ContentionResult:
     granularity the result was computed under; `placement` records which
     fabric path the engines shared (``same_channel`` here — the
     cross-channel placements are built by `Engine.evaluate_contention`).
+
+    `mix` records the heterogeneous engine mix the result was computed
+    for, or ``None`` for the homogeneous N-identical-engines case — a
+    uniform :class:`EngineMix` normalizes to ``None`` (DESIGN.md §13), so
+    both spellings of the same workload produce equal results.
     """
 
     num_engines: int
@@ -581,6 +689,7 @@ class ContentionResult:
     arbitration: str = "round_robin"
     burst_beats: int = 1
     placement: str = "same_channel"
+    mix: Optional[EngineMix] = None
 
     @property
     def per_engine_gbps(self) -> float:
@@ -656,7 +765,7 @@ def _queueing_terms(arbitration: str, grant_beats: int, num_engines: int,
     return (num_engines - 1) * mean_service, head
 
 
-def contended_throughput(
+def _contended_throughput_uniform(
     p: RSTParams,
     mapping: AddressMapping,
     spec: MemorySpec,
@@ -666,7 +775,12 @@ def contended_throughput(
     arbitration: str = "round_robin",
     burst_beats: int = 1,
 ) -> ContentionResult:
-    """Steady-state throughput of N engines sharing one channel port.
+    """Steady-state throughput of N *identical* engines on one port.
+
+    The original homogeneous contention model, preserved verbatim so the
+    uniform branch of :func:`contended_throughput_mix` — and therefore
+    the :func:`contended_throughput` thin wrapper — stays bit-identical
+    to the pre-mix path.
 
     Models the scenario family of Choi et al. 2020 / Zohouri & Matsuoka
     2019: several compute engines (PEs) multiplexed onto one HBM
@@ -755,6 +869,308 @@ def contended_throughput(
                 "efficiency": eff},
         arbitration=arbitration,
         burst_beats=burst_beats,
+    )
+
+
+def contended_throughput(
+    p: RSTParams,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    num_engines: int = 1,
+    op: str = "read",
+    arbitration: str = "round_robin",
+    burst_beats: int = 1,
+) -> ContentionResult:
+    """Steady-state throughput of N *identical* engines sharing one port.
+
+    The homogeneous spelling of :func:`contended_throughput_mix` — a
+    thin wrapper building ``EngineMix.uniform(p, op, num_engines)`` and
+    delegating, so the old ``num_engines: int`` contract and an
+    all-identical mix are the *same request* by construction (DESIGN.md
+    §13) and stay bit-identical under every arbitration policy.  The
+    model itself (grant interleaving, the three resource bounds, the
+    per-policy queueing terms) is documented on
+    :func:`_contended_throughput_uniform`, whose result this returns
+    unchanged; ``num_engines == 1`` stays bit-identical to
+    :func:`throughput` with a zero queueing term under every policy.
+    """
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; valid: {OPS}")
+    return contended_throughput_mix(
+        EngineMix.uniform(p, op, num_engines), mapping, spec,
+        arbitration=arbitration, burst_beats=burst_beats)
+
+
+def contended_throughput_mix(
+    mix: EngineMix,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    arbitration: str = "round_robin",
+    burst_beats: int = 1,
+) -> ContentionResult:
+    """Steady-state throughput of a heterogeneous engine mix on one port.
+
+    The general contention entry point (DESIGN.md §13): `mix` is an
+    ordered tuple of per-engine ``(params, op)`` entries — readers,
+    writers, and duplex streams with their own RST tuples — multiplexed
+    onto one shared channel port in entry (grant) order.  This is the
+    workload regime of Choi et al. 2020 (mixed-direction multi-PE
+    designs swinging 30%→90% of nominal) that the homogeneous
+    N-identical-engines model cannot name.
+
+    A *uniform* mix (every entry identical) normalizes to the
+    homogeneous path and returns its result bit-identically, with
+    ``mix=None`` on the result — ``contended_throughput(num_engines=N)``
+    and ``EngineMix.uniform(p, op, N)`` are indistinguishable down to
+    the float ops and the memo keys built from them.  A genuinely mixed
+    mix runs the grant-interleaved per-command model
+    (:func:`_contended_throughput_mixed`): per-engine service times,
+    per-command direction overheads, and op-aware bus-reversal segments
+    at grant boundaries between engines of different directions.  The
+    loop oracle `_timing_reference.contended_throughput_mix` pins every
+    float of the mixed path at 1e-9.
+    """
+    uni = mix.uniform_entry()
+    if uni is not None:
+        return _contended_throughput_uniform(
+            uni[0], mapping, spec, num_engines=len(mix), op=uni[1],
+            arbitration=arbitration, burst_beats=burst_beats)
+    return _contended_throughput_mixed(
+        mix, mapping, spec, arbitration=arbitration, burst_beats=burst_beats)
+
+
+def _mixed_grant_schedule(counts: List[int], bb: int, arbitration: str
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(engine, txn-within-engine, grant-engine-sequence) of a mixed rotation.
+
+    Grant order is entry order.  Round-robin/burst rotate grants of at
+    most ``bb`` transactions across the engines that still have
+    transactions left (an exhausted engine drops out of the rotation, as
+    a real arbiter's request lines deassert); exclusive concatenates
+    whole streams engine-major.  For equal counts this reproduces the
+    homogeneous `_contended_command_addresses` order element for element:
+    full ``bb``-beat rounds, then the engine-major remainder.
+    """
+    n_eng = len(counts)
+    if arbitration == "exclusive":
+        order_eng = np.repeat(np.arange(n_eng, dtype=np.int64),
+                              np.asarray(counts, dtype=np.int64))
+        order_txn = np.concatenate(
+            [np.arange(c, dtype=np.int64) for c in counts])
+        grants = np.array([k for k in range(n_eng) if counts[k] > 0],
+                          dtype=np.int64)
+        return order_eng, order_txn, grants
+    eng_l: List[int] = []
+    txn_l: List[int] = []
+    grant_l: List[int] = []
+    pos = [0] * n_eng
+    active = True
+    while active:
+        active = False
+        for k in range(n_eng):
+            take = min(bb, counts[k] - pos[k])
+            if take <= 0:
+                continue
+            active = True
+            eng_l.extend([k] * take)
+            txn_l.extend(range(pos[k], pos[k] + take))
+            grant_l.append(k)
+            pos[k] += take
+    return (np.asarray(eng_l, dtype=np.int64),
+            np.asarray(txn_l, dtype=np.int64),
+            np.asarray(grant_l, dtype=np.int64))
+
+
+def _stream_bounds_mixed(spec: MemorySpec, bank: np.ndarray, row: np.ndarray,
+                         bg: np.ndarray, turn_cmd: np.ndarray,
+                         extra_cmd: np.ndarray, op_switch_cycles: float
+                         ) -> Tuple[Dict[str, float], int]:
+    """Per-command generalization of `_stream_bounds` for mixed streams.
+
+    Same three bounds, but the direction overheads are per-*command*
+    arrays (each command carries its issuing engine's op): each reorder
+    window pays the window-*mean* duplex turnaround, each row activation
+    extends tRC by the activating engine's own write-recovery term
+    (weighted bincount instead of count * constant), and the issue bound
+    carries the grant-boundary bus-reversal segments accumulated by the
+    caller.  With uniform per-command arrays every term reduces to the
+    homogeneous formula (the mean is the constant; the weighted per-bank
+    max is the count max times the constant weight).
+    """
+    n = len(bank)
+    ccd_l_cyc = spec.ns_to_cycles(spec.t_ccd_l_ns)
+    win = _REORDER_WINDOW
+    nw_full, rem = divmod(n, win)
+
+    transitions = int(np.count_nonzero(bg[1:] != bg[:-1]))
+    run_len = n / (transitions + 1)
+    g_cap = max(1.0, _REORDER_WINDOW / (2.0 * run_len))
+    issue_cycles = 0.0
+    if nw_full:
+        srt = np.sort(bg[:nw_full * win].reshape(nw_full, win), axis=1)
+        uniq = 1 + np.count_nonzero(srt[:, 1:] != srt[:, :-1], axis=1)
+        g = np.minimum(uniq.astype(np.float64), g_cap)
+        issue_cycles += float(np.sum(win / np.minimum(1.0, g / ccd_l_cyc)))
+        issue_cycles += float(np.sum(
+            turn_cmd[:nw_full * win].reshape(nw_full, win).mean(axis=1)))
+    if rem:
+        g = min(float(len(np.unique(bg[nw_full * win:]))), g_cap)
+        issue_cycles += rem / min(1.0, g / ccd_l_cyc)
+        issue_cycles += float(np.mean(turn_cmd[nw_full * win:]))
+    issue_cycles += op_switch_cycles
+    nw_total = nw_full + (1 if rem else 0)
+
+    prev_idx = _prev_same_bank(bank)
+    act = prev_idx < 0
+    has_prev = np.nonzero(~act)[0]
+    act[has_prev] = row[has_prev] != row[prev_idx[has_prev]]
+    total_acts = int(np.count_nonzero(act))
+    t_rc_cyc = spec.ns_to_cycles(spec.t_rc_ns)
+    bank_cycles = 0.0
+    if total_acts:
+        act_idx = np.nonzero(act)[0]
+        key = (act_idx // win) * spec.num_banks + bank[act_idx]
+        weights = t_rc_cyc + extra_cmd[act_idx]
+        sums = np.bincount(key, weights=weights,
+                           minlength=nw_total * spec.num_banks)
+        bank_cycles = float(
+            sums.reshape(nw_total, spec.num_banks).max(axis=1).sum())
+
+    faw_cycles = total_acts * spec.ns_to_cycles(spec.t_faw_ns) / 4.0
+    bounds = {"bus/ccd": issue_cycles, "bank": bank_cycles, "faw": faw_cycles}
+    return bounds, total_acts
+
+
+def _contended_throughput_mixed(
+    mix: EngineMix,
+    mapping: AddressMapping,
+    spec: MemorySpec,
+    *,
+    arbitration: str = "round_robin",
+    burst_beats: int = 1,
+) -> ContentionResult:
+    """Grant-interleaved contention model of a genuinely mixed engine set.
+
+    Engine k issues its own RST stream over its own disjoint window —
+    the window base is offset by ``sum(w_j for j < k)``, the
+    heterogeneous analog of the homogeneous ``A + k*W`` layout — and the
+    shared port rotates `_grant_beats`-sized grants in entry order
+    (`_mixed_grant_schedule`).  The interleaved per-command stream runs
+    through the per-command resource bounds (`_stream_bounds_mixed`),
+    and every grant boundary between engines of different directions
+    pays the bus-reversal segments (`_turnaround_between`).  Queueing
+    terms generalize the homogeneous ones engine by engine: a
+    transaction's arbitration wait sums the *other* engines' own
+    per-grant service times instead of N-1 copies of one shared mean,
+    and the steady-state cycles split across engines in proportion to
+    their command-stream share.
+    """
+    mix.validate(spec)
+    n_eng = len(mix)
+    bus = spec.bus_bytes_per_cycle
+    over = [_direction_overheads(spec, op_k) for _, op_k in mix.entries]
+    turn_e = np.array([t for t, _ in over], dtype=np.float64)
+    extra_e = np.array([x for _, x in over], dtype=np.float64)
+    cmds_e = np.array([max(1, p_k.b // bus) for p_k, _ in mix.entries],
+                      dtype=np.int64)
+    # Shared command budget: the single-engine _MAX_EXPAND cap split
+    # across engines at the widest per-transaction command count,
+    # mirroring the homogeneous budget rule.
+    max_txns = max(16, (_MAX_EXPAND // int(cmds_e.max())) // n_eng)
+    streams = []
+    for p_k, _ in mix.entries:
+        t = _expand_addresses(p_k)
+        streams.append(t[:max_txns] if len(t) > max_txns else t)
+    counts = [len(t) for t in streams]
+    bb = _grant_beats(arbitration, burst_beats, max(counts))
+    order_eng, order_txn, grants = _mixed_grant_schedule(
+        counts, bb, arbitration)
+
+    # Absolute per-transaction addresses: engine k's own stream (which
+    # already carries its A) plus its cumulative window offset, gathered
+    # in grant order.
+    w_offs = np.concatenate(([0], np.cumsum(
+        np.array([p_k.w for p_k, _ in mix.entries], dtype=np.int64))))[:-1]
+    flat = np.concatenate([streams[k] + w_offs[k] for k in range(n_eng)])
+    starts = np.concatenate(
+        ([0], np.cumsum(np.asarray(counts, dtype=np.int64))))[:-1]
+    txn_addr = flat[starts[order_eng] + order_txn]
+
+    # Ragged command expansion: each transaction carries its own engine's
+    # B/bus_bytes column commands at consecutive bus-width offsets.
+    slot_cmds = cmds_e[order_eng]
+    total_cmds = int(slot_cmds.sum())
+    slot_of = np.repeat(np.arange(len(order_eng), dtype=np.int64), slot_cmds)
+    first_cmd = np.cumsum(slot_cmds) - slot_cmds
+    within = np.arange(total_cmds, dtype=np.int64) - first_cmd[slot_of]
+    addrs = txn_addr[slot_of] + within * bus
+    eng_cmd = order_eng[slot_of]
+
+    dec = mapping.decode(addrs)
+    bank = np.asarray(mapping.bank_id_from(dec))
+    row = np.asarray(dec["R"])
+    bg = np.asarray(dec["BG"])
+
+    # Bus-reversal segments at grant boundaries between different ops:
+    # an (engine, engine) cost table gathered along the grant sequence.
+    pair_cost = np.array(
+        [[_turnaround_between(spec, oi, oj) for oj in mix.ops]
+         for oi in mix.ops], dtype=np.float64)
+    op_switch = (float(pair_cost[grants[:-1], grants[1:]].sum())
+                 if len(grants) > 1 else 0.0)
+
+    bounds, total_acts = _stream_bounds_mixed(
+        spec, bank, row, bg, turn_e[eng_cmd], extra_e[eng_cmd], op_switch)
+    bound_name = max(bounds, key=bounds.get)
+    steady_cycles = bounds[bound_name]
+
+    eff = (1.0 - spec.t_rfc_ns / spec.t_refi_ns) * (1.0 - spec.sched_overhead)
+    total_txns = int(sum(counts))
+    total_bytes = int(sum(
+        c * p_k.b for c, (p_k, _) in zip(counts, mix.entries)))
+    seconds = spec.cycles_to_ns(steady_cycles) * 1e-9
+    gbps = total_bytes / seconds / 1e9 * eff if seconds > 0 else 0.0
+    # The *shared port* can never beat its wire rate.
+    gbps = min(gbps, spec.peak_channel_gbps)
+
+    mean_service = steady_cycles / total_txns if total_txns else 0.0
+    # Per-engine per-transaction service: the steady-state cycles split
+    # in proportion to each engine's share of the command stream.
+    mean_e = (steady_cycles * cmds_e.astype(np.float64) / total_cmds
+              if total_cmds else np.zeros(n_eng, dtype=np.float64))
+    counts_f = np.asarray(counts, dtype=np.float64)
+    if arbitration == "exclusive":
+        stream_e = counts_f * mean_e
+        waits = np.concatenate(([0.0], np.cumsum(stream_e)[:-1]))
+        queueing = float(np.mean(waits))
+        head_wait = float(waits[-1])
+    else:
+        rot_e = float(mean_e.sum()) - mean_e   # sum_{j != k} mean_j
+        queueing = float(np.mean(rot_e))
+        head_wait = float(bb * rot_e.max())
+
+    return ContentionResult(
+        num_engines=n_eng,
+        aggregate_gbps=gbps,
+        bound=bound_name,
+        queueing_delay_cycles=queueing,
+        detail={**bounds, "txns": float(len(bank)),
+                "cmds_per_txn": total_cmds / total_txns if total_txns else 0.0,
+                "txns_per_engine": total_txns / n_eng,
+                "total_acts": float(total_acts),
+                "mean_service_cycles": mean_service,
+                "grant_head_wait_cycles": head_wait,
+                "grant_beats": float(bb),
+                "op_switch_cycles": op_switch,
+                "mix_size": float(n_eng),
+                "efficiency": eff},
+        arbitration=arbitration,
+        burst_beats=burst_beats,
+        mix=mix,
     )
 
 

@@ -18,10 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine_mix import EngineMix
 from repro.core.params import RSTParams
 from repro.core.rst import block_params
 from repro.core.timing_model import _grant_beats
-from repro.kernels.rst_contend import rst_contend_read
+from repro.kernels.rst_contend import rst_contend_mix_read, rst_contend_read
 from repro.kernels.rst_read import LANE, SUBLANE, rst_read
 from repro.kernels.rst_write import rst_write
 
@@ -212,6 +213,120 @@ def measure_contended_bandwidth(p: RSTParams, *, num_engines: int,
     return BandwidthSample(
         bytes_moved=num_engines * min(p.n, grid) * p.b, seconds=dt,
         checksum=np.asarray(out))
+
+
+def _mix_block_rows(mix: EngineMix, dtype, burst_rows: int,
+                    grid_txns: int | None) -> Tuple[list, int]:
+    """Per-engine (stride, wset, base, n) block rows for the mix kernel.
+
+    Engine k's disjoint window is laid out directly after engine k-1's:
+    its row's base block folds in the cumulative working-set offset, so
+    the device index map stays the three-term homogeneous form.  Every
+    row is int32-guarded individually — one oversized entry must name
+    itself rather than hide behind the mix's aggregate span.
+
+    Returns (rows, span_blocks) where span_blocks is the buffer extent
+    in tiles.
+    """
+    tb = tile_bytes(dtype, burst_rows)
+    rows = []
+    offset_b = 0
+    span_b = 0
+    for k, (p, op) in enumerate(mix.entries):
+        if op != "read":
+            raise ValueError(
+                f"the contention kernel measures read engines only; entry "
+                f"{k} of mix {mix.describe()!r} is {op!r} — route "
+                f"write/duplex engines through the sim/jaxgrid placement "
+                f"paths (DESIGN.md §13)")
+        if p.b != tb:
+            raise ValueError(
+                f"entry {k} burst B={p.b} does not match tile bytes {tb} "
+                f"(burst_rows={burst_rows}, dtype={jnp.dtype(dtype).name}); "
+                f"on TPU the burst is the BlockSpec tile shared by every "
+                f"engine in the mix (DESIGN.md §2/§13)")
+        stride_b, wset_b, base_b = block_params(p, tb)
+        base_k = base_b + offset_b
+        n = p.n if grid_txns is None else min(p.n, grid_txns)
+        _require_int32_index_range(stride_b, wset_b, base_k, n)
+        rows.append([stride_b, wset_b, base_k, n])
+        offset_b += wset_b
+        span_b = max(span_b, base_k + wset_b)
+    return rows, span_b
+
+
+def mix_params_operand(mix: EngineMix, dtype, burst_rows: int = SUBLANE,
+                       grid_txns: int | None = None,
+                       burst_beats: int = 1) -> jax.Array:
+    """Pack a heterogeneous EngineMix into the int32[N+1, 4] scalar table
+    of `rst_contend_mix_read`: a header row (num_engines, burst_beats,
+    0, 0) followed by one per-engine row, each int32-guarded on its own
+    index arithmetic."""
+    rows, _ = _mix_block_rows(mix, dtype, burst_rows, grid_txns)
+    header = [len(mix), burst_beats, 0, 0]
+    return jnp.array([header] + rows, dtype=jnp.int32)
+
+
+def make_mix_working_buffer(mix: EngineMix, dtype, key=None, *,
+                            burst_rows: int = SUBLANE,
+                            grid_txns: int | None = None) -> jax.Array:
+    """Allocate one shared working buffer covering every engine's
+    disjoint window under the `_mix_block_rows` layout (engine k's
+    window directly after engine k-1's, past its own base offset)."""
+    _, span_b = _mix_block_rows(mix, dtype, burst_rows, grid_txns)
+    rows = span_b * burst_rows
+    if key is None:
+        base = jnp.arange(rows * LANE, dtype=jnp.float32) % 251.0
+        return base.reshape(rows, LANE).astype(dtype)
+    return jax.random.normal(key, (rows, LANE), dtype=jnp.float32).astype(dtype)
+
+
+def measure_contended_mix_bandwidth(mix: EngineMix, *,
+                                    arbitration: str = "round_robin",
+                                    burst_beats: int = 1,
+                                    dtype=jnp.float32,
+                                    burst_rows: int = SUBLANE,
+                                    grid_txns: int | None = None,
+                                    interpret: bool = True) -> BandwidthSample:
+    """A heterogeneous mix of read engines sharing one memory port: the
+    per-engine generalization of `measure_contended_bandwidth`.  A
+    uniform mix delegates to the homogeneous wrapper outright (the same
+    reduction rule every layer of the contention stack applies), so the
+    mixed kernel only ever runs for genuinely heterogeneous traffic.
+    Bytes moved counts every engine's own burst size over its own
+    stream, so `gbps` is the port's aggregate under the mixed load."""
+    uni = mix.uniform_entry()
+    if uni is not None:
+        p, op = uni
+        if op != "read":
+            raise ValueError(
+                f"the contention kernel measures read engines only; mix "
+                f"{mix.describe()!r} is all-{op} — route write/duplex "
+                f"engines through the sim/jaxgrid placement paths "
+                f"(DESIGN.md §13)")
+        return measure_contended_bandwidth(
+            p, num_engines=len(mix), arbitration=arbitration,
+            burst_beats=burst_beats, dtype=dtype, burst_rows=burst_rows,
+            grid_txns=grid_txns, interpret=interpret)
+    grid = grid_txns or default_grid(max(p.n for p in mix.params), interpret)
+    bb = _resolve_grant_beats(arbitration, burst_beats, grid)
+    table = mix_params_operand(mix, dtype, burst_rows, grid, burst_beats=bb)
+    buf = make_mix_working_buffer(mix, dtype, burst_rows=burst_rows,
+                                  grid_txns=grid)
+    # Warm-up compiles and (in interpret mode) validates tracing.
+    out = rst_contend_mix_read(table, buf, grid_txns=grid,
+                               num_engines=len(mix), burst_beats=bb,
+                               burst_rows=burst_rows, interpret=interpret)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    out = rst_contend_mix_read(table, buf, grid_txns=grid,
+                               num_engines=len(mix), burst_beats=bb,
+                               burst_rows=burst_rows, interpret=interpret)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return BandwidthSample(
+        bytes_moved=sum(min(p.n, grid) * p.b for p in mix.params),
+        seconds=dt, checksum=np.asarray(out))
 
 
 def measure_write_bandwidth(p: RSTParams, *, dtype=jnp.float32,

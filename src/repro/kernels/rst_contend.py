@@ -89,6 +89,125 @@ def _rst_contend_kernel(params_ref, buf_ref, out_ref, acc_ref):
         out_ref[...] = acc_ref[...]
 
 
+def _mix_grant_position(j, table_ref):
+    """(engine k, transaction t_raw) of grid step j from the mix table.
+
+    Same rotation decomposition as `_grant_position`, but the engine
+    count and grant size come from the table's header row (row 0) so one
+    compiled image serves every mix shape up to the static grid.
+    """
+    engines = table_ref[0, 0]
+    bb = table_ref[0, 1]
+    per_round = bb * engines
+    g = j // per_round
+    r = j % per_round
+    return r // bb, g * bb + r % bb
+
+
+def _mix_index_map(j, table_ref):
+    """Block index of grid step j under a heterogeneous mix: engine k's
+    own (stride, wset, base, n) row is gathered from the scalar-prefetch
+    table — the per-engine Eq. 1 over its own pre-offset window.  The
+    window offset is folded into each row's base block by
+    `ops.mix_params_operand`, so the map stays the three-term form the
+    homogeneous kernel uses."""
+    k, t_raw = _mix_grant_position(j, table_ref)
+    row = k + 1
+    stride = table_ref[row, 0]
+    wset = table_ref[row, 1]
+    base = table_ref[row, 2]
+    n = table_ref[row, 3]
+    t = jnp.minimum(t_raw, n - 1)
+    return base + (t * stride) % wset, 0
+
+
+def _rst_contend_mix_kernel(table_ref, buf_ref, out_ref, acc_ref):
+    j = pl.program_id(0)
+    k, t_raw = _mix_grant_position(j, table_ref)
+    n = table_ref[k + 1, 3]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t_raw < n)
+    def _accumulate():
+        acc_ref[...] += buf_ref[...].astype(jnp.float32)
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid_txns", "num_engines", "burst_beats", "burst_rows",
+                     "interpret"))
+def rst_contend_mix_read(table: jax.Array, buf: jax.Array, *, grid_txns: int,
+                         num_engines: int, burst_beats: int = 1,
+                         burst_rows: int = SUBLANE,
+                         interpret: bool = True) -> jax.Array:
+    """Run a heterogeneous mix of grant-interleaved RST read engines.
+
+    The per-engine generalization of `rst_contend_read`: instead of one
+    (stride, wset, base, n) shared by every engine, each engine carries
+    its own row of the scalar-prefetch operand table, so engines in one
+    arbitration rotation may traverse differently-shaped windows
+    (different stride/working-set/transaction-count — the byte-level
+    burst is the static tile, shared by construction).
+
+    Args:
+      table: int32[num_engines + 1, 4] scalar operand.  Row 0 is the
+        header ``(num_engines, burst_beats, 0, 0)``; row k+1 is engine
+        k's ``(stride_blocks, wset_blocks, base_block, n_txns)`` with
+        its disjoint-window offset already folded into ``base_block``
+        (see `ops.mix_params_operand`).
+      buf: shared working buffer covering every engine's window:
+        shape (rows, LANE) with rows % burst_rows == 0 and at least
+        ``max_k(base_block_k + wset_blocks_k)`` blocks.
+      grid_txns: static per-engine grid size (every n_txns <= grid_txns).
+      num_engines: static engine count (== table rows - 1).
+      burst_beats: static grant size, as in `rst_contend_read`.
+      burst_rows: rows per burst tile.
+      interpret: run the kernel body in interpret mode (CPU validation).
+
+    Returns:
+      float32[burst_rows, LANE] elementwise checksum of every tile read
+      by every engine (each engine's overhang beats past its own n are
+      gated out independently).
+    """
+    rows, lane = buf.shape
+    if lane != LANE:
+        raise ValueError(f"buffer minor dim must be {LANE}, got {lane}")
+    if rows % burst_rows:
+        raise ValueError(f"rows ({rows}) % burst_rows ({burst_rows}) != 0")
+    if burst_rows % SUBLANE:
+        raise ValueError(f"burst_rows must be a multiple of {SUBLANE}")
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    if burst_beats < 1:
+        raise ValueError(f"burst_beats must be >= 1, got {burst_beats}")
+    if table.shape != (num_engines + 1, 4):
+        raise ValueError(
+            f"mix table must be int32[{num_engines + 1}, 4] "
+            f"(header + one row per engine), got {table.shape}")
+
+    grid_per_engine = -(-grid_txns // burst_beats) * burst_beats
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(grid_per_engine * num_engines,),
+        in_specs=[pl.BlockSpec((burst_rows, LANE), _mix_index_map)],
+        out_specs=pl.BlockSpec((burst_rows, LANE), lambda j, p: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((burst_rows, LANE), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _rst_contend_mix_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((burst_rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(table, buf)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("grid_txns", "num_engines", "burst_beats", "burst_rows",

@@ -415,6 +415,10 @@ class CampaignService:
                   else _reference.serial_write_latencies)
             val = fn(p, mapping, spec, switch_enabled=enabled,
                      switch_extra_cycles=extra).cycles
+        elif pt.mix is not None:
+            val = _reference.contended_throughput_mix(
+                pt.mix, mapping, spec, arbitration=pt.arbitration,
+                burst_beats=pt.burst_beats).aggregate_gbps * scale
         else:
             val = _reference.contended_throughput(
                 p, mapping, spec, num_engines=pt.num_engines, op=pt.op,

@@ -195,13 +195,13 @@ class FaultInjectingBackend(Backend):
 
     def latency(self, spec, p, mapping, *, switch_enabled,
                 switch_extra_cycles, op="read", num_engines=1,
-                arbitration="round_robin", burst_beats=1):
+                arbitration="round_robin", burst_beats=1, mix=None):
         corrupt = self._maybe_fault(f"latency[{op}]")
         res = self.inner.latency(
             spec, p, mapping, switch_enabled=switch_enabled,
             switch_extra_cycles=switch_extra_cycles, op=op,
             num_engines=num_engines, arbitration=arbitration,
-            burst_beats=burst_beats)
+            burst_beats=burst_beats, mix=mix)
         if corrupt is not None:
             res = dataclasses.replace(res,
                                       cycles=res.cycles * CORRUPT_SCALE)
@@ -209,11 +209,11 @@ class FaultInjectingBackend(Backend):
 
     def contended_throughput(self, spec, p, mapping, *, num_engines,
                              op="read", arbitration="round_robin",
-                             burst_beats=1):
+                             burst_beats=1, mix=None):
         corrupt = self._maybe_fault(f"contended_throughput[{op}]")
         res = self.inner.contended_throughput(
             spec, p, mapping, num_engines=num_engines, op=op,
-            arbitration=arbitration, burst_beats=burst_beats)
+            arbitration=arbitration, burst_beats=burst_beats, mix=mix)
         if corrupt is not None:
             res = dataclasses.replace(
                 res, aggregate_gbps=res.aggregate_gbps * CORRUPT_SCALE)

@@ -100,9 +100,10 @@ def test_deleting_a_sweep_key_field_fails_the_pass(tmp_path):
     src = (CORE / "sweep.py").read_text()
     mutated = src.replace(
         "key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
-        "               pt.arbitration, pt.burst_beats, pt.placement)",
+        "               pt.arbitration, pt.burst_beats, pt.placement, "
+        "pt.mix)",
         "key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
-        "               pt.arbitration, pt.burst_beats)")
+        "               pt.arbitration, pt.burst_beats, pt.mix)")
     assert mutated != src, "contention memo key moved; update the probe"
     target = tmp_path / "sweep.py"
     target.write_text(mutated)
@@ -215,6 +216,91 @@ def test_removing_the_operand_guard_fails_the_pass(tmp_path):
         experiments_path=CORE / "experiments.py")
     assert "REPRO-K002" in ids(findings)
     assert "params_operand" in message_of(findings, "REPRO-K002")
+
+
+def test_dropping_the_mix_from_a_memo_key_fails_the_pass(tmp_path):
+    """The ISSUE's EngineMix probe: a contention memo key that forgets
+    the heterogeneous mix field collapses distinct mixed requests onto
+    one cache slot — C-family tracing must catch the drop."""
+    src = (CORE / "sweep.py").read_text()
+    mutated = src.replace(
+        "        key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
+        "               pt.arbitration, pt.burst_beats, pt.placement, "
+        "pt.mix)",
+        "        key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
+        "               pt.arbitration, pt.burst_beats, pt.placement)")
+    assert mutated != src, "contention memo key moved; update the probe"
+    target = tmp_path / "sweep.py"
+    target.write_text(mutated)
+    findings = check_sweep_cache_keys(target)
+    assert "REPRO-C001" in ids(findings)
+    assert "pt.mix" in message_of(findings, "REPRO-C001")
+
+
+def test_dropping_the_mix_from_the_flight_key_fails_the_pass(tmp_path):
+    src = (CORE / "sweep.py").read_text()
+    mutated = src.replace(
+        "            key = (\"cont\", pt.params, pt.policy, pt.op, "
+        "pt.num_engines,\n"
+        "                   pt.arbitration, pt.burst_beats, pt.placement, "
+        "pt.mix,\n",
+        "            key = (\"cont\", pt.params, pt.policy, pt.op, "
+        "pt.num_engines,\n"
+        "                   pt.arbitration, pt.burst_beats, pt.placement,\n")
+    assert mutated != src, "contention flight key moved; update the probe"
+    target = tmp_path / "sweep.py"
+    target.write_text(mutated)
+    findings = check_sweep_cache_keys(target)
+    assert "REPRO-C001" in ids(findings)
+    assert "pt.mix" in message_of(findings, "REPRO-C001")
+
+
+def test_unfreezing_engine_mix_fails_the_pass(tmp_path):
+    """EngineMix sits inside memo keys, so C002's frozen-eq-dataclass
+    requirement extends to it: a mutable mix silently corrupts every key
+    that embeds it."""
+    from repro.analysis.cache_keys import check_engine_mix_keyed
+    src = (CORE / "engine_mix.py").read_text()
+    mutated = src.replace("@dataclasses.dataclass(frozen=True)\nclass EngineMix:",
+                          "@dataclasses.dataclass\nclass EngineMix:")
+    assert mutated != src, "EngineMix decorator moved; update the probe"
+    target = tmp_path / "engine_mix.py"
+    target.write_text(mutated)
+    findings = check_engine_mix_keyed(target)
+    assert "REPRO-C002" in ids(findings)
+    assert "EngineMix" in message_of(findings, "REPRO-C002")
+    # ... and the real tree is clean.
+    assert check_engine_mix_keyed(CORE / "engine_mix.py") == []
+
+
+def test_deleting_the_mix_parity_case_fails_the_pass(tmp_path):
+    """Dropping the heterogeneous parity tests re-opens O002/O004 for
+    contended_throughput_mix — the oracle tower must keep naming the
+    mixed path explicitly."""
+    parity_src = (REPO / "tests/core/test_timing_parity.py").read_text()
+    mutated = parity_src.replace("def test_contended_mix_parity(",
+                                 "def untested_contended_mix(")
+    assert mutated != parity_src, "mix parity test renamed; update probe"
+    target = tmp_path / "test_timing_parity.py"
+    target.write_text(mutated)
+    findings = check_oracle_parity(CORE / "timing_model.py",
+                                   CORE / "_timing_reference.py", target)
+    assert "REPRO-O002" in ids(findings)
+    assert "contended_throughput_mix" in message_of(findings, "REPRO-O002")
+
+    diff_src = (REPO / "tests/core/test_timing_differential.py").read_text()
+    # Both the fixed-case and the fuzz variant pin the pair; drop both.
+    mutated = diff_src.replace("def test_mix_three_way(",
+                               "def untested_mix_three_way(") \
+                      .replace("def test_fuzz_mix_three_way(",
+                               "def untested_fuzz_mix_three_way(")
+    assert mutated != diff_src, "mix differential test renamed; update probe"
+    target = tmp_path / "test_timing_differential.py"
+    target.write_text(mutated)
+    findings = check_jax_parity(
+        CORE / "timing_jax.py", CORE / "timing_model.py", target)
+    assert "REPRO-O004" in ids(findings)
+    assert "contended_throughput_mix" in message_of(findings, "REPRO-O004")
 
 
 def test_findings_carry_location_id_and_hint():

@@ -16,6 +16,7 @@ BASELINE = REPO / "analysis_baseline.json"
 # Everything run_analysis touches, for building mutated tree copies.
 ANALYZED = (
     "src/repro/core/sweep.py",
+    "src/repro/core/engine_mix.py",
     "src/repro/core/timing_model.py",
     "src/repro/core/timing_jax.py",
     "src/repro/core/_timing_reference.py",

@@ -1,0 +1,247 @@
+"""EngineMix invariants (DESIGN.md §13): normalization, grammar, and
+mixed-capture classification.
+
+The two anchors of the heterogeneous refactor:
+
+* every all-identical mix IS the homogeneous request — fuzzed here to
+  reduce bit-exactly onto ``contended_throughput`` under all three
+  arbitration policies (the memo keys built from the normalized form
+  then cannot fork on spelling);
+* per-engine captures classify against their *own* op anchors — a write
+  entry's miss population binds to the tWR-shifted write-miss anchor,
+  never its read neighbour's (the PR 4 cross-binning bug class).
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import DDR4, HBM, RSTParams, get_mapping
+from repro.core import latency
+from repro.core import timing_model as vec
+from repro.core.engine_mix import (EngineMix, MIX_SPEC_GRAMMAR,
+                                   normalize_mix, parse_mix_spec)
+from repro.core.latency import LatencyModule, classify_mix_contended
+
+SPECS = {"hbm": HBM, "ddr4": DDR4}
+
+ARBITRATIONS = [("round_robin", 1), ("burst", 4), ("exclusive", 1)]
+
+
+# ---------------------------------------------------------------------------
+# Uniform-mix reduction fuzz (the ISSUE's bit-identity bar).
+# ---------------------------------------------------------------------------
+
+pow2 = lambda lo, hi: st.integers(lo, hi).map(lambda e: 1 << e)
+
+
+@st.composite
+def uniform_mix_cases(draw):
+    spec_name = draw(st.sampled_from(["hbm", "ddr4"]))
+    spec = SPECS[spec_name]
+    b = draw(pow2(5, 8).map(lambda v: max(v, spec.min_burst)))
+    we = draw(pow2(12, 24))
+    s = draw(pow2(5, 13).map(lambda v: min(v, we)))
+    n = draw(st.integers(1, 1024))
+    op = draw(st.sampled_from(["read", "write", "duplex"]))
+    num_engines = draw(st.integers(1, 6))
+    policy = draw(st.sampled_from([None, "RBC"]))
+    arbitration, burst_beats = draw(st.sampled_from(ARBITRATIONS))
+    return (spec_name, policy, dict(n=n, b=b, s=s, w=we), op,
+            num_engines, arbitration, burst_beats)
+
+
+@given(case=uniform_mix_cases())
+@settings(max_examples=40, deadline=None)
+def test_fuzz_uniform_mix_reduces_bit_exactly(case):
+    """EVERY all-identical EngineMix reduces bit-exactly (==, not approx)
+    to the homogeneous contended_throughput path under all three
+    arbitration policies — same floats, same bound, mix=None."""
+    spec_name, policy, kw, op, num_engines, arbitration, burst_beats = case
+    spec = SPECS[spec_name]
+    p = RSTParams(**kw)
+    m = get_mapping(spec, policy)
+    mix = EngineMix.uniform(p, op, num_engines)
+    assert mix.uniform_entry() == (p, op)
+    via_mix = vec.contended_throughput_mix(mix, m, spec,
+                                           arbitration=arbitration,
+                                           burst_beats=burst_beats)
+    homo = vec.contended_throughput(p, m, spec, num_engines=num_engines,
+                                    op=op, arbitration=arbitration,
+                                    burst_beats=burst_beats)
+    assert via_mix.aggregate_gbps == homo.aggregate_gbps, case
+    assert via_mix.per_engine_gbps == homo.per_engine_gbps, case
+    assert via_mix.bound == homo.bound, case
+    assert via_mix.queueing_delay_cycles == homo.queueing_delay_cycles, case
+    assert via_mix.mix is None, case
+    assert via_mix.detail == homo.detail, case
+
+
+@pytest.mark.parametrize("arbitration,burst_beats", ARBITRATIONS,
+                         ids=[a for a, _ in ARBITRATIONS])
+def test_uniform_mix_fixed_case_every_policy(arbitration, burst_beats):
+    """Deterministic pin of the fuzz property (runs even where
+    hypothesis is unavailable and the shim skips the fuzz)."""
+    p = RSTParams(n=2048, b=32, s=1024, w=0x100000)
+    m = get_mapping(HBM)
+    mix = EngineMix(((p, "write"),) * 3)       # literal tuple, not .uniform
+    via_mix = vec.contended_throughput_mix(mix, m, HBM,
+                                           arbitration=arbitration,
+                                           burst_beats=burst_beats)
+    homo = vec.contended_throughput(p, m, HBM, num_engines=3, op="write",
+                                    arbitration=arbitration,
+                                    burst_beats=burst_beats)
+    assert via_mix.aggregate_gbps == homo.aggregate_gbps
+    assert via_mix.detail == homo.detail
+    assert via_mix.mix is None
+
+
+# ---------------------------------------------------------------------------
+# normalize_mix: the two spellings collapse onto one cache-key form.
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_mix_folds_uniform_to_homogeneous():
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    q = RSTParams(n=256, b=32, s=2048, w=0x100000)
+    # No mix: passthrough.
+    assert normalize_mix(None, p, "read", 4) == (None, p, "read", 4)
+    # Uniform mix: folds to (params, op, N) with mix=None — whatever
+    # (representative) params/op the caller passed alongside.
+    uni = EngineMix.uniform(q, "write", 3)
+    assert normalize_mix(uni, p, "read", 99) == (None, q, "write", 3)
+    # Genuine mix: kept, entry 0 becomes the representative.
+    mixed = EngineMix(((p, "read"), (q, "write")))
+    assert normalize_mix(mixed, q, "duplex", 7) == (mixed, p, "read", 2)
+
+
+def test_uniform_mix_and_int_spelling_hash_identically():
+    """The two spellings of the same request produce equal normalized
+    tuples — hence equal memo keys (REPRO-C001 honesty)."""
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    a = normalize_mix(EngineMix.uniform(p, "read", 4), p, "read", 4)
+    b = normalize_mix(None, p, "read", 4)
+    assert a == b
+    assert hash(a) == hash(b)
+
+
+# ---------------------------------------------------------------------------
+# Grammar: parse_mix_spec / describe round-trips and the error UX.
+# ---------------------------------------------------------------------------
+
+
+def test_parse_mix_spec_grant_order():
+    assert parse_mix_spec("2r+1w+1d") == ("read", "read", "write", "duplex")
+    assert parse_mix_spec(" 1w + 2r ") == ("write", "read", "read")
+    assert parse_mix_spec("3d") == ("duplex",) * 3
+
+
+@pytest.mark.parametrize("bad", ["2x+1q", "r2", "", "+", "2r+", "0r", "2R"])
+def test_parse_mix_spec_bad_specs_quote_grammar(bad):
+    with pytest.raises(ValueError) as exc:
+        parse_mix_spec(bad)
+    assert MIX_SPEC_GRAMMAR in str(exc.value)
+
+
+def test_describe_round_trips_through_from_spec():
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    for spec_str in ("2r+1w+1d", "1r+1w+1r", "4w"):
+        mix = EngineMix.from_spec(spec_str, p)
+        assert mix.describe() == spec_str
+        assert EngineMix.from_spec(mix.describe(), p) == mix
+
+
+def test_engine_mix_rejects_bad_entries():
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    with pytest.raises(ValueError, match="at least one"):
+        EngineMix(())
+    with pytest.raises(ValueError, match="unknown op"):
+        EngineMix(((p, "modify"),))
+    with pytest.raises(TypeError, match="RSTParams"):
+        EngineMix((("not-params", "read"),))
+    with pytest.raises(ValueError, match="num_engines"):
+        EngineMix.uniform(p, "read", 0)
+
+
+def test_engine_mix_is_hashable_and_order_sensitive():
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    q = RSTParams(n=256, b=32, s=2048, w=0x100000)
+    rw = EngineMix(((p, "read"), (q, "write")))
+    wr = EngineMix(((q, "write"), (p, "read")))
+    assert rw == EngineMix(((p, "read"), (q, "write")))
+    assert hash(rw) == hash(EngineMix(((p, "read"), (q, "write"))))
+    assert rw != wr                     # entry order is grant order
+
+
+# ---------------------------------------------------------------------------
+# Mixed-op contended-capture classification (the PR 4 bug class).
+# ---------------------------------------------------------------------------
+
+
+def test_mix_classification_uses_per_entry_anchors():
+    """A write entry's miss population binds to the tWR-shifted
+    write-miss anchor while its read neighbour keeps the unshifted one —
+    and classifying either against the *other* op's anchors visibly
+    cross-bins, which is exactly what classify_mix_contended prevents."""
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    mix = EngineMix(((p, "read"), (p, "write")))
+    read_mod = LatencyModule.for_mix_entry(mix, 0)
+    write_mod = LatencyModule.for_mix_entry(mix, 1)
+    read_miss = read_mod.anchors(HBM)["miss"]
+    write_miss = write_mod.anchors(HBM)["miss"]
+    assert write_miss > read_miss       # tWR shifts the write-miss anchor
+
+    caps = [np.full(64, read_miss, dtype=np.int64),
+            np.full(64, write_miss, dtype=np.int64)]
+    counts = classify_mix_contended(caps, HBM, mix, queueing_cycles=0.0)
+    assert counts[0]["miss"] == 64      # read engine, own anchors
+    assert counts[1]["miss"] == 64      # write engine, own anchors
+    for c in counts:
+        assert c["refresh"] == 0
+        assert all(c[f"{s}_queued"] == 0
+                   for s in ("hit", "closed", "miss"))
+
+    # The bug this API exists to prevent: the read engine's miss
+    # population against the WRITE ladder lands nearer the closed anchor
+    # and cross-bins.
+    wrong = write_mod.classify_contended(caps[0], HBM, 0.0)
+    assert wrong["miss"] < 64
+    assert wrong["closed"] > 0
+
+
+def test_mix_classification_per_engine_queueing_vector():
+    """A mixed rotation's grant-head waits differ engine to engine;
+    classify_mix_contended accepts one queueing term per entry and each
+    engine's shifted population binds to its own queued ladder."""
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    mix = EngineMix(((p, "read"), (p, "write")))
+    q = [40.0, 64.0]
+    mods = [LatencyModule.for_mix_entry(mix, k) for k in range(2)]
+    caps = [np.full(32, mods[k].contended_anchors(
+                HBM, q[k])["miss_queued"], dtype=np.int64)
+            for k in range(2)]
+    counts = classify_mix_contended(caps, HBM, mix, queueing_cycles=q)
+    assert counts[0]["miss_queued"] == 32
+    assert counts[1]["miss_queued"] == 32
+    # Scalar broadcast keeps working, and a wrong-length vector is loud.
+    classify_mix_contended(caps, HBM, mix, queueing_cycles=40.0)
+    with pytest.raises(ValueError, match="capture lists"):
+        classify_mix_contended(caps[:1], HBM, mix, queueing_cycles=q)
+
+
+def test_mix_classification_zero_queueing_collapses_to_classify():
+    """With queueing_cycles=0 the queued ladder collapses onto the base
+    one and each engine's counts reduce to its own plain classify()."""
+    rng = np.random.default_rng(7)
+    p = RSTParams(n=256, b=32, s=128, w=0x100000)
+    mix = EngineMix(((p, "read"), (p, "duplex")))
+    caps = []
+    for k in range(2):
+        anchors = LatencyModule.for_mix_entry(mix, k).anchors(HBM)
+        vals = np.array([anchors["hit"], anchors["closed"],
+                         anchors["miss"]], dtype=np.int64)
+        caps.append(rng.choice(vals, size=128))
+    counts = classify_mix_contended(caps, HBM, mix, queueing_cycles=0.0)
+    for k, cap in enumerate(caps):
+        plain = LatencyModule.for_mix_entry(mix, k).classify(cap, HBM)
+        for name in ("hit", "closed", "miss", "refresh"):
+            assert counts[k][name] == plain[name], (k, name)

@@ -257,6 +257,200 @@ def test_evaluate_grid_matches_numpy_per_point():
 
 
 # ---------------------------------------------------------------------------
+# Heterogeneous engine mixes (DESIGN.md §13): three-way on the mixed path.
+# One fixed case per mixed JAX lane ("mixfull" stackable / "mixnumpy"
+# ragged or oversized), every arbitration family, plus the uniform-mix
+# reduction onto the homogeneous lanes checked above.
+# ---------------------------------------------------------------------------
+
+from repro.core.engine_mix import EngineMix  # noqa: E402
+
+
+def _mk_mix(entries):
+    return EngineMix(tuple((RSTParams(**kw), op) for kw, op in entries))
+
+
+MIX_REGRESSION_CASES = [
+    # (id, spec, policy, [(params kwargs, op), ...], arbitration, bb)
+    # -- "mixfull" lane: equal counts and cmds/txn, small streams
+    ("hbm_rw_rr", "hbm", None,
+     [(dict(n=512, b=32, s=32, w=0x100000), "read"),
+      (dict(n=512, b=32, s=32, w=0x100000), "write")],
+     "round_robin", 1),
+    ("hbm_3r1w_burst4", "hbm", None,
+     [(dict(n=512, b=32, s=1024, w=0x100000), "read")] * 3
+     + [(dict(n=512, b=32, s=1024, w=0x100000), "write")],
+     "burst", 4),
+    ("hbm_duplex_excl_rbc", "hbm", "RBC",
+     [(dict(n=256, b=32, s=128, w=0x100000), "read"),
+      (dict(n=256, b=32, s=2048, w=8192), "duplex")],
+     "exclusive", 1),
+    ("ddr4_rw_burst8", "ddr4", None,
+     [(dict(n=512, b=64, s=64, w=0x100000), "read"),
+      (dict(n=512, b=64, s=2048, w=0x100000), "write")],
+     "burst", 8),
+    # -- "mixnumpy" lane: ragged counts / mismatched cmds-per-txn
+    ("hbm_ragged_counts", "hbm", None,
+     [(dict(n=1024, b=32, s=128, w=0x100000), "read"),
+      (dict(n=300, b=32, s=1024, w=8192), "write")],
+     "round_robin", 1),
+    ("hbm_ragged_cmds", "hbm", None,
+     [(dict(n=512, b=32, s=128, w=0x100000), "read"),
+      (dict(n=512, b=128, s=2048, w=0x100000), "write")],
+     "burst", 2),
+    ("hbm_big_stream", "hbm", None,
+     [(dict(n=1 << 15, b=32, s=1024, w=0x1000000), "read"),
+      (dict(n=1 << 15, b=32, s=1024, w=0x1000000), "write")],
+     "round_robin", 1),
+]
+
+
+def _mix_loop_ok(entries, spec_name):
+    spec = SPECS[spec_name]
+    cmds = sum(max(1, kw["b"] // spec.bus_bytes_per_cycle)
+               for kw, _ in entries)
+    return max(kw["n"] for kw, _ in entries) * cmds <= _LOOP_ORACLE_MAX_CMDS
+
+
+@pytest.mark.parametrize(
+    "spec_name,policy,entries,arbitration,burst_beats",
+    [c[1:] for c in MIX_REGRESSION_CASES],
+    ids=[c[0] for c in MIX_REGRESSION_CASES])
+def test_mix_three_way(spec_name, policy, entries, arbitration, burst_beats):
+    """Loop oracle <-> NumPy (1e-9) <-> JAX (REL_TOLERANCE) on genuinely
+    heterogeneous mixes across both mixed JAX lanes."""
+    spec = SPECS[spec_name]
+    mix = _mk_mix(entries)
+    m = get_mapping(spec, policy)
+    case = (f'    ("{spec_name}", {policy!r}, {entries!r}, '
+            f'"{arbitration}", {burst_beats}),')
+    numpy_res = vec.contended_throughput_mix(
+        mix, m, spec, arbitration=arbitration, burst_beats=burst_beats)
+    if _mix_loop_ok(entries, spec_name):
+        loop_res = ref.contended_throughput_mix(
+            mix, m, spec, arbitration=arbitration, burst_beats=burst_beats)
+        _assert_contention_close(loop_res, numpy_res, LOOP_NUMPY_REL,
+                                 "loop<->numpy", case)
+    jax_res = tj.contended_throughput_mix(
+        mix, m, spec, arbitration=arbitration, burst_beats=burst_beats)
+    _assert_contention_close(numpy_res, jax_res, NUMPY_JAX_REL,
+                             "numpy<->jax", case)
+    assert jax_res.detail["op_switch_cycles"] == pytest.approx(
+        numpy_res.detail["op_switch_cycles"], rel=NUMPY_JAX_REL, abs=1e-9)
+
+
+def test_mix_regression_cases_cover_both_mix_lanes():
+    """The fixed mixed cases keep exercising both _route mix lanes even
+    if the stackability rules or size thresholds move."""
+    lanes = set()
+    for _id, spec_name, policy, entries, arb, bb in MIX_REGRESSION_CASES:
+        spec = SPECS[spec_name]
+        m = get_mapping(spec, policy)
+        unit = (_mk_mix(entries), m, arb, bb)
+        lanes.add(tj._route(tj._mix_row(spec, unit)))
+    assert lanes == {"mixfull", "mixnumpy"}, lanes
+
+
+def test_uniform_mix_routes_to_homogeneous_lanes():
+    """A uniform EngineMix never reaches the mixed lanes: the JAX entry
+    point delegates to the homogeneous contended_throughput path
+    bit-identically (the tentpole reduction, here on the JAX tier)."""
+    p = RSTParams(n=512, b=32, s=128, w=0x1000000)
+    m = get_mapping(HBM)
+    mix = EngineMix.uniform(p, "read", 4)
+    via_mix = tj.contended_throughput_mix(mix, m, HBM)
+    homo = tj.contended_throughput(p, m, HBM, num_engines=4)
+    assert via_mix.aggregate_gbps == homo.aggregate_gbps   # bit-exact
+    assert via_mix.bound == homo.bound
+    assert via_mix.mix is None
+    # ... and both agree with the NumPy model within tolerance.
+    want = vec.contended_throughput(p, m, HBM, num_engines=4)
+    assert via_mix.aggregate_gbps == pytest.approx(want.aggregate_gbps,
+                                                   rel=NUMPY_JAX_REL)
+
+
+def test_evaluate_points_mixed_requests_match_numpy():
+    """The grid entry point accepts the 9-element mixed request row and
+    matches the NumPy mixed model per point, interleaved freely with
+    homogeneous rows."""
+    spec = HBM
+    p0 = RSTParams(n=512, b=32, s=128, w=0x1000000)
+    p1 = RSTParams(n=512, b=32, s=2048, w=8192)
+    mix = EngineMix(((p0, "read"), (p1, "write")))
+    uni = EngineMix.uniform(p0, "read", 2)
+    reqs = [
+        ("cont", p0, None, "read", 2, "round_robin", 1, "same_channel"),
+        ("cont", p0, None, "read", len(mix), "round_robin", 1,
+         "same_channel", mix),
+        ("cont", p1, "RBC", "write", len(mix), "burst", 2,
+         "same_channel", mix),
+        ("cont", p0, None, "read", len(uni), "round_robin", 1,
+         "same_channel", uni),
+    ]
+    got = tj.evaluate_points(spec, reqs)
+    for req, res in zip(reqs, got):
+        pol = req[2]
+        m = get_mapping(spec, pol)
+        if len(req) > 8 and req[8] is not None:
+            want = vec.contended_throughput_mix(
+                req[8], m, spec, arbitration=req[5], burst_beats=req[6])
+        else:
+            want = vec.contended_throughput(
+                req[1], m, spec, num_engines=req[4], op=req[3],
+                arbitration=req[5], burst_beats=req[6])
+        assert res.aggregate_gbps == pytest.approx(
+            want.aggregate_gbps, rel=NUMPY_JAX_REL), req
+        assert res.bound == want.bound, req
+
+
+@st.composite
+def mix_tuples(draw):
+    """Genuinely mixed draws: 2..4 engines, at least two distinct ops,
+    pow2 tuples per engine (ragged allowed — exercises both mix lanes)."""
+    spec_name = draw(st.sampled_from(["hbm", "ddr4"]))
+    spec = SPECS[spec_name]
+    n_eng = draw(st.integers(2, 4))
+    ops = draw(st.lists(st.sampled_from(["read", "write", "duplex"]),
+                        min_size=n_eng, max_size=n_eng)
+               .filter(lambda o: len(set(o)) > 1))
+    entries = []
+    for op in ops:
+        b = draw(pow2(5, 7).map(lambda v: max(v, spec.min_burst)))
+        we = draw(pow2(13, 20))
+        s = draw(pow2(5, 12).map(lambda v: min(v, we)))
+        n = draw(st.integers(64, 768))
+        entries.append((dict(n=n, b=b, s=s, w=we), op))
+    arbitration, burst_beats = draw(st.sampled_from(
+        [("round_robin", 1), ("burst", 2), ("burst", 4), ("burst", 8),
+         ("exclusive", 1)]))
+    return (spec_name, entries, arbitration, burst_beats)
+
+
+@given(case=mix_tuples())
+@settings(max_examples=15, deadline=None)
+def test_fuzz_mix_three_way(case):
+    """Fuzzed heterogeneous mixes agree loop<->NumPy (1e-9) and
+    NumPy<->JAX (REL_TOLERANCE); failures print a paste-ready row."""
+    spec_name, entries, arbitration, burst_beats = case
+    spec = SPECS[spec_name]
+    mix = _mk_mix(entries)
+    m = get_mapping(spec)
+    case_row = (f'    ("fuzz", "{spec_name}", None, {entries!r}, '
+                f'"{arbitration}", {burst_beats}),')
+    numpy_res = vec.contended_throughput_mix(
+        mix, m, spec, arbitration=arbitration, burst_beats=burst_beats)
+    if _mix_loop_ok(entries, spec_name):
+        loop_res = ref.contended_throughput_mix(
+            mix, m, spec, arbitration=arbitration, burst_beats=burst_beats)
+        _assert_contention_close(loop_res, numpy_res, LOOP_NUMPY_REL,
+                                 "loop<->numpy", case_row)
+    jax_res = tj.contended_throughput_mix(
+        mix, m, spec, arbitration=arbitration, burst_beats=burst_beats)
+    _assert_contention_close(numpy_res, jax_res, NUMPY_JAX_REL,
+                             "numpy<->jax", case_row)
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis fuzz.  Strategies draw pow2 RST tuples (Eq. 1's closed form
 # only holds for pow2 S <= W), every op/arbitration family, and engine
 # counts 1..8; example counts stay small because each JAX point compiles

@@ -401,6 +401,132 @@ def test_derived_quantities_within_one_percent():
         assert got == pytest.approx(want, rel=0.01), (spec.name, policy, kw)
 
 
+# ---------------------------------------------------------------------------
+# Heterogeneous engine mixes (DESIGN.md §13): vectorized vs per-grant loops
+# ---------------------------------------------------------------------------
+
+from repro.core.engine_mix import EngineMix  # noqa: E402
+
+
+def _mk_mix(entries):
+    return EngineMix(tuple((RSTParams(**kw), op) for kw, op in entries))
+
+
+MIX_CASES = [
+    # (id, spec, policy, [(params kwargs, op), ...])
+    ("hbm_read_write_seq", HBM, None,
+     [(dict(n=1024, b=32, s=32, w=0x100000), "read"),
+      (dict(n=1024, b=32, s=32, w=0x100000), "write")]),
+    ("hbm_3r1w_strided", HBM, None,
+     [(dict(n=1024, b=32, s=1024, w=0x100000), "read")] * 3
+     + [(dict(n=1024, b=32, s=1024, w=0x100000), "write")]),
+    ("hbm_duplex_spiked_rbc", HBM, "RBC",
+     [(dict(n=512, b=32, s=128, w=0x100000), "read"),
+      (dict(n=512, b=32, s=128, w=0x100000), "read"),
+      (dict(n=512, b=32, s=2048, w=0x100000), "write"),
+      (dict(n=512, b=32, s=2048, w=0x100000), "duplex")]),
+    ("hbm_ragged_tuples", HBM, None,
+     [(dict(n=1024, b=32, s=128, w=0x100000), "read"),
+      (dict(n=300, b=64, s=4096, w=8192), "write"),
+      (dict(n=512, b=32, s=1024, w=0x1000000), "read")]),
+    ("ddr4_balanced", DDR4, None,
+     [(dict(n=512, b=64, s=64, w=0x100000), "read"),
+      (dict(n=512, b=64, s=64, w=0x100000), "write"),
+      (dict(n=512, b=64, s=2048, w=0x100000), "read"),
+      (dict(n=512, b=64, s=2048, w=0x100000), "write")]),
+]
+
+
+@pytest.mark.parametrize("arbitration,burst_beats", ARBITRATION_CASES,
+                         ids=ARB_IDS)
+@pytest.mark.parametrize("spec,policy,entries",
+                         [c[1:] for c in MIX_CASES],
+                         ids=[c[0] for c in MIX_CASES])
+def test_contended_mix_parity(spec, policy, entries, arbitration,
+                              burst_beats):
+    """The vectorized mixed-engine model matches the per-grant loop
+    oracle at 1e-9 on every float that feeds results (the ISSUE bar),
+    under every arbitration policy, including ragged per-engine tuples
+    where grant rotations drop exhausted engines."""
+    mix = _mk_mix(entries)
+    m = get_mapping(spec, policy)
+    got = vec.contended_throughput_mix(mix, m, spec,
+                                       arbitration=arbitration,
+                                       burst_beats=burst_beats)
+    want = ref.contended_throughput_mix(mix, m, spec,
+                                        arbitration=arbitration,
+                                        burst_beats=burst_beats)
+    assert got.aggregate_gbps == pytest.approx(want.aggregate_gbps, rel=1e-9)
+    assert got.bound == want.bound
+    assert got.queueing_delay_cycles == pytest.approx(
+        want.queueing_delay_cycles, rel=1e-9)
+    assert got.detail["total_acts"] == want.detail["total_acts"]
+    assert got.detail["txns"] == want.detail["txns"]
+    assert got.detail["op_switch_cycles"] == pytest.approx(
+        want.detail["op_switch_cycles"], rel=1e-9)
+    assert got.detail["grant_head_wait_cycles"] == pytest.approx(
+        want.detail["grant_head_wait_cycles"], rel=1e-9)
+    for bound in ("bus/ccd", "bank", "faw"):
+        assert got.detail[bound] == pytest.approx(want.detail[bound],
+                                                  rel=1e-9), bound
+
+
+@pytest.mark.parametrize("arbitration,burst_beats", ARBITRATION_CASES,
+                         ids=ARB_IDS)
+@pytest.mark.parametrize("op", ["read", "write", "duplex"])
+def test_uniform_mix_bit_identical_to_homogeneous(op, arbitration,
+                                                  burst_beats):
+    """The ISSUE reduction bar: an all-identical EngineMix IS the
+    homogeneous path — bit-identical floats, same bound, mix=None on the
+    result so memo keys built from it stay the homogeneous spelling."""
+    p = RSTParams(n=2048, b=32, s=128, w=0x1000000)
+    m = get_mapping(HBM)
+    mix = EngineMix.uniform(p, op, 4)
+    via_mix = vec.contended_throughput_mix(mix, m, HBM,
+                                           arbitration=arbitration,
+                                           burst_beats=burst_beats)
+    homo = vec.contended_throughput(p, m, HBM, num_engines=4, op=op,
+                                    arbitration=arbitration,
+                                    burst_beats=burst_beats)
+    assert via_mix.aggregate_gbps == homo.aggregate_gbps   # bit-exact
+    assert via_mix.bound == homo.bound
+    assert via_mix.queueing_delay_cycles == homo.queueing_delay_cycles
+    assert via_mix.mix is None
+    for key, val in homo.detail.items():
+        assert via_mix.detail[key] == val, key
+
+
+def test_mixed_uniform_params_formula_reduction():
+    """A mix whose entries share one (params, op) but were built as a
+    literal tuple (not EngineMix.uniform) still reduces — uniformity is a
+    property of the entries, not the constructor — and the reference
+    loops agree with the homogeneous reference bit-exactly too."""
+    kw = dict(n=1024, b=32, s=128, w=0x1000000)
+    mix = _mk_mix([(kw, "read")] * 3)
+    m = get_mapping(HBM)
+    assert mix.uniform_entry() is not None
+    want = ref.contended_throughput(RSTParams(**kw), m, HBM, num_engines=3)
+    got = ref.contended_throughput_mix(mix, m, HBM)
+    assert got.aggregate_gbps == want.aggregate_gbps
+    assert got.bound == want.bound
+
+
+def test_mix_op_switch_cycles_zero_for_same_direction():
+    """Grant-boundary bus reversals only appear between engines of
+    different directions: an all-read ragged mix pays none, and adding a
+    writer makes the term strictly positive."""
+    m = get_mapping(HBM)
+    reads = _mk_mix([(dict(n=512, b=32, s=128, w=0x100000), "read"),
+                     (dict(n=512, b=32, s=2048, w=0x100000), "read"),
+                     (dict(n=300, b=32, s=1024, w=8192), "read")])
+    res = vec.contended_throughput_mix(reads, m, HBM)
+    assert res.detail["op_switch_cycles"] == 0.0
+    rw = _mk_mix([(dict(n=512, b=32, s=128, w=0x100000), "read"),
+                  (dict(n=512, b=32, s=2048, w=0x100000), "write")])
+    assert vec.contended_throughput_mix(
+        rw, m, HBM).detail["op_switch_cycles"] > 0.0
+
+
 def test_reference_module_is_loop_based():
     """Guard against "optimizing" the golden reference: it must keep the
     per-transaction loop the parity tests derive their authority from."""

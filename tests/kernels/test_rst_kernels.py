@@ -316,3 +316,103 @@ class TestContendedKernel:
             p, num_engines=2, arbitration="exclusive", grid_txns=16)
         np.testing.assert_allclose(huge.checksum, ex.checksum, rtol=1e-5)
         assert huge.bytes_moved == ex.bytes_moved
+
+
+class TestMixKernel:
+    """Heterogeneous engine mixes (rst_contend_mix_read, DESIGN.md §13):
+    per-engine scalar-prefetch operand table vs a numpy replay."""
+
+    def _mix(self, entries):
+        from repro.core.engine_mix import EngineMix
+        return EngineMix(tuple(entries))
+
+    def _oracle(self, buf, rows, grid, burst_rows=8):
+        # Sum of every tile each engine reads along its own (stride,
+        # wset, base) walk — grant-interleave invariant, like the
+        # homogeneous oracle above.
+        expect = np.zeros((burst_rows, LANE), dtype=np.float64)
+        b = np.asarray(buf, dtype=np.float64)
+        for stride, wset, base, n in rows:
+            for t in range(min(n, grid)):
+                blk = base + (t * stride) % wset
+                expect += b[blk * burst_rows:(blk + 1) * burst_rows, :]
+        return expect.astype(np.float32)
+
+    @pytest.mark.parametrize("arbitration,burst_beats",
+                             [("round_robin", 1), ("burst", 4),
+                              ("exclusive", 1)])
+    def test_checksum_vs_oracle(self, arbitration, burst_beats):
+        # Three readers with different strides, window sets and stream
+        # lengths — genuinely heterogeneous, ragged counts included.
+        mix = self._mix([
+            (RSTParams(n=12, b=4096, s=2 * 4096, w=8 * 4096), "read"),
+            (RSTParams(n=9, b=4096, s=4096, w=4 * 4096), "read"),
+            (RSTParams(n=16, b=4096, s=8 * 4096, w=16 * 4096), "read"),
+        ])
+        grid = 16
+        s = ops.measure_contended_mix_bandwidth(
+            mix, arbitration=arbitration, burst_beats=burst_beats,
+            grid_txns=grid)
+        rows, _ = ops._mix_block_rows(mix, jnp.float32, 8, grid)
+        buf = ops.make_mix_working_buffer(mix, jnp.float32, grid_txns=grid)
+        np.testing.assert_allclose(
+            s.checksum, self._oracle(buf, rows, grid), rtol=1e-5)
+        assert s.bytes_moved == sum(min(p.n, grid) * p.b
+                                    for p in mix.params)
+
+    def test_uniform_mix_delegates_bit_identically(self):
+        # The tentpole reduction at the kernel layer: an all-identical
+        # mix IS measure_contended_bandwidth — same kernel, same floats.
+        p = RSTParams(n=12, b=4096, s=2 * 4096, w=8 * 4096)
+        mix = self._mix([(p, "read")] * 3)
+        via_mix = ops.measure_contended_mix_bandwidth(mix, grid_txns=16)
+        homo = ops.measure_contended_bandwidth(p, num_engines=3,
+                                               grid_txns=16)
+        assert np.array_equal(via_mix.checksum, homo.checksum)
+        assert via_mix.bytes_moved == homo.bytes_moved
+
+    def test_operand_table_layout(self):
+        # int32[N+1, 4]: header row (engines, grant beats, 0, 0) then one
+        # (stride_blocks, wset_blocks, base_block, n_txns) row per engine
+        # with consecutive window offsets folded into the bases.
+        mix = self._mix([
+            (RSTParams(n=8, b=4096, s=2 * 4096, w=8 * 4096), "read"),
+            (RSTParams(n=6, b=4096, s=4096, w=4 * 4096), "read"),
+        ])
+        table = ops.mix_params_operand(mix, jnp.float32, grid_txns=16,
+                                       burst_beats=4)
+        assert table.shape == (3, 4)
+        assert table.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(table),
+                                      [[2, 4, 0, 0],
+                                       [2, 8, 0, 8],
+                                       [1, 4, 8, 6]])
+
+    def test_non_read_entries_are_routed_away(self):
+        p = RSTParams(n=8, b=4096, s=4096, w=4 * 4096)
+        mix = self._mix([(p, "read"), (p, "write")])
+        with pytest.raises(ValueError, match="DESIGN.md"):
+            ops.measure_contended_mix_bandwidth(mix)
+        with pytest.raises(ValueError, match="DESIGN.md"):
+            ops.mix_params_operand(mix, jnp.float32)
+
+    def test_mismatched_burst_names_the_entry(self):
+        mix = self._mix([
+            (RSTParams(n=8, b=4096, s=4096, w=4 * 4096), "read"),
+            (RSTParams(n=8, b=8192, s=8192, w=8 * 8192), "read"),
+        ])
+        with pytest.raises(ValueError, match="entry 1"):
+            ops.mix_params_operand(mix, jnp.float32)
+
+    def test_wired_into_pallas_backend(self):
+        from repro.core import HBM, get_backend, get_mapping
+        mix = self._mix([
+            (RSTParams(n=8, b=4096, s=4096, w=4 * 4096), "read"),
+            (RSTParams(n=8, b=4096, s=2 * 4096, w=8 * 4096), "read"),
+        ])
+        res = get_backend("pallas").contended_throughput(
+            HBM, mix.entries[0][0], get_mapping(HBM),
+            num_engines=len(mix), mix=mix)
+        assert res.bound == "measured"
+        assert res.mix == mix
+        assert res.num_engines == 2
