@@ -352,6 +352,54 @@ def bench_oracle_autotune():
              f"seq_eff={eff:.3f};kv_layout={'/'.join(lay.dims)}")]
 
 
+def bench_roofline(quick):
+    """Measured-envelope rungs: the empirical roofline per spec."""
+    from repro.core import spec_by_name
+    from repro.core.roofline_empirical import measure_envelope
+
+    rows = []
+    for name in BENCH_SPEC_NAMES:
+        spec = spec_by_name(name)
+        env, dt = _timed(lambda: measure_envelope(spec, quick=quick))
+        tiers = ";".join(
+            f"{''.join(w[0] for w in plc.split('_'))}"
+            f"={env.placement_gbps[plc]:.2f}"
+            for plc in ("same_channel", "same_switch", "cross_switch"))
+        rows.append((f"roofline_envelope_{name}", dt,
+                     f"peak_gbps={env.peak_gbps:.2f};"
+                     f"knee_ai={env.knee_ai():.0f};{tiers}"))
+    return rows
+
+
+def bench_tune(quick):
+    """Layout-autotune rungs, routed through the CampaignService so the
+    rung exercises the dedup/coalescing path the tuner ships with.
+
+    Asserts the service invariants on every run: responses ok, reports
+    carry a measured winner, duplicate requests coalesce, and the search
+    measured no more configs than its candidate space."""
+    from repro.service import CampaignService, ExperimentRequest
+
+    svc = CampaignService("sim", "sim")
+    rows = []
+    for name in BENCH_SPEC_NAMES:
+        req = ExperimentRequest.make("layout_autotune", name, quick=quick)
+        resp, dt = _timed(lambda: svc.submit(req))
+        assert resp.ok, f"layout_autotune[{name}] failed: {resp.error}"
+        rep = resp.result
+        assert rep.evaluations <= rep.candidates
+        rows.append((f"layout_autotune_{name}", dt,
+                     f"winner={rep.winner.describe()};"
+                     f"gbps={rep.winner_gbps:.2f};"
+                     f"evals={rep.evaluations}/{rep.candidates};"
+                     f"nominal={rep.nominal_fraction:.2f}"))
+        dup, dup_dt = _timed(lambda: svc.submit(req))
+        assert dup.coalesced and dup.result == rep
+        rows.append((f"layout_autotune_{name}_dedup", dup_dt,
+                     "coalesced=True"))
+    return rows
+
+
 def parse_fault_rates(text):
     """Parse the --fault-rate comma list; exits cleanly on bad values."""
     rates = []
@@ -560,6 +608,15 @@ def main() -> None:
                          "vs jit vs jit+vmap vs sharded, DESIGN.md §12) "
                          "instead of the registry benches; --json defaults "
                          "to BENCH_grid.json")
+    ap.add_argument("--roofline", action="store_true",
+                    help="run the measured-envelope rungs "
+                         "(core/roofline_empirical.py) instead of the "
+                         "registry benches; --json defaults to "
+                         "BENCH_roofline.json")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the layout-autotune rungs through the "
+                         "campaign service instead of the registry "
+                         "benches; --json defaults to BENCH_roofline.json")
     ap.add_argument("--fault-rate", metavar="RATES", default=None,
                     help="comma list of injected fault rates in [0, 1] for "
                          "--service (default: 0,0.01,0.1)")
@@ -572,12 +629,16 @@ def main() -> None:
             ap.error("--fault-rate only applies with --service")
         if args.qps_target is not None:
             ap.error("--qps-target only applies with --service")
-    if sum((args.lint_report, args.service, args.grid)) > 1:
-        ap.error("--lint-report, --service and --grid are separate modes")
+    if sum((args.lint_report, args.service, args.grid, args.roofline,
+            args.tune)) > 1:
+        ap.error("--lint-report, --service, --grid, --roofline and --tune "
+                 "are separate modes")
     if args.lint_report and args.json is None:
         args.json = "BENCH_lint.json"
     if args.grid and args.json is None:
         args.json = "BENCH_grid.json"
+    if (args.roofline or args.tune) and args.json is None:
+        args.json = "BENCH_roofline.json"
     fault_rates = parse_fault_rates(args.fault_rate) \
         if args.fault_rate is not None else (0.0, 0.01, 0.1)
     if args.qps_target is not None and args.qps_target <= 0:
@@ -613,6 +674,10 @@ def main() -> None:
         suites = [
             lambda: bench_service(q, fault_rates, args.qps_target),
         ]
+    elif args.roofline:
+        suites = [lambda: bench_roofline(q)]
+    elif args.tune:
+        suites = [lambda: bench_tune(q)]
     else:
         suites = [
             lambda: bench_experiments(q, args.experiments, args.engines,
@@ -641,6 +706,8 @@ def main() -> None:
             "benchmark": ("shuhai-lint" if args.lint_report
                           else "shuhai-campaign-service" if args.service
                           else "shuhai-grid" if args.grid
+                          else "shuhai-roofline" if args.roofline
+                          else "shuhai-tune" if args.tune
                           else "shuhai-campaign"),
             "quick": q,
             "unix_time": time.time(),

@@ -31,12 +31,18 @@ def default_root() -> Path:
 
 
 def _run_cache_keys(root: Path) -> List[Finding]:
-    return cache_keys.check_cache_keys(
+    findings = cache_keys.check_cache_keys(
         root / "src/repro/core/sweep.py",
         root / "src/repro/service/campaign.py",
         root / "src/repro/core/timing_model.py",
         root / "src/repro/core/engine_mix.py",
         repo_root=root)
+    # The layout tuner keeps its own probe-score cache; its keys must
+    # cover the same contention fields as the Sweep memo.
+    findings.extend(cache_keys.check_sweep_cache_keys(
+        root / "src/repro/core/autotune.py", repo_root=root,
+        sweep_class="LayoutTuner", point_class="LayoutConfig"))
+    return findings
 
 
 def _run_oracle_parity(root: Path) -> List[Finding]:
@@ -49,6 +55,10 @@ def _run_oracle_parity(root: Path) -> List[Finding]:
         root / "src/repro/core/timing_jax.py",
         root / "src/repro/core/timing_model.py",
         root / "tests/core/test_timing_differential.py",
+        repo_root=root))
+    findings.extend(oracle_parity.check_envelope_coverage(
+        root / "src/repro/core/roofline_empirical.py",
+        root / "tests/core/test_roofline_envelope.py",
         repo_root=root))
     return findings
 
@@ -84,8 +94,11 @@ def run_analysis(root: Path) -> List[Finding]:
         "src/repro/core/_timing_reference.py",
         "src/repro/service/campaign.py",
         "src/repro/kernels/ops.py",
+        "src/repro/core/autotune.py",
+        "src/repro/core/roofline_empirical.py",
         "tests/core/test_timing_parity.py",
         "tests/core/test_timing_differential.py",
+        "tests/core/test_roofline_envelope.py",
     )
     missing = [rel for rel in required if not (root / rel).exists()]
     if missing:

@@ -24,7 +24,7 @@ import ast
 from pathlib import Path
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.analysis.astutil import parse_module, public_functions
+from repro.analysis.astutil import find_class, parse_module, public_functions
 from repro.analysis.findings import Finding
 
 # vectorized public function -> reference oracles that must ALL exist.
@@ -290,4 +290,89 @@ def check_jax_parity(jax_path: Path, timing_path: Path,
                          f"the function no longer exists (exempt because: "
                          f"{reason})"),
                 hint="drop the entry from JAX_EXEMPT"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# REPRO-O005 — envelope-math coverage of the measured roofline.
+#
+# ``core/roofline_empirical.py`` is pure reduction math (no loop-oracle
+# split to pin), so its trust story is a designated coverage tier
+# instead: every public module-level function, and every public method
+# of ``RooflineEnvelope``, must be exercised by some test function of
+# the envelope test module.  Untested closed-form roofline math is how
+# a wrong knee ships in a report nobody can falsify.
+# ---------------------------------------------------------------------------
+
+# Public envelope names that legitimately need no coverage in the
+# designated test module, with the reason (surfaced if stale).
+ENVELOPE_EXEMPT: Dict[str, str] = {}
+
+ENVELOPE_CLASS = "RooflineEnvelope"
+
+
+def check_envelope_coverage(envelope_path: Path, coverage_test_path: Path, *,
+                            repo_root: Optional[Path] = None
+                            ) -> List[Finding]:
+    def rel(p: Path) -> str:
+        if repo_root is not None:
+            try:
+                return str(p.relative_to(repo_root))
+            except ValueError:
+                pass
+        return str(p)
+
+    env_tree = parse_module(envelope_path)
+    test_tree = parse_module(coverage_test_path)
+    findings: List[Finding] = []
+
+    required: Dict[str, int] = {
+        fn.name: fn.lineno for fn in public_functions(env_tree)}
+    env_cls = find_class(env_tree, ENVELOPE_CLASS)
+    if env_cls is None:
+        findings.append(Finding(
+            invariant="REPRO-O005", path=rel(envelope_path), line=1,
+            message=(f"envelope class {ENVELOPE_CLASS} not found in the "
+                     f"roofline module"),
+            hint="keep the public envelope dataclass where the analyzer "
+                 "can see it"))
+        return findings
+    for node in env_cls.body:
+        if isinstance(node, ast.FunctionDef) \
+                and not node.name.startswith("_"):
+            required[node.name] = node.lineno
+
+    # Anything a test function touches counts: bare names (from-imports)
+    # and attribute access through module aliases or envelope instances.
+    used: Set[str] = set()
+    for fn in ast.walk(test_tree):
+        if not (isinstance(fn, ast.FunctionDef)
+                and fn.name.startswith("test_")):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Attribute):
+                used.add(node.attr)
+            elif isinstance(node, ast.Name):
+                used.add(node.id)
+
+    for name, lineno in sorted(required.items(), key=lambda t: t[1]):
+        if name in ENVELOPE_EXEMPT or name in used:
+            continue
+        findings.append(Finding(
+            invariant="REPRO-O005", path=rel(envelope_path), line=lineno,
+            message=(f"public envelope function/method {name}() is not "
+                     f"referenced by any test in "
+                     f"{rel(coverage_test_path)}"),
+            hint=(f"exercise {name}() in the envelope coverage module (or "
+                  f"record an exemption with its reason in "
+                  f"analysis.oracle_parity.ENVELOPE_EXEMPT)")))
+
+    for name, reason in ENVELOPE_EXEMPT.items():
+        if name not in required:
+            findings.append(Finding(
+                invariant="REPRO-O005", path=rel(envelope_path), line=1,
+                message=(f"envelope coverage exemption for {name}() is "
+                         f"stale — the name no longer exists (exempt "
+                         f"because: {reason})"),
+                hint="drop the entry from ENVELOPE_EXEMPT"))
     return findings

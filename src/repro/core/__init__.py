@@ -26,8 +26,10 @@ Public surface:
 """
 from repro.core.address_mapping import (AddressMapping, get_mapping,
                                         policies_for, register_policies)
-from repro.core.autotune import (LayoutCandidate, advise_microbatch,
-                                 advise_remat, choose_layout, score_layouts)
+from repro.core.autotune import (LayoutCandidate, LayoutConfig, LayoutTuner,
+                                 TuneReport, TuneRound, advise_microbatch,
+                                 advise_remat, choose_layout, score_layouts,
+                                 tune_layout)
 from repro.core.bench_host import ShuhaiCampaign, default_campaigns
 from repro.core.channels import (CrossingLatencyTable, DDR4Topology,
                                  HBMTopology, SwitchTopology,
@@ -40,11 +42,16 @@ from repro.core.experiments import (Experiment, all_experiments,
                                     experiments_for, get_experiment,
                                     register_experiment, run_experiment)
 from repro.core.hwspec import (DDR3, DDR4, HBM, HBM3, TPU_V5E, ChipSpec,
-                               MemorySpec, available_specs, register_spec,
+                               MemorySpec, available_chips, available_specs,
+                               chip_by_name, register_chip, register_spec,
                                spec_by_name)
 from repro.core.latency import LatencyModule
 from repro.core.oracle import AccessPattern, MemoryOracle
 from repro.core.params import EngineRegisters, RSTParams
+from repro.core.roofline_empirical import (EnvelopePoint, RooflineEnvelope,
+                                           build_envelope,
+                                           config_ceiling_gbps,
+                                           measure_envelope)
 from repro.core.rst import addresses_jnp, addresses_np, block_params
 from repro.core.sweep import Sweep, SweepPoint, SweepResult
 from repro.core.switch import PLACEMENTS, SwitchModel
@@ -57,8 +64,12 @@ from repro.core.timing_model import (ARBITRATION_POLICIES, ContentionResult,
 
 __all__ = [
     "AddressMapping", "get_mapping", "policies_for", "register_policies",
-    "LayoutCandidate", "advise_microbatch", "advise_remat", "choose_layout",
-    "score_layouts", "ShuhaiCampaign", "default_campaigns",
+    "LayoutCandidate", "LayoutConfig", "LayoutTuner", "TuneReport",
+    "TuneRound", "advise_microbatch", "advise_remat", "choose_layout",
+    "score_layouts", "tune_layout",
+    "EnvelopePoint", "RooflineEnvelope", "build_envelope",
+    "config_ceiling_gbps", "measure_envelope",
+    "ShuhaiCampaign", "default_campaigns",
     "CrossingLatencyTable", "DDR4Topology", "HBMTopology", "SwitchTopology",
     "available_topologies", "flat_topology", "register_topology",
     "topology_for",
@@ -67,7 +78,8 @@ __all__ = [
     "Experiment", "all_experiments", "experiments_for", "get_experiment",
     "register_experiment", "run_experiment",
     "DDR3", "DDR4", "HBM", "HBM3", "TPU_V5E", "ChipSpec", "MemorySpec",
-    "available_specs", "register_spec", "spec_by_name",
+    "available_chips", "available_specs", "chip_by_name", "register_chip",
+    "register_spec", "spec_by_name",
     "LatencyModule", "AccessPattern", "MemoryOracle",
     "EngineRegisters", "RSTParams",
     "addresses_jnp", "addresses_np", "block_params",

@@ -382,8 +382,34 @@ TPU_V5E = ChipSpec(
 )
 
 
+_CHIP_REGISTRY: Dict[str, ChipSpec] = {}
+
+
+def register_chip(chip: ChipSpec, *, override: bool = False) -> ChipSpec:
+    """Register an accelerator chip for name-based roofline lookups.
+
+    Mirrors `register_spec`: roofline consumers (`launch/roofline.py`,
+    `core/roofline_empirical.py`) resolve compute peaks through this
+    registry instead of hardcoding a part.
+    """
+    if chip.name in _CHIP_REGISTRY and not override:
+        raise ValueError(
+            f"chip {chip.name!r} already registered; pass override=True")
+    _CHIP_REGISTRY[chip.name] = chip
+    return chip
+
+
+def available_chips() -> List[str]:
+    """Names of every registered chip, registration order."""
+    return list(_CHIP_REGISTRY)
+
+
 def chip_by_name(name: str) -> ChipSpec:
-    chips = {"tpu_v5e": TPU_V5E}
-    if name not in chips:
-        raise ValueError(f"unknown chip {name!r}; have {list(chips)}")
-    return chips[name]
+    chip = _CHIP_REGISTRY.get(name)
+    if chip is None:
+        raise ValueError(
+            f"unknown chip {name!r}; have {available_chips()}")
+    return chip
+
+
+register_chip(TPU_V5E)

@@ -1,6 +1,9 @@
-"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline reports: HLO-analytic cells and the measured envelope.
 
-Per (arch x shape x mesh) cell, from the recorded compile artifacts:
+Two modes share one report schema (`REPORT_FIELDS` / `report_markdown`):
+
+**Analytic** (default) — per (arch x shape x mesh) cell, from first
+principles over the dry-run artifacts:
 
   compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
   memory term     = HLO_bytes / HBM_bw                 (per chip)
@@ -11,9 +14,17 @@ divide by per-chip peaks directly.  MODEL_FLOPS uses the 6·N·D (train) /
 2·N·D (inference) convention with N = active parameters, and the ratio
 MODEL_FLOPS / (HLO_FLOPs x chips) exposes remat/redundancy waste.
 
+**Measured** (``--measured``) — the ERT-style empirical roofline from
+`core/roofline_empirical.py`: sweep-measured bandwidth tiers per
+placement, with knees computed against measured rates instead of the
+datasheet.  Chip compute peaks resolve through the `core/hwspec.py`
+chip registry (``--chip``), never a hardcoded part.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.roofline \
       --in-dir experiments/dryrun --out experiments/roofline.md
+  PYTHONPATH=src python -m repro.launch.roofline \
+      --measured --spec hbm --backend sim --chip tpu_v5e
 """
 from __future__ import annotations
 
@@ -22,13 +33,15 @@ import glob
 import json
 import math
 import os
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.configs import get_config
-from repro.core.hwspec import TPU_V5E
+from repro.core.hwspec import ChipSpec, chip_by_name, spec_by_name
 from repro.launch.shapes import SHAPES
 from repro.models.common import param_count
 from repro.models.registry import build
+
+DEFAULT_CHIP = "tpu_v5e"
 
 
 def active_params(arch: str) -> float:
@@ -178,11 +191,13 @@ def analytic_terms(arch: str, shape_name: str, mesh: str,
     return {"flops_dev": flops_dev, "hbm_dev": hbm_dev, "coll_dev": coll_dev}
 
 
-def analyze_cell(rec: Dict) -> Optional[Dict]:
+def analyze_cell(rec: Dict, chip: Optional[ChipSpec] = None
+                 ) -> Optional[Dict]:
     if rec.get("status") != "OK":
         return None
     chips = 512 if rec["mesh"] == "2x16x16" else 256
-    chip = TPU_V5E
+    if chip is None:
+        chip = chip_by_name(DEFAULT_CHIP)
     t = analytic_terms(rec["arch"], rec["shape"], rec["mesh"],
                        rec.get("n_micro", 1))
 
@@ -191,7 +206,7 @@ def analyze_cell(rec: Dict) -> Optional[Dict]:
     collective_s = t["coll_dev"] / chip.ici_link_bandwidth
     terms = {"compute_s": compute_s, "memory_s": memory_s,
              "collective_s": collective_s}
-    dominant = max(terms, key=terms.get)
+    dominant = max(terms, key=lambda k: terms[k])
     bound_s = max(terms.values())
 
     mf = model_flops(rec["arch"], rec["shape"])
@@ -204,6 +219,7 @@ def analyze_cell(rec: Dict) -> Optional[Dict]:
 
     return {
         **{k: rec[k] for k in ("arch", "shape", "mesh", "kind")},
+        "chip": chip.name,
         "chips": chips,
         "flops_per_dev": t["flops_dev"],
         "hbm_bytes_per_dev": t["hbm_dev"],
@@ -269,18 +285,105 @@ def to_markdown(rows: List[Dict], skips: List[Dict]) -> str:
     return "\n".join(out)
 
 
-def main():
+# ---------------------------------------------------------------------------
+# Shared report schema — the analytic and measured modes render the same
+# columns so reports can sit side by side in one document.
+
+REPORT_FIELDS = ("source", "cell", "bw_gbps", "knee_ai", "frac_of_nominal",
+                 "bound")
+
+
+def envelope_report_rows(env: Any) -> List[Dict[str, Any]]:
+    """A `RooflineEnvelope` as shared-schema rows: one per placement tier
+    (per-engine) plus the aggregate peak."""
+    rows = []
+    for plc, gbps in env.placement_gbps.items():
+        rows.append({
+            "source": "measured",
+            "cell": f"{env.spec_name}/{plc}/per-engine",
+            "bw_gbps": gbps,
+            "knee_ai": env.knee_ai(gbps=gbps),
+            "frac_of_nominal": env.fraction_of_nominal(gbps),
+            "bound": "memory",
+        })
+    rows.append({
+        "source": "measured",
+        "cell": f"{env.spec_name}/peak/aggregate",
+        "bw_gbps": env.peak_gbps,
+        "knee_ai": env.knee_ai(),
+        "frac_of_nominal": None,
+        "bound": "memory",
+    })
+    return rows
+
+
+def analytic_report_rows(rows: List[Dict], chip: ChipSpec
+                         ) -> List[Dict[str, Any]]:
+    """Analytic cells as shared-schema rows (datasheet bandwidth)."""
+    return [{
+        "source": "analytic",
+        "cell": f"{r['arch']}/{r['shape']}/{r['mesh']}",
+        "bw_gbps": chip.hbm_bandwidth / 1e9,
+        "knee_ai": chip.ridge_intensity,
+        "frac_of_nominal": r["roofline_frac"],
+        "bound": r["dominant"],
+    } for r in rows]
+
+
+def report_markdown(rows: List[Dict[str, Any]]) -> str:
+    out = ["| source | cell | bw GB/s | knee AI | frac of nominal | bound |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        frac = ("-" if r["frac_of_nominal"] is None
+                else f"{r['frac_of_nominal']:.3f}")
+        out.append(f"| {r['source']} | {r['cell']} | {r['bw_gbps']:.2f} "
+                   f"| {r['knee_ai']:.1f} | {frac} | {r['bound']} |")
+    return "\n".join(out)
+
+
+def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--in-dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--chip", default=DEFAULT_CHIP,
+                    help="chip registry name for compute peaks")
+    ap.add_argument("--measured", action="store_true",
+                    help="measure the empirical envelope instead of "
+                         "analyzing dry-run artifacts")
+    ap.add_argument("--spec", default="hbm",
+                    help="memory spec for --measured")
+    ap.add_argument("--backend", default="sim",
+                    help="measurement backend for --measured")
+    ap.add_argument("--quick", action="store_true",
+                    help="quick sweep overlay for --measured")
     args = ap.parse_args()
+    chip = chip_by_name(args.chip)
+
+    if args.measured:
+        from repro.core.roofline_empirical import measure_envelope
+        env = measure_envelope(spec_by_name(args.spec), args.backend,
+                               quick=args.quick, chip=chip.name)
+        report = envelope_report_rows(env)
+        md = report_markdown(report)
+        print(md)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(md + "\n")
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(report, f, indent=1)
+        return
+
     recs = load_records(args.in_dir)
-    rows = [a for a in (analyze_cell(r) for r in recs) if a]
+    rows = [a for a in (analyze_cell(r, chip) for r in recs) if a]
     skips = [r for r in recs if r.get("status") == "SKIP"]
     rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
     md = to_markdown(rows, skips)
     print(md)
+    if rows:
+        print()
+        print(report_markdown(analytic_report_rows(rows, chip)))
     if args.out:
         with open(args.out, "w") as f:
             f.write(md + "\n")

@@ -14,7 +14,9 @@ from repro.analysis.cache_keys import (check_request_dedup,
                                        check_timing_signature_coverage)
 from repro.analysis.capabilities import check_capability_contracts
 from repro.analysis.kernel_shapes import check_kernel_safety
-from repro.analysis.oracle_parity import check_jax_parity, check_oracle_parity
+from repro.analysis.oracle_parity import (check_envelope_coverage,
+                                          check_jax_parity,
+                                          check_oracle_parity)
 
 FIXTURES = Path(__file__).parent / "fixtures"
 REPO = Path(__file__).resolve().parents[2]
@@ -301,6 +303,56 @@ def test_deleting_the_mix_parity_case_fails_the_pass(tmp_path):
         CORE / "timing_jax.py", CORE / "timing_model.py", target)
     assert "REPRO-O004" in ids(findings)
     assert "contended_throughput_mix" in message_of(findings, "REPRO-O004")
+
+
+def test_real_tuner_tree_is_clean():
+    findings = check_sweep_cache_keys(
+        CORE / "autotune.py", repo_root=REPO,
+        sweep_class="LayoutTuner", point_class="LayoutConfig")
+    assert findings == []
+
+
+def test_dropping_a_knob_from_the_tuner_probe_key_fails_the_pass(tmp_path):
+    """The ISSUE's autotuner probe: a tuner score-cache key that forgets
+    the placement knob would serve a same_channel measurement for a
+    cross_switch config — C-family tracing must catch the drop."""
+    src = (CORE / "autotune.py").read_text()
+    mutated = src.replace(
+        "        key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
+        "               pt.arbitration, pt.burst_beats, pt.placement, "
+        "pt.mix)",
+        "        key = (pt.params, pt.policy, pt.op, pt.num_engines,\n"
+        "               pt.arbitration, pt.burst_beats, pt.mix)")
+    assert mutated != src, "tuner probe key moved; update the probe"
+    target = tmp_path / "autotune.py"
+    target.write_text(mutated)
+    findings = check_sweep_cache_keys(
+        target, sweep_class="LayoutTuner", point_class="LayoutConfig")
+    assert "REPRO-C001" in ids(findings)
+    assert "pt.placement" in message_of(findings, "REPRO-C001")
+
+
+def test_real_envelope_coverage_is_clean():
+    findings = check_envelope_coverage(
+        CORE / "roofline_empirical.py",
+        REPO / "tests/core/test_roofline_envelope.py", repo_root=REPO)
+    assert findings == []
+
+
+def test_unreferenced_envelope_math_is_o005(tmp_path):
+    """A coverage module that stops exercising the envelope math must
+    light up O005 for every public function/method it misses."""
+    stub = tmp_path / "test_roofline_envelope.py"
+    stub.write_text(
+        "from repro.core import roofline_empirical as rf\n\n\n"
+        "def test_nothing():\n"
+        "    assert rf is not None\n")
+    findings = check_envelope_coverage(CORE / "roofline_empirical.py", stub)
+    assert ids(findings) == {"REPRO-O005"}
+    msgs = message_of(findings, "REPRO-O005")
+    for name in ("build_envelope", "measure_envelope", "config_ceiling_gbps",
+                 "attainable", "knee_ai"):
+        assert name in msgs
 
 
 def test_findings_carry_location_id_and_hint():

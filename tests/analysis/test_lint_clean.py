@@ -28,8 +28,11 @@ ANALYZED = (
     "src/repro/kernels/rst_read.py",
     "src/repro/kernels/rst_write.py",
     "src/repro/kernels/rst_contend.py",
+    "src/repro/core/autotune.py",
+    "src/repro/core/roofline_empirical.py",
     "tests/core/test_timing_parity.py",
     "tests/core/test_timing_differential.py",
+    "tests/core/test_roofline_envelope.py",
 )
 
 

@@ -15,13 +15,18 @@ from pathlib import Path
 import pytest
 
 REPO = Path(__file__).resolve().parents[2]
-SCOPE = ("src/repro/analysis", "src/repro/core")
+SCOPE = ("src/repro/analysis", "src/repro/core",
+         "src/repro/launch/roofline.py")
 LINE_LIMIT = 95  # keep in sync with [tool.ruff] line-length
 
 
 def _scope_files():
     for rel in SCOPE:
-        yield from sorted((REPO / rel).glob("*.py"))
+        path = REPO / rel
+        if path.is_file():
+            yield path
+        else:
+            yield from sorted(path.glob("*.py"))
 
 
 def test_ruff_clean_if_available():
